@@ -1,0 +1,67 @@
+"""Paper Fig. 10: LSCV_H — time to evaluate the g(H) objective (the paper
+also benchmarks only g(H): '...only implemented computing of the g(H)
+objective function, as this is the only element with influence on
+performance')."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import g_of_H
+from .common import emit, speedup_limit, time_call
+
+
+def g_of_H_sequential_time(x, H) -> float:
+    """Scalar float32 loops (the paper's Sequential implementation)."""
+    import math
+    import time
+    x = np.asarray(x, np.float32)
+    H = np.asarray(H, np.float32)
+    n, d = x.shape
+    t0 = time.perf_counter()
+    det = np.linalg.det(H)
+    inv = np.linalg.inv(H).astype(np.float32)
+    c_k = np.float32((2 * math.pi) ** (-d / 2) * det ** -0.5)
+    c_kk = np.float32((4 * math.pi) ** (-d / 2) * det ** -0.5)
+    acc = np.float32(0.0)
+    for i in range(n):
+        for j in range(i + 1, n):
+            u = x[i] - x[j]
+            s = float(u @ inv @ u)
+            acc += c_kk * math.exp(-0.25 * s) - 2 * c_k * math.exp(-0.5 * s)
+    _ = 2.0 / (n * n) * acc
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    seq_ns, seq_ts = [256, 512, 1024], []
+    d = 4
+    H = np.eye(d, dtype=np.float32) * 0.3
+    for n in seq_ns:
+        x = rng.normal(0, 1, (n, d)).astype(np.float32)
+        seq_ts.append(g_of_H_sequential_time(x, H))
+        emit(f"gH_sequential_n{n}_d{d}", seq_ts[-1])
+
+    jit_ns, jit_ts, pl_ts = [1024, 2048, 4096, 8192, 16384], [], []
+    for n in jit_ns:
+        x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+        Hj = jnp.asarray(H)
+        us = time_call(lambda x=x: g_of_H(x, Hj), repeats=2)
+        jit_ts.append(us)
+        emit(f"gH_fused_n{n}_d{d}", us)
+
+    limit = speedup_limit(seq_ns, seq_ts, jit_ns, jit_ts)
+    emit("gH_speedup_limit_vec_over_seq", 0.0, f"{limit:.0f}x")
+
+    # d-sweep at fixed n (paper's d = 1..16 curves)
+    for dd in [1, 2, 4, 8, 16]:
+        x = jnp.asarray(rng.normal(0, 1, (2048, dd)).astype(np.float32))
+        Hd = jnp.asarray(np.eye(dd, dtype=np.float32) * 0.3)
+        us = time_call(lambda x=x, Hd=Hd: g_of_H(x, Hd), repeats=2)
+        emit(f"gH_fused_n2048_d{dd}", us)
+    return {"speedup_limit": limit}
+
+
+if __name__ == "__main__":
+    run()

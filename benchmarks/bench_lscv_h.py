@@ -1,0 +1,69 @@
+"""Paper Fig. 9: LSCV_h — and the §4.5 reformulation ablation.
+
+unmodified  = recompute the quadratic form for every h on the grid
+              (O(n_h n^2 d^2), eq. 24 as written)
+modified    = paper's §4.5: S(v) precomputed once, reused for all n_h
+              (O(n^2 (d^2 + n_h)))  [store_s=True]
+fused       = beyond-paper streaming variant (same FLOPs, O(chunk*n) memory)
+
+The paper's central algorithmic claim is the modified/unmodified ratio; with
+n_h=150 and small d the predicted win is ~ n_h d^2/(d^2+n_h).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lscv import N_H_DEFAULT, h_grid_for, lscv_h
+from repro.core import gaussian as G
+from repro.core.reductions import pairwise_quadform_reduce
+from .common import emit, time_call
+
+
+def lscv_h_unmodified(x, n_h=N_H_DEFAULT, chunk=128):
+    """eq. (24) evaluated naively: the exponent S(v)/h^2 is recomputed inside
+    the pairwise pass for EVERY h (no precompute) — the paper's baseline."""
+    from repro.core.lscv import covariance
+    n, d = x.shape
+    sigma = covariance(x)
+    det = jnp.linalg.det(sigma)
+    inv = jnp.linalg.inv(sigma)
+    c_k, c_kk, r_k = G.lscv_h_consts(d, det)
+    h_grid = h_grid_for(n, d, n_h).astype(x.dtype)
+
+    def g_of_h(h):
+        fun1 = lambda s: c_kk * jnp.exp(-0.25 * s / (h * h)) - 2.0 * c_k * jnp.exp(-0.5 * s / (h * h))
+        t = pairwise_quadform_reduce(fun1, x, inv, chunk)   # full O(n^2 d^2) pass
+        return h ** (-d) * (2.0 / (n * n) * t + r_k / n)
+
+    g = jax.lax.map(g_of_h, h_grid)
+    return h_grid[jnp.argmin(g)]
+
+
+_unmod_jit = jax.jit(lscv_h_unmodified, static_argnames=("n_h", "chunk"))
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    for d in [1, 2, 4, 8, 16]:
+        n = 512
+        x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+        t_unmod = time_call(lambda x=x: _unmod_jit(x), repeats=2)
+        t_mod = time_call(lambda x=x: lscv_h(x, store_s=True).h, repeats=2)
+        t_fused = time_call(lambda x=x: lscv_h(x).h, repeats=2)
+        emit(f"lscv_h_unmodified_n{n}_d{d}", t_unmod)
+        emit(f"lscv_h_modified_n{n}_d{d}", t_mod, f"{t_unmod / t_mod:.1f}x vs unmodified")
+        emit(f"lscv_h_fused_n{n}_d{d}", t_fused, f"{t_unmod / t_fused:.1f}x vs unmodified")
+        out[d] = {"unmod": t_unmod, "mod": t_mod, "fused": t_fused}
+
+    for n in [64, 128, 256, 512, 1024]:
+        x = jnp.asarray(rng.normal(0, 1, (n, 2)).astype(np.float32))
+        us = time_call(lambda x=x: lscv_h(x).h, repeats=2)
+        emit(f"lscv_h_fused_n{n}_d2", us)
+    return out
+
+
+if __name__ == "__main__":
+    run()

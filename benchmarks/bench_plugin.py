@@ -1,0 +1,54 @@
+"""Paper Fig. 8: PLUGIN speedups over the Sequential implementation.
+
+Sequential = the paper's pure-scalar implementation (plugin_bandwidth_sequential),
+timed at small n and extrapolated with the paper's own quadratic-fit method
+(eqs. 61-63).  Vectorised = chunked jnp (the XLA/VPU analogue of the paper's
+SSE code).  Tiled kernel = the Pallas triangular-tile kernel in interpret
+mode (its *algorithm* is the GPU contribution; interpret timing is NOT TPU
+performance — roofline projections live in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import plugin_bandwidth, plugin_bandwidth_sequential
+from .common import emit, quad_fit, speedup_limit, time_call
+
+SEQ_NS = [256, 512, 1024, 2048]          # python-loop scale
+VEC_NS = [1024, 2048, 4096, 8192, 16384, 32768]
+
+
+def run() -> dict:
+    rng = np.random.default_rng(0)
+    seq_times = []
+    for n in SEQ_NS:
+        x = rng.normal(0, 1, n).astype(np.float32)
+        import time
+        t0 = time.perf_counter()
+        plugin_bandwidth_sequential(x)
+        seq_times.append((time.perf_counter() - t0) * 1e6)
+        emit(f"plugin_sequential_n{n}", seq_times[-1])
+
+    vec_times = []
+    for n in VEC_NS:
+        x = jnp.asarray(rng.normal(0, 1, n).astype(np.float32))
+        us = time_call(lambda x=x: plugin_bandwidth(x).h)
+        vec_times.append(us)
+        emit(f"plugin_vectorised_n{n}", us)
+
+    # paper's asymptotic-speedup estimate (eqs. 61-63)
+    limit = speedup_limit(SEQ_NS, seq_times, VEC_NS, vec_times)
+    emit("plugin_speedup_limit_vec_over_seq", 0.0, f"{limit:.0f}x")
+
+    # measured speedup at the overlap point n=2048 (seq measured directly)
+    x = jnp.asarray(rng.normal(0, 1, 2048).astype(np.float32))
+    us_vec = time_call(lambda: plugin_bandwidth(x).h)
+    sp2048 = seq_times[SEQ_NS.index(2048)] / us_vec
+    emit("plugin_speedup_at_n2048", us_vec, f"{sp2048:.0f}x")
+    return {"speedup_limit": limit, "speedup_n2048": sp2048,
+            "seq_times": seq_times, "vec_times": vec_times}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Roofline table emitter: reads the dry-run JSONL artifacts (written by
+`python -m repro.launch.dryrun --all --out artifacts/dryrun_*.jsonl`) and
+prints the §Roofline table rows.  Falls back to a note when artifacts are
+absent (the full 512-device sweep is run once, not per bench invocation)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def load_records():
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, "dryrun_*.jsonl"))):
+        with open(path) as f:
+            for line in f:
+                recs.append(json.loads(line))
+    return recs
+
+
+def run() -> dict:
+    recs = [r for r in load_records() if r.get("ok")]
+    if not recs:
+        emit("roofline_no_artifacts", 0.0,
+             "run: python -m repro.launch.dryrun --all --out artifacts/dryrun_1pod.jsonl")
+        return {}
+    for r in recs:
+        t = r["roofline"]
+        mesh = "x".join(str(v) for v in r["mesh"].values())
+        name = f"roofline_{r['arch']}_{r['shape']}_{mesh}"
+        derived = (f"compute={t['compute_s']:.2e}s memory={t['memory_s']:.2e}s "
+                   f"collective={t['collective_s']:.2e}s dom={t['dominant']} "
+                   f"useful_ratio={r['useful_flops_ratio']:.2f}")
+        emit(name, r["compile_s"] * 1e6, derived)
+    return {"cells": len(recs)}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Serving-throughput projection from the decode-cell rooflines.
+
+For each decode/long-context cell: steady-state tokens/s/pod = global_batch /
+max(compute, memory, collective term) — the roofline-implied decode rate on
+the 256-chip pod (perfect overlap assumption; the dominant term binds).
+Also reports per-token HBM cost (the memory term) and the SSM-vs-attention
+context-cost contrast the long_500k cells exist to show."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+BATCH = {"decode_32k": 128, "long_500k": 1}
+
+
+def run() -> dict:
+    recs = []
+    path = os.path.join(ART, "dryrun_1pod.jsonl")
+    if not os.path.exists(path):
+        emit("serving_no_artifacts", 0.0, "run the dry-run first")
+        return {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("ok") and r.get("shape") in BATCH:
+                recs.append(r)
+    out = {}
+    for r in recs:
+        t = r["roofline"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        tps = BATCH[r["shape"]] / bound
+        name = f"serving_{r['arch']}_{r['shape']}"
+        emit(name, bound * 1e6,
+             f"projected {tps:,.0f} tok/s/pod (bound: {t['dominant']})")
+        out[name] = tps
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: timing, and the paper's asymptotic-speedup
+estimator (eqs. 61-63): fit runtime(n) with a 2nd-order polynomial by least
+squares, then speedup_limit = a_slow / a_fast."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall time in microseconds; blocks on jax async dispatch."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def quad_fit(ns, times_us):
+    """Least-squares fit t(n) = a n^2 + b n + c (paper Speedup(n) framework)."""
+    ns = np.asarray(ns, np.float64)
+    t = np.asarray(times_us, np.float64)
+    A = np.stack([ns ** 2, ns, np.ones_like(ns)], axis=1)
+    coef, *_ = np.linalg.lstsq(A, t, rcond=None)
+    return coef  # (a, b, c)
+
+
+def speedup_limit(ns_slow, t_slow, ns_fast, t_fast) -> float:
+    """eq. (63): lim_{n->inf} Speedup(n) = a_slow / a_fast."""
+    a_s = quad_fit(ns_slow, t_slow)[0]
+    a_f = quad_fit(ns_fast, t_fast)[0]
+    return float(a_s / max(a_f, 1e-30))
+
+
+def emit(name: str, us: float, derived: str = "") -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,33 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV lines.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+SUITES = ("paper_validation", "plugin", "lscv_h", "lscv_H", "table3",
+          "kernels", "roofline", "serving")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help=f"one of {SUITES}")
+    args = ap.parse_args()
+    suites = [args.only] if args.only else list(SUITES)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for s in suites:
+        mod = __import__(f"benchmarks.bench_{s}", fromlist=["run"])
+        print(f"# --- {s} ({time.time() - t0:.0f}s elapsed) ---", flush=True)
+        mod.run()
+    print(f"# total {time.time() - t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

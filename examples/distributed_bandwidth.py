@@ -1,0 +1,54 @@
+"""Distributed bandwidth selection on an 8-device placeholder mesh — the
+paper's O(n^2) selectors block-row-sharded over chips (DESIGN.md §2, last
+table row).  On a real pod this is the same code with a real mesh.
+
+    PYTHONPATH=src python examples/distributed_bandwidth.py
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys  # noqa: E402
+
+sys.path.insert(0, "src")
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import gaussian as G  # noqa: E402
+from repro.core import lscv_h  # noqa: E402
+from repro.core.distributed import (distributed_lscv_h,  # noqa: E402
+                                    sharded_pairwise_reduce)
+from repro.core.reductions import pairwise_reduce  # noqa: E402
+
+
+def main():
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    print(f"mesh: {dict(mesh.shape)} over {mesh.devices.size} devices")
+    rng = np.random.default_rng(0)
+
+    n = 20_000
+    x = jnp.asarray(rng.normal(0, 1, n).astype(np.float32))
+    fun = lambda d: G.k4(d / 0.2)
+    t0 = time.time()
+    dist = float(sharded_pairwise_reduce(fun, x, mesh))
+    t_dist = time.time() - t0
+    t0 = time.time()
+    single = float(pairwise_reduce(fun, x))
+    t_single = time.time() - t0
+    print(f"pairwise K4 sum  n={n}: sharded={dist:.4f} ({t_dist:.2f}s) "
+          f"single={single:.4f} ({t_single:.2f}s) rel_err="
+          f"{abs(dist - single) / abs(single):.1e}")
+
+    x2 = jnp.asarray(rng.normal(0, 1, (3000, 4)).astype(np.float32))
+    h, grid, g = distributed_lscv_h(x2, mesh, n_h=50)
+    ref = lscv_h(x2, n_h=50)
+    print(f"distributed LSCV_h n=3000 d=4: h={float(h):.4f} "
+          f"(single-path h={float(ref.h):.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .checkpoint import CheckpointManager
+from .elastic import ElasticController, StragglerMonitor, plan_mesh

@@ -1,0 +1,2 @@
+from .base import (ARCH_IDS, SHAPES, SHAPES_BY_NAME, ModelConfig, ShapeConfig,
+                   all_cells, cell_runnable, get_config)

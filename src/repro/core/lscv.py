@@ -1,0 +1,270 @@
+"""LSCV bandwidth selectors (paper §4.4) with the §4.5 reformulation.
+
+LSCV_h  — scalar bandwidth h, any d: brute-force minimisation of g(h) (eq. 24)
+          on a 150-point grid over Z(h0) = [h0/4, 4*h0] (eq. 29), using either
+          (a) the paper-faithful §4.5 two-phase scheme: precompute all
+              S(v) = v^T Sigma^-1 v once, reuse for every h   [store_s=True]
+          (b) a beyond-paper *streaming fused* scheme that never materialises
+              S: each (chunk x n) slab of quadratic forms is folded into the
+              per-h partial sums for the whole grid in one pass.  Same FLOPs as
+              (a), O(chunk*n) memory instead of O(n^2)        [store_s=False]
+LSCV_H  — full SPD bandwidth matrix: Nelder-Mead over a log-Cholesky
+          parametrisation of H (guarantees SPD — the paper instead rejects
+          non-SPD candidates inside NM; see DESIGN.md §2), objective g(H)
+          (eq. 32) evaluated with the fused quadratic-form+T_H+reduce pass the
+          paper describes for its GPU kernel in §6.3.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import gaussian as G
+from .nelder_mead import minimize as nm_minimize
+from .reductions import (pairwise_quadform_chunks, pairwise_quadform_reduce,
+                         pairwise_sv_matrix)
+
+N_H_DEFAULT = 150  # paper §7.1: objective evaluated at a fixed 150 grid points
+
+
+# ---------------------------------------------------------------------------
+# Covariance (eqs. 20-23), in the two-sum form the paper uses for reductions.
+# ---------------------------------------------------------------------------
+
+def covariance(x: jax.Array) -> jax.Array:
+    """x: (n, d) row-per-sample (the paper stores samples in columns; we use
+    rows, the JAX-native layout).  Returns (d, d) Sigma per eqs. (22)/(23)."""
+    n = x.shape[0]
+    s1 = jnp.sum(x, axis=0)                       # (d,)
+    s2 = x.T @ x                                  # (d, d) sum of outer products
+    return s2 / (n - 1) - jnp.outer(s1, s1) / (n * (n - 1))
+
+
+def h0_start(n: int, d: int) -> float:
+    """eq. (28).  Constants exactly as printed in the paper; for d=1 this
+    reduces to Silverman's (4/3)^(1/5) n^(-1/5)."""
+    rk_over_mu2 = 1.0 / (2.0 ** d * math.pi ** (d / 2.0) * d ** 2)
+    r_f2 = d * (d + 2.0) / (2.0 ** (d + 2) * math.pi ** (d / 2.0))
+    return float((rk_over_mu2 / (r_f2 * n)) ** (1.0 / (d + 4)))
+
+
+def h_grid_for(n: int, d: int, n_h: int = N_H_DEFAULT) -> jax.Array:
+    """Z(h0) = [h0/4, 4 h0] (eq. 29), n_h uniform points (paper §7.1)."""
+    h0 = h0_start(n, d)
+    return jnp.linspace(h0 / 4.0, 4.0 * h0, n_h, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# LSCV_h
+# ---------------------------------------------------------------------------
+
+class LSCVhResult(NamedTuple):
+    h: jax.Array
+    h_grid: jax.Array
+    g_values: jax.Array
+    sigma: jax.Array       # covariance matrix used by the Mahalanobis kernel
+    det_sigma: jax.Array
+    h0: jax.Array
+
+
+def _t_sums_from_S(s_matrix: jax.Array, mask: jax.Array, h_grid: jax.Array,
+                   c_k: jax.Array, c_kk: jax.Array, h_chunk: int = 8) -> jax.Array:
+    """Paper-faithful phase 2 (§6.2): for each h on the grid, reduce
+    T~(v) = (K~*K~)(v) - 2 K~(v) over the precomputed S values (eqs. 40-42)."""
+    def per_h(h):
+        e2 = jnp.exp(-0.5 * s_matrix / (h * h))
+        e4 = jnp.exp(-0.25 * s_matrix / (h * h))
+        return jnp.sum(jnp.where(mask, c_kk * e4 - 2.0 * c_k * e2, 0.0))
+
+    return jax.lax.map(per_h, h_grid, batch_size=h_chunk)
+
+
+def _t_sums_streaming(x: jax.Array, sigma_inv: jax.Array, h_grid: jax.Array,
+                      c_k: jax.Array, c_kk: jax.Array, chunk: int = 128,
+                      h_chunk: int = 8) -> jax.Array:
+    """Beyond-paper fused grid: one pass over quadratic-form slabs accumulates
+    sum_{i<j} T~ for every h simultaneously.  Memory O(chunk * n * h_chunk)."""
+    scan_slabs = pairwise_quadform_chunks(x, sigma_inv, chunk)
+    inv2 = 0.5 / (h_grid * h_grid)   # (n_h,)
+    inv4 = 0.25 / (h_grid * h_grid)
+
+    def consume(acc, s, mask):
+        sm = jnp.where(mask, s, 0.0)
+        w = mask.astype(s.dtype)
+
+        def per_h_chunk(args):
+            i2, i4 = args   # (hc,)
+            e2 = jnp.exp(-sm[None, :, :] * i2[:, None, None])
+            e4 = jnp.exp(-sm[None, :, :] * i4[:, None, None])
+            return jnp.sum((c_kk * e4 - 2.0 * c_k * e2) * w[None, :, :], axis=(1, 2))
+
+        n_h = h_grid.shape[0]
+        pad = (-n_h) % h_chunk
+        i2 = jnp.pad(inv2, (0, pad)).reshape(-1, h_chunk)
+        i4 = jnp.pad(inv4, (0, pad)).reshape(-1, h_chunk)
+        contrib = jax.lax.map(per_h_chunk, (i2, i4)).reshape(-1)[:n_h]
+        return acc + contrib
+
+    return scan_slabs(consume, jnp.zeros((h_grid.shape[0],), x.dtype))
+
+
+@partial(jax.jit, static_argnames=("n_h", "store_s", "chunk", "backend"))
+def lscv_h(x: jax.Array, n_h: int = N_H_DEFAULT, store_s: bool = False,
+           chunk: int = 128, backend: str = "jnp") -> LSCVhResult:
+    """Full LSCV_h algorithm (paper §6.2 steps 1-7). x: (n, d)."""
+    if x.ndim == 1:
+        x = x[:, None]
+    n, d = x.shape
+
+    # Steps 1-3: covariance, det, inverse (sequential scalar work in the paper).
+    sigma = covariance(x)
+    det_sigma = jnp.linalg.det(sigma)
+    sigma_inv = jnp.linalg.inv(sigma)
+
+    # Steps 4-5: h0 and search range (eqs. 28-29).
+    h0 = jnp.asarray(h0_start(n, d), x.dtype)
+    h_grid = h_grid_for(n, d, n_h).astype(x.dtype)
+
+    c_k, c_kk, r_k = G.lscv_h_consts(d, det_sigma)
+
+    # Steps 6-7: S(v) precompute + grid search (paper), or fused streaming.
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        t_sums = kops.lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk)
+    elif store_s:
+        s_matrix = pairwise_sv_matrix(x, sigma_inv, chunk)
+        rows = jnp.arange(n)
+        mask = rows[:, None] < rows[None, :]
+        t_sums = _t_sums_from_S(s_matrix, mask, h_grid, c_k, c_kk)
+    else:
+        t_sums = _t_sums_streaming(x, sigma_inv, h_grid, c_k, c_kk, chunk)
+
+    g_values = h_grid ** (-d) * (2.0 / (n * n) * t_sums + r_k / n)   # eq. (43)
+    best = jnp.argmin(g_values)
+    return LSCVhResult(h=h_grid[best], h_grid=h_grid, g_values=g_values,
+                       sigma=sigma, det_sigma=det_sigma, h0=h0)
+
+
+def g_of_h_sequential(x, h) -> float:
+    """Unmodified eq. (24) evaluated naively in float64 numpy — the oracle for
+    validating the §4.5 reformulation (recomputes the exponent for every pair
+    at every h, i.e. the O(n_h n^2 d^2) path)."""
+    import numpy as np
+
+    x = np.asarray(x, dtype=np.float64)
+    if x.ndim == 1:
+        x = x[:, None]
+    n, d = x.shape
+    sigma = np.cov(x, rowvar=False, ddof=1).reshape(d, d)
+    det = np.linalg.det(sigma)
+    inv = np.linalg.inv(sigma)
+    c_k = (2 * math.pi) ** (-d / 2) * det ** -0.5
+    c_kk = (4 * math.pi) ** (-d / 2) * det ** -0.5
+    acc = 0.0
+    for i in range(n):
+        for j in range(i + 1, n):
+            u = (x[i] - x[j]) / h
+            s = float(u @ inv @ u)
+            acc += c_kk * math.exp(-0.25 * s) - 2.0 * c_k * math.exp(-0.5 * s)
+    return float(h ** (-d) * (2.0 / (n * n) * acc + c_kk / n))
+
+
+# ---------------------------------------------------------------------------
+# LSCV_H
+# ---------------------------------------------------------------------------
+
+class LSCVHResult(NamedTuple):
+    H: jax.Array
+    g: jax.Array
+    H_start: jax.Array
+    it: jax.Array
+    nfev: jax.Array
+
+
+def g_of_H(x: jax.Array, H: jax.Array, chunk: int = 128, backend: str = "jnp") -> jax.Array:
+    """Objective g(H) (eq. 32), evaluated with the fused pass of §6.3."""
+    if x.ndim == 1:
+        x = x[:, None]
+    n, d = x.shape
+    det_H = jnp.linalg.det(H)
+    H_inv = jnp.linalg.inv(H)
+    c_k, c_kk, r_k = G.lscv_H_consts(d, det_H)
+
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        t_sum = kops.gh_fused_sum(x, H_inv, c_k, c_kk)
+    else:
+        fun1 = lambda s: c_kk * jnp.exp(-0.25 * s) - 2.0 * c_k * jnp.exp(-0.5 * s)
+        t_sum = pairwise_quadform_reduce(fun1, x, H_inv, chunk)
+    return 2.0 / (n * n) * t_sum + r_k / n
+
+
+def matrix_sqrt(a: jax.Array) -> jax.Array:
+    """SPD matrix square root via eigendecomposition (paper uses ALGLIB)."""
+    w, v = jnp.linalg.eigh(a)
+    return (v * jnp.sqrt(jnp.clip(w, 0.0))) @ v.T
+
+
+def h_start(x: jax.Array) -> jax.Array:
+    """eq. (37): H_start = (4/(d+2))^(1/(d+4)) n^(-1/(d+4)) Sigma^(1/2)."""
+    n, d = x.shape
+    sigma = covariance(x)
+    return (4.0 / (d + 2.0)) ** (1.0 / (d + 4)) * n ** (-1.0 / (d + 4)) * matrix_sqrt(sigma)
+
+
+def _vech_indices(d: int):
+    return jnp.tril_indices(d)
+
+
+def _theta_to_H(theta: jax.Array, d: int) -> jax.Array:
+    """log-Cholesky: theta packs L's lower triangle, diagonal stored as log."""
+    il, jl = _vech_indices(d)
+    L = jnp.zeros((d, d), theta.dtype).at[il, jl].set(theta)
+    L = L.at[jnp.diag_indices(d)].set(jnp.exp(jnp.diagonal(L)))
+    return L @ L.T
+
+
+def _H_to_theta(H: jax.Array) -> jax.Array:
+    L = jnp.linalg.cholesky(H)
+    L = L.at[jnp.diag_indices(H.shape[0])].set(jnp.log(jnp.diagonal(L)))
+    il, jl = _vech_indices(H.shape[0])
+    return L[il, jl]
+
+
+@partial(jax.jit, static_argnames=("max_iter", "chunk", "backend", "multi_start"))
+def lscv_H(x: jax.Array, max_iter: int = 150, chunk: int = 128,
+           backend: str = "jnp", multi_start: int = 1) -> LSCVHResult:
+    """Full LSCV_H: Nelder-Mead over log-Cholesky(vech) of H (d(d+1)/2 dof).
+
+    multi_start > 1 runs that many independent Nelder-Mead instances from
+    perturbed H_start points *in parallel* (vmap) and keeps the best — the
+    exact parallelisation the paper proposes for this inherently sequential
+    optimiser in §6.3 ("start multiple parallel instances ... each from a
+    different starting point"); on TPU the instances batch over the MXU.
+    """
+    if x.ndim == 1:
+        x = x[:, None]
+    n, d = x.shape
+    H0 = h_start(x)
+    theta0 = _H_to_theta(H0)
+
+    def objective(theta):
+        return g_of_H(x, _theta_to_H(theta, d), chunk=chunk, backend=backend)
+
+    if multi_start == 1:
+        res = nm_minimize(objective, theta0, max_iter=max_iter)
+        H = _theta_to_H(res.x, d)
+        return LSCVHResult(H=H, g=res.fun, H_start=H0, it=res.it, nfev=res.nfev)
+
+    keys = jax.random.split(jax.random.key(0), multi_start - 1)
+    jitter = jax.vmap(lambda k: 0.25 * jax.random.normal(k, theta0.shape))(keys)
+    starts = jnp.concatenate([theta0[None], theta0[None] + jitter], axis=0)
+    runs = jax.vmap(lambda t: nm_minimize(objective, t, max_iter=max_iter))(starts)
+    best = jnp.argmin(runs.fun)
+    H = _theta_to_H(runs.x[best], d)
+    return LSCVHResult(H=H, g=runs.fun[best], H_start=H0,
+                       it=runs.it[best], nfev=jnp.sum(runs.nfev))

@@ -1,0 +1,88 @@
+"""JIT-able Nelder-Mead simplex minimiser (paper §4.4 LSCV_H, ref. [27]).
+
+The paper uses Nelder-Mead over vech(H) with rejection of non-positive-definite
+candidates.  We keep the same simplex mechanics but expose them as a pure JAX
+`lax.while_loop`, so the optimiser itself can be jitted/vmapped (e.g. the
+multi-start parallelisation the paper suggests in §6.3: "start multiple
+parallel instances ... each from a different starting point").
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NMState(NamedTuple):
+    simplex: jax.Array   # (k+1, k)
+    values: jax.Array    # (k+1,)
+    it: jax.Array
+    nfev: jax.Array
+
+
+class NMResult(NamedTuple):
+    x: jax.Array
+    fun: jax.Array
+    it: jax.Array
+    nfev: jax.Array
+
+
+def _sorted(state: NMState) -> NMState:
+    order = jnp.argsort(state.values)
+    return state._replace(simplex=state.simplex[order], values=state.values[order])
+
+
+@partial(jax.jit, static_argnames=("fun", "max_iter"))
+def minimize(fun: Callable, x0: jax.Array, *, init_scale: float = 0.1,
+             max_iter: int = 200, xtol: float = 1e-6, ftol: float = 1e-9) -> NMResult:
+    """Minimise `fun: R^k -> R` starting at x0.  Standard NM coefficients
+    (alpha=1, gamma=2, rho=0.5, sigma=0.5)."""
+    k = x0.shape[0]
+    # Initial simplex: x0 plus per-axis perturbations (scaled to |x0| where nonzero).
+    steps = jnp.where(jnp.abs(x0) > 1e-8, init_scale * jnp.abs(x0), init_scale)
+    simplex = jnp.concatenate([x0[None, :], x0[None, :] + jnp.diag(steps)], axis=0)
+    values = jax.vmap(fun)(simplex)
+    state = _sorted(NMState(simplex, values, jnp.zeros((), jnp.int32), jnp.asarray(k + 1, jnp.int32)))
+
+    def not_done(s: NMState):
+        spread_f = s.values[-1] - s.values[0]
+        spread_x = jnp.max(jnp.abs(s.simplex - s.simplex[0]))
+        return (s.it < max_iter) & ((spread_f > ftol) | (spread_x > xtol))
+
+    def step(s: NMState) -> NMState:
+        best, worst = s.values[0], s.values[-1]
+        second_worst = s.values[-2]
+        centroid = jnp.mean(s.simplex[:-1], axis=0)
+
+        xr = centroid + (centroid - s.simplex[-1])           # reflection
+        fr = fun(xr)
+        xe = centroid + 2.0 * (centroid - s.simplex[-1])     # expansion
+        fe = fun(xe)
+        xc = centroid + 0.5 * (s.simplex[-1] - centroid)     # contraction
+        fc = fun(xc)
+
+        # Decide replacement for the worst vertex (no-shrink path).
+        use_exp = (fr < best) & (fe < fr)
+        use_ref = (fr < second_worst) & ~use_exp
+        use_con = (fc < worst) & ~use_exp & ~use_ref
+        new_pt = jnp.where(use_exp, xe, jnp.where(use_ref, xr, xc))
+        new_val = jnp.where(use_exp, fe, jnp.where(use_ref, fr, fc))
+        accepted = use_exp | use_ref | use_con
+
+        # Shrink path (when even contraction fails).
+        shrunk = s.simplex[0][None, :] + 0.5 * (s.simplex - s.simplex[0][None, :])
+        shrunk_vals = jax.vmap(fun)(shrunk)
+
+        simplex = jnp.where(accepted,
+                            s.simplex.at[-1].set(new_pt),
+                            shrunk)
+        values = jnp.where(accepted,
+                           s.values.at[-1].set(new_val),
+                           shrunk_vals)
+        nfev = s.nfev + jnp.where(accepted, 3, 3 + k + 1)
+        return _sorted(NMState(simplex, values, s.it + 1, nfev))
+
+    state = jax.lax.while_loop(not_done, step, state)
+    return NMResult(x=state.simplex[0], fun=state.values[0], it=state.it, nfev=state.nfev)

@@ -1,0 +1,2 @@
+from .aqp_store import Reservoir, TelemetryStore
+from .pipeline import TokenPipeline

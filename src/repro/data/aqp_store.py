@@ -1,0 +1,89 @@
+"""AQP telemetry store — the paper's technique as a first-class framework
+feature (DESIGN.md §4).
+
+Training/serving telemetry columns (per-sequence loss, length, token stats)
+stream in per batch; the store keeps a bounded reservoir sample per column and
+fits KDE synopses with the paper's selectors on demand.  Queries (COUNT/SUM/
+AVG over a range, quantile-ish fractions) are answered from the synopsis in
+O(sample) instead of O(history) — and the synopsis is *mergeable* across hosts
+(reservoir union), which is the property that makes this usable on a
+1000-node fleet where no host sees the global stream.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.aqp import KDESynopsis
+
+
+class Reservoir:
+    """Algorithm-R reservoir sample with deterministic RNG."""
+
+    def __init__(self, capacity: int = 4096, seed: int = 0):
+        self.capacity = capacity
+        self.rng = np.random.default_rng(seed)
+        self.buf = np.empty((capacity,), np.float32)
+        self.n_seen = 0
+
+    def add(self, values: np.ndarray) -> None:
+        for v in np.asarray(values, np.float32).ravel():
+            if self.n_seen < self.capacity:
+                self.buf[self.n_seen] = v
+            else:
+                j = self.rng.integers(0, self.n_seen + 1)
+                if j < self.capacity:
+                    self.buf[j] = v
+            self.n_seen += 1
+
+    def sample(self) -> np.ndarray:
+        return self.buf[: min(self.n_seen, self.capacity)].copy()
+
+    def merge(self, other: "Reservoir") -> "Reservoir":
+        out = Reservoir(self.capacity, seed=int(self.rng.integers(1 << 31)))
+        both = np.concatenate([self.sample(), other.sample()])
+        self.rng.shuffle(both)
+        out.add(both)
+        out.n_seen = self.n_seen + other.n_seen
+        return out
+
+
+class TelemetryStore:
+    def __init__(self, capacity: int = 4096, seed: int = 0):
+        self.columns: Dict[str, Reservoir] = {}
+        self.capacity = capacity
+        self.seed = seed
+
+    def add_batch(self, stats: Dict[str, np.ndarray]) -> None:
+        for name, values in stats.items():
+            if name not in self.columns:
+                self.columns[name] = Reservoir(self.capacity, seed=self.seed + hash(name) % 1000)
+            self.columns[name].add(values)
+
+    def synopsis(self, column: str, selector: str = "plugin") -> KDESynopsis:
+        res = self.columns[column]
+        syn = KDESynopsis.fit(res.sample(), selector=selector,
+                              max_sample=self.capacity)
+        syn.n_source = res.n_seen
+        return syn
+
+    # -- queries ------------------------------------------------------------
+    def count(self, column: str, a: float, b: float, selector: str = "plugin") -> float:
+        return float(self.synopsis(column, selector).count(a, b))
+
+    def avg(self, column: str, a: float, b: float, selector: str = "plugin") -> float:
+        return float(self.synopsis(column, selector).avg(a, b))
+
+    def fraction(self, column: str, a: float, b: float, selector: str = "plugin") -> float:
+        res = self.columns[column]
+        return self.count(column, a, b, selector) / max(res.n_seen, 1)
+
+    def merge(self, other: "TelemetryStore") -> "TelemetryStore":
+        out = TelemetryStore(self.capacity, self.seed)
+        for name in set(self.columns) | set(other.columns):
+            if name in self.columns and name in other.columns:
+                out.columns[name] = self.columns[name].merge(other.columns[name])
+            else:
+                out.columns[name] = (self.columns.get(name) or other.columns[name])
+        return out

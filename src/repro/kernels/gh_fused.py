@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused LSCV_H objective inner sum (paper §6.3).
+
+For each triangle tile, computes the quadratic forms s = (x_i-x_j)^T H^-1
+(x_i-x_j) *and immediately* applies T_H and reduces — because H^-1 changes at
+every Nelder-Mead step, S values cannot be precomputed (paper §4.5 last
+paragraph), so the paper fuses exponent computation with the T reduction in a
+single gpu-kernel.  Same fusion here: one VMEM round-trip per tile, per-tile
+scalar partial out.
+
+    T_H(s) = c_kk * exp(-s/4) - 2 * c_k * exp(-s/2)        (eqs. 33-35)
+
+Triangle-only 1-D grid via Appendix-A index math, MXU quadratic-form
+expansion as in sv_precompute.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .triangle import bx_to_ql, n_tri_tiles
+
+TILE = 256
+
+
+def _kernel(e_ref, f_ref, m_ref, c_ref, out_ref, *, n: int, k: int):
+    bx = pl.program_id(0)
+    q, l = bx_to_ql(bx)
+    e = e_ref[...]                  # (k, d)
+    f = f_ref[...]
+    m = m_ref[...]                  # (d, d) = H^-1
+    c_k = c_ref[0]
+    c_kk = c_ref[1]
+
+    me = e @ m
+    qe = jnp.sum(me * e, axis=1)
+    mf = f @ m
+    qf = jnp.sum(mf * f, axis=1)
+    cross = jax.lax.dot_general(me, f, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    s = qe[:, None] + qf[None, :] - 2.0 * cross.astype(e.dtype)
+
+    t = c_kk * jnp.exp(-0.25 * s) - 2.0 * c_k * jnp.exp(-0.5 * s)
+    rows = q * k + jax.lax.broadcasted_iota(jnp.int32, (k, k), 0)
+    cols = l * k + jax.lax.broadcasted_iota(jnp.int32, (k, k), 1)
+    mask = (rows < cols) & (cols < n) & (rows < n)
+    out_ref[0] = jnp.sum(jnp.where(mask, t, 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def gh_fused_sum(x: jax.Array, h_inv: jax.Array, c_k, c_kk,
+                 tile: int = TILE, interpret: bool = True) -> jax.Array:
+    """sum_{i<j} T_H(x_i - x_j).  x: (n, d), h_inv: (d, d)."""
+    n, d = x.shape
+    k = min(tile, max(8, 1 << (n - 1).bit_length())) if n < tile else tile
+    pad = (-n) % k
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    n_tiles = xp.shape[0] // k
+    grid = (n_tri_tiles(n_tiles),)
+    consts = jnp.stack([jnp.asarray(c_k, x.dtype), jnp.asarray(c_kk, x.dtype)])
+
+    partials = pl.pallas_call(
+        functools.partial(_kernel, n=n, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k, d), lambda bx: (bx_to_ql(bx)[0], 0)),
+            pl.BlockSpec((k, d), lambda bx: (bx_to_ql(bx)[1], 0)),
+            pl.BlockSpec((d, d), lambda bx: (0, 0)),
+            pl.BlockSpec((2,), lambda bx: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda bx: (bx,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), x.dtype),
+        interpret=interpret,
+    )(xp, xp, h_inv.astype(x.dtype), consts)
+    return jnp.sum(partials)

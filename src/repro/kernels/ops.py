@@ -1,0 +1,38 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On this CPU container, kernels run in interpret mode (the kernel body executes
+in Python on CPU — correctness path); on a TPU runtime `interpret=False`
+compiles through Mosaic.  `INTERPRET` flips automatically on backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from . import gh_fused as _gh
+from . import kde_eval as _kde
+from . import lscv_grid as _lg
+from . import pairwise_reduce as _pr
+from . import sv_precompute as _sv
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def pairwise_scaled_ksum(x, g, kind="k4", tile=_pr.TILE):
+    return _pr.pairwise_scaled_ksum(x, g, kind=kind, tile=tile, interpret=INTERPRET)
+
+
+def sv_matrix(x, m, tile=_sv.TILE, algorithm="mxu"):
+    return _sv.sv_matrix(x, m, tile=tile, algorithm=algorithm, interpret=INTERPRET)
+
+
+def gh_fused_sum(x, h_inv, c_k, c_kk, tile=_gh.TILE):
+    return _gh.gh_fused_sum(x, h_inv, c_k, c_kk, tile=tile, interpret=INTERPRET)
+
+
+def lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=_lg.TILE, h_tile=_lg.H_TILE):
+    return _lg.lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=tile,
+                              h_tile=h_tile, interpret=INTERPRET)
+
+
+def kde_eval(points, x, h, tile=_kde.TILE):
+    return _kde.kde_eval(points, x, h, tile=tile, interpret=INTERPRET)

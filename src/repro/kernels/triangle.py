@@ -1,0 +1,45 @@
+"""Triangular tile index math — the paper's Appendix A (eqs. 49/50), reused on
+TPU to launch a *1-D Pallas grid over only the upper-triangular tiles* instead
+of a rectangular grid with half the tiles masked away.
+
+Paper mapping: bx -> (l, q), column-major enumeration of the upper triangle,
+  l = ceil((sqrt(8 bx + 9) - 3) / 2)      (eq. 49, tile column)
+  q = bx - l (l + 1) / 2                  (eq. 50, tile row)
+
+The fp32 sqrt can be off by one ulp near perfect-square discriminants, so we
+branchlessly correct l by checking the closed-form block counts (eq. 66):
+column l is correct iff  l(l+1)/2 <= bx < (l+1)(l+2)/2.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def n_tri_tiles(n_tiles: int) -> int:
+    """Number of tiles in the upper triangle (incl. diagonal) of an
+    n_tiles x n_tiles tile matrix (eq. 66 with l = n_tiles - 1)."""
+    return n_tiles * (n_tiles + 1) // 2
+
+
+def bx_to_ql(bx):
+    """eqs. (49)/(50) with branchless +-1 correction. Returns (q, l) = (row, col).
+
+    Works on traced int32 scalars (usable inside BlockSpec index_maps) and on
+    numpy arrays.
+    """
+    bxf = bx.astype(jnp.float32) if hasattr(bx, "astype") else jnp.float32(bx)
+    l0 = jnp.ceil((jnp.sqrt(8.0 * bxf + 9.0) - 3.0) / 2.0).astype(jnp.int32)
+
+    def ok(l):
+        lo = l * (l + 1) // 2
+        hi = (l + 1) * (l + 2) // 2
+        return (lo <= bx) & (bx < hi)
+
+    l = jnp.where(ok(l0 - 1), l0 - 1, jnp.where(ok(l0), l0, l0 + 1))
+    q = bx - l * (l + 1) // 2
+    return q, l
+
+
+def ql_to_bx(q, l):
+    """Inverse mapping (for tests): bx = l(l+1)/2 + q, valid for q <= l."""
+    return l * (l + 1) // 2 + q

@@ -1,0 +1,2 @@
+from .mesh import (dp_axes, make_host_mesh, make_mesh_from_spec,
+                   make_production_mesh, tp_size)

@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# Tests may shrink the placeholder device count (before jax initialises):
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes and extract memory / cost / roofline artifacts.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # single pod 16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod  # 2x16x16
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+
+Outputs one JSON record per cell (appended to --out JSONL) with:
+  memory_analysis (per-device bytes), raw cost_analysis, trip-corrected HLO
+  dot-FLOPs, per-device collective bytes by kind, analytic MODEL_FLOPS and
+  HBM bytes, and the three roofline terms.
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import roofline
+from repro.configs.base import (ARCH_IDS, SHAPES, SHAPES_BY_NAME, cell_runnable,
+                                get_config)
+from repro.launch.mesh import dp_axes, make_production_mesh
+from repro.models import (batch_specs, batch_struct, build_model,
+                          cache_specs_with_dp, decode_struct,
+                          param_specs_with_dp, param_structs)
+from repro.optim import adamw
+from repro.train import make_train_step
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def default_n_micro(shape, dp_total: int) -> int:
+    if shape.kind != "train":
+        return 1
+    # one-to-two sequences per device per microbatch
+    n = max(1, shape.global_batch // max(dp_total, 1) // 2)
+    while shape.global_batch % n:
+        n -= 1
+    return n
+
+
+def _fix_batch_specs(cfg, shape, dp):
+    """Replicate the batch when it cannot shard over dp (e.g. long_500k B=1)."""
+    import numpy as np
+    specs = batch_specs(cfg, dp)
+    if shape.global_batch == 1:
+        specs = jax.tree.map(lambda s: P(*([None] * len(s))), specs,
+                             is_leaf=lambda s: isinstance(s, P))
+    return specs
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, n_micro=None,
+               serve_window: int = 0, gather_once: bool = False,
+               remat_policy: str = ""):
+    """Returns (lowered, compiled, meta) for one cell on `mesh`."""
+    import dataclasses
+    cfg = get_config(arch)
+    if remat_policy:
+        cfg = dataclasses.replace(cfg, remat_policy=remat_policy)
+    shape = SHAPES_BY_NAME[shape_name]
+    model = build_model(cfg)
+    dp = dp_axes(mesh)
+    dp_total = math.prod(mesh.shape[a] for a in dp)
+    chips = mesh.devices.size
+    meta = {"arch": arch, "shape": shape_name, "mesh": dict(mesh.shape),
+            "chips": chips}
+
+    if shape.kind == "train":
+        n_micro = n_micro or default_n_micro(shape, dp_total)
+        meta["n_micro"] = n_micro
+        p_struct = param_structs(cfg)
+        p_specs = param_specs_with_dp(model, "train", dp)
+        o_struct = jax.eval_shape(adamw.init, p_struct)
+        o_specs = adamw.state_specs(p_specs)
+        b_struct = batch_struct(cfg, shape)
+        b_specs = _fix_batch_specs(cfg, shape, dp)
+        # H1 (gather FSDP weights once per step) is the default whenever the
+        # TP-only-resident weights + fp32 grad accumulator fit HBM; models
+        # above ~20B params (qwen3-moe 235B) must keep per-microbatch FSDP.
+        if cfg.param_count() < 20e9:
+            gather_once = True
+        constraint = None
+        if gather_once:
+            meta["gather_once"] = True
+            constraint = _ns(mesh, param_specs_with_dp(model, "serve", dp))
+        step = make_train_step(model, adamw.AdamWConfig(), n_micro,
+                               param_constraint=constraint)
+        fn = jax.jit(step, in_shardings=(_ns(mesh, p_specs), _ns(mesh, o_specs),
+                                         _ns(mesh, b_specs)),
+                     donate_argnums=(0, 1))   # params/opt buffers are reused
+        with mesh:
+            lowered = fn.lower(p_struct, o_struct, b_struct)
+    elif shape.kind == "prefill":
+        meta["n_micro"] = 1
+        p_struct = param_structs(cfg)
+        p_specs = param_specs_with_dp(model, "serve", dp)
+        b_struct = batch_struct(cfg, shape)
+        b_struct.pop("labels", None)
+        b_specs = _fix_batch_specs(cfg, shape, dp)
+        b_specs.pop("labels", None)
+        fn = jax.jit(lambda p, b: model.prefill(p, b),
+                     in_shardings=(_ns(mesh, p_specs), _ns(mesh, b_specs)))
+        with mesh:
+            lowered = fn.lower(p_struct, b_struct)
+    else:  # decode
+        meta["n_micro"] = 1
+        p_struct = param_structs(cfg)
+        p_specs = param_specs_with_dp(model, "serve", dp)
+        tok_struct, cache_struct, pos_struct = decode_struct(cfg, shape)
+        c_specs = cache_specs_with_dp(model, dp, batch_size=shape.global_batch)
+        tok_spec = P(dp if len(dp) > 1 else dp[0], None) if shape.global_batch > 1 else P(None, None)
+        kw = {}
+        if cfg.family in ("hybrid",) and cfg.sliding_window and shape.seq_len > cfg.sliding_window:
+            kw["window"] = cfg.sliding_window
+
+        def step(p, c, t, pos):
+            return model.decode_step(p, c, t, pos, **kw) if kw else model.decode_step(p, c, t, pos)
+
+        fn = jax.jit(step, in_shardings=(_ns(mesh, p_specs), _ns(mesh, c_specs),
+                                         NamedSharding(mesh, tok_spec),
+                                         NamedSharding(mesh, P())),
+                     donate_argnums=(1,))     # KV/state cache updated in place
+        with mesh:
+            lowered = fn.lower(p_struct, cache_struct, tok_struct, pos_struct)
+
+    compiled = lowered.compile()
+    return lowered, compiled, meta
+
+
+def analyse_kde_cell(mesh, n: int = 1_048_576, d: int = 4, n_h: int = 150,
+                     chunk: int = 64, algorithm: str = "mxu") -> dict:
+    """Roofline record for the paper's own technique on the production mesh:
+    distributed LSCV_h (fused grid) over every chip."""
+    from repro.core.distributed import sharded_lscv_h_grid
+    from repro.core import gaussian as G
+
+    chips = mesh.devices.size
+    c_k, c_kk, _ = G.lscv_h_consts(d, 1.0)
+    h_grid = jnp.linspace(0.05, 0.8, n_h, dtype=jnp.float32)
+
+    def fn(x, sigma_inv):
+        return sharded_lscv_h_grid(x, sigma_inv, h_grid, c_k, c_kk, mesh, chunk,
+                                   algorithm=algorithm)
+
+    rep = NamedSharding(mesh, P())
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=(rep, rep)).lower(
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((d, d), jnp.float32))
+        compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    hlo = roofline.HloCostModel(compiled.as_text())
+    dot_flops_dev = hlo.dot_flops()
+    coll_bytes_dev, coll_by_kind = hlo.collective_bytes()
+    pairs = n * (n - 1) / 2
+    # quadform 2 MACs/dim^2-ish + ~8 flops per (pair, h) for the two exps
+    mf = pairs * (4.0 * d * d + 8.0 * n_h)
+    hbm = n * d * 4.0 * (pairs / (chunk * n))   # x re-read per row-chunk slab
+    t = roofline.terms(mf, hbm, coll_bytes_dev, chips)
+    return {
+        "arch": "kde_lscv_h", "shape": f"n{n}_d{d}_nh{n_h}_{algorithm}",
+        "mesh": dict(mesh.shape), "chips": chips, "ok": True,
+        "compile_s": round(t_compile, 2),
+        "memory": {"argument_gb_per_dev": mem.argument_size_in_bytes / 1e9,
+                   "output_gb_per_dev": mem.output_size_in_bytes / 1e9,
+                   "temp_gb_per_dev": mem.temp_size_in_bytes / 1e9,
+                   "alias_gb_per_dev": mem.alias_size_in_bytes / 1e9},
+        "hlo_dot_flops_per_dev": dot_flops_dev,
+        "collective_bytes_per_dev": coll_bytes_dev,
+        "collective_by_kind": coll_by_kind,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(dot_flops_dev * chips, 1.0),
+        "analytic_hbm_bytes": hbm,
+        "roofline": t,
+    }
+
+
+def analyse_cell(arch: str, shape_name: str, mesh, *, n_micro=None,
+                 gather_once: bool = False, remat_policy: str = "") -> dict:
+    t0 = time.time()
+    lowered, compiled, meta = lower_cell(arch, shape_name, mesh, n_micro=n_micro,
+                                         gather_once=gather_once,
+                                         remat_policy=remat_policy)
+    t_compile = time.time() - t0
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    chips = meta["chips"]
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = roofline.HloCostModel(compiled.as_text())
+    dot_flops_dev = hlo.dot_flops()                      # per-device, trip-corrected
+    coll_bytes_dev, coll_by_kind = hlo.collective_bytes()
+
+    mf = roofline.model_flops(cfg, shape)
+    hbm = roofline.hbm_bytes(cfg, shape, meta.get("n_micro", 1))
+    t = roofline.terms(dot_flops_dev * chips, hbm, coll_bytes_dev, chips)
+
+    rec = dict(meta)
+    rec.update({
+        "ok": True,
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_gb_per_dev": mem.argument_size_in_bytes / 1e9,
+            "output_gb_per_dev": mem.output_size_in_bytes / 1e9,
+            "temp_gb_per_dev": mem.temp_size_in_bytes / 1e9,
+            "alias_gb_per_dev": mem.alias_size_in_bytes / 1e9,
+        },
+        "cost_raw": {"flops_per_dev": ca.get("flops"),
+                     "bytes_accessed_per_dev": ca.get("bytes accessed")},
+        "hlo_dot_flops_per_dev": dot_flops_dev,
+        "hlo_dot_flops_global": dot_flops_dev * chips,
+        "collective_bytes_per_dev": coll_bytes_dev,
+        "collective_by_kind": coll_by_kind,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(dot_flops_dev * chips, 1.0),
+        "analytic_hbm_bytes": hbm,
+        "roofline": t,
+    })
+    return rec
+
+
+def run(args) -> int:
+    if args.mesh_shape:
+        from repro.launch.mesh import make_mesh_from_spec
+        mesh = make_mesh_from_spec(args.mesh_shape)
+    else:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                ok, why = cell_runnable(a, s.name)
+                if ok:
+                    cells.append((a, s.name))
+                else:
+                    print(f"SKIP {a} x {s.name}: {why}", flush=True)
+                    if args.out:
+                        with open(args.out, "a") as f:
+                            f.write(json.dumps({"arch": a, "shape": s.name,
+                                                "mesh": dict(mesh.shape),
+                                                "ok": False, "skipped": True,
+                                                "reason": why}) + "\n")
+    else:
+        cells = [(args.arch, args.shape)]
+
+    mesh_tag = "x".join(str(s) for s in mesh.devices.shape)
+    if args.kde:
+        parts = args.kde.split(",")
+        n, d, n_h = int(parts[0]), int(parts[1]), int(parts[2])
+        alg = parts[3] if len(parts) > 3 else "mxu"
+        rec = analyse_kde_cell(mesh, n, d, n_h, algorithm=alg)
+        print(f"PASS kde_lscv_h n{n} d{d} nh{n_h} x {mesh_tag}: "
+              f"compile={rec['compile_s']}s dom={rec['roofline']['dominant']} "
+              f"compute={rec['roofline']['compute_s']:.2e}s", flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+        return 0
+
+    failures = 0
+    for arch, shape_name in cells:
+        tag = f"{arch} x {shape_name} x {mesh_tag}"
+        try:
+            rec = analyse_cell(arch, shape_name, mesh, n_micro=args.n_micro,
+                               gather_once=args.gather_once,
+                               remat_policy=args.remat_policy)
+            print(f"PASS {tag}: compile={rec['compile_s']}s "
+                  f"arg/dev={rec['memory']['argument_gb_per_dev']:.2f}GB "
+                  f"temp/dev={rec['memory']['temp_gb_per_dev']:.2f}GB "
+                  f"dom={rec['roofline']['dominant']}", flush=True)
+        except Exception as e:  # noqa: BLE001 - report and continue
+            failures += 1
+            rec = {"arch": arch, "shape": shape_name, "mesh": dict(mesh.shape),
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"FAIL {tag}: {type(e).__name__}: {str(e)[:300]}", flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list(ARCH_IDS))
+    ap.add_argument("--shape", default="train_4k", choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--mesh-shape", default="",
+                    help="override mesh, e.g. '4,2' or '2,4,2' (tests)")
+    ap.add_argument("--gather-once", action="store_true",
+                    help="H1: one FSDP weight all-gather per step, not per microbatch")
+    ap.add_argument("--remat-policy", default="", choices=["", "nothing", "dots", "dots_full"],
+                    help="H2: per-layer remat policy override")
+    ap.add_argument("--kde", default="",
+                    help="lower the paper's distributed LSCV_h instead: 'n,d,n_h'")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+    raise SystemExit(1 if run(args) else 0)
+
+
+if __name__ == "__main__":
+    main()

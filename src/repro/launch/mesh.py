@@ -1,0 +1,48 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialisation.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod' axis.
+
+    The dry-run container exposes 512 placeholder devices; the single-pod mesh
+    uses the first 256 of them.
+    """
+    import math
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_mesh_from_spec(spec: str):
+    """'16,16' -> (data, model); '2,16,16' -> (pod, data, model).  For tests
+    with a reduced placeholder device count."""
+    import math
+    shape = tuple(int(x) for x in spec.split(","))
+    axes = ("pod", "data", "model")[-len(shape):]
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dp_axes(mesh) -> tuple:
+    """Mesh axes that carry data parallelism."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def tp_size(mesh) -> int:
+    return mesh.shape["model"]

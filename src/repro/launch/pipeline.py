@@ -1,0 +1,66 @@
+"""Pipeline parallelism: SPMD microbatch pipeline over a 'pipe' mesh axis.
+
+The assigned production meshes are (data, model) / (pod, data, model), so PP
+is OFF in the 40-cell table (DESIGN.md §6) — but the machinery a >70B config
+needs is here and tested: a shard_map pipeline where device p holds stage p's
+layer block, activations flow stage->stage via `collective_permute`, and
+microbatches keep every stage busy after the fill phase (GPipe-style schedule
+with the 1F1B-shaped steady state; n_micro + n_stages - 1 ticks total).
+
+    out = spmd_pipeline(stage_fn, stage_params, x_microbatches, mesh, "pipe")
+
+stage_params: pytree with leading axis n_stages, sharded P("pipe", ...).
+x_microbatches: (n_micro, mb, ...) replicated input microbatches.
+Returns (n_micro, mb, ...) outputs (as produced by the last stage).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def spmd_pipeline(stage_fn, stage_params, xs, mesh: Mesh, axis: str = "pipe"):
+    n_stages = mesh.shape[axis]
+    n_micro = xs.shape[0]
+    ticks = n_micro + n_stages - 1
+    perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def shard_fn(params, xs):
+        # inside shard_map: params have a leading axis of size 1 (this
+        # device's stage); xs is the full replicated microbatch stack.
+        local = jax.tree.map(lambda a: a[0], params)
+        stage = jax.lax.axis_index(axis)
+        mb_shape = xs.shape[1:]
+
+        def tick(t, carry):
+            recv, outs = carry
+            # stage 0 ingests microbatch t (while available); others take the
+            # activation handed over by the previous stage last tick.
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            fresh = jax.lax.dynamic_index_in_dim(xs, mb_idx, keepdims=False)
+            inp = jnp.where(stage == 0, fresh, recv)
+            out = stage_fn(local, inp)
+            # last stage commits its result for microbatch (t - n_stages + 1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            commit = (stage == n_stages - 1) & (t >= n_stages - 1)
+            upd = jnp.where(commit, out, jax.lax.dynamic_index_in_dim(outs, out_idx, keepdims=False))
+            outs = jax.lax.dynamic_update_index_in_dim(outs, upd, out_idx, 0)
+            # hand activations to the next stage
+            recv = jax.lax.ppermute(out, axis, perm)
+            return recv, outs
+
+        recv0 = jax.lax.pvary(jnp.zeros(mb_shape, xs.dtype), (axis,))
+        outs0 = jax.lax.pvary(jnp.zeros_like(xs), (axis,))
+        _, outs = jax.lax.fori_loop(0, ticks, tick, (recv0, outs0))
+        # only the last stage holds real outputs; broadcast them to all
+        # stages so the result is replicated (one psum).
+        mask = (jax.lax.axis_index(axis) == n_stages - 1).astype(xs.dtype)
+        return jax.lax.psum(outs * mask, axis)
+
+    param_specs = jax.tree.map(lambda _: P(axis), stage_params)
+    f = jax.shard_map(shard_fn, mesh=mesh, in_specs=(param_specs, P()),
+                      out_specs=P())
+    return f(stage_params, xs)

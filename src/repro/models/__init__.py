@@ -1,0 +1,2 @@
+from .api import (batch_specs, batch_struct, build_model, cache_specs_with_dp,
+                  decode_struct, param_specs_with_dp, param_structs)

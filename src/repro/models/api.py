@@ -1,0 +1,114 @@
+"""Unified model API: build_model(cfg) -> model object, plus abstract-shape
+helpers used by the dry-run (no allocation: jax.eval_shape everywhere).
+
+Batch dict conventions (all int32 tokens):
+  train/prefill: {"tokens": (B, S)[, "labels": (B, S)][, "patch_embeds"]
+                  [, "enc_frames"]}
+  decode:        tokens (B, 1) + cache pytree + pos scalar
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from .hybrid import HybridLM
+from .ssm import MambaLM
+from .transformer import TransformerLM
+from .whisper import EncDecLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "vlm", "moe"):
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        return MambaLM(cfg)
+    if cfg.family == "hybrid":
+        return HybridLM(cfg)
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the train/prefill batch of one (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    sd = jax.ShapeDtypeStruct
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        s_text = S - cfg.n_vision_tokens
+        batch["tokens"] = sd((B, s_text), jnp.int32)
+        batch["labels"] = sd((B, s_text), jnp.int32)
+        batch["patch_embeds"] = sd((B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    elif cfg.family == "encdec":
+        batch["tokens"] = sd((B, S), jnp.int32)
+        batch["labels"] = sd((B, S), jnp.int32)
+        batch["enc_frames"] = sd((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = sd((B, S), jnp.int32)
+        batch["labels"] = sd((B, S), jnp.int32)
+    return batch
+
+
+def batch_specs(cfg: ModelConfig, dp_axes) -> Dict[str, Any]:
+    """PartitionSpecs for batch_struct.  dp_axes: tuple of mesh axis names the
+    batch dimension is sharded over, e.g. ("data",) or ("pod", "data")."""
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    specs: Dict[str, Any] = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = P(dp, None, None)
+    if cfg.family == "encdec":
+        specs["enc_frames"] = P(dp, None, None)
+    return specs
+
+
+def decode_struct(cfg: ModelConfig, shape: ShapeConfig):
+    """(tokens, cache, pos) ShapeDtypeStructs for a decode cell: one new token
+    against a KV/state cache of length shape.seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tokens, cache, pos
+
+
+def cache_specs_with_dp(model, dp_axes, batch_size: int = 0):
+    """Model cache specs with the 'data' batch axis swapped for dp_axes.
+    When the batch cannot shard (e.g. long_500k B=1) it is replicated."""
+    import math
+    dp_total = 0
+    if batch_size:
+        dp_total = batch_size
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    replicate = batch_size == 1
+
+    def fix(spec: P) -> P:
+        def sub(s):
+            if s == "data":
+                return None if replicate else dp
+            return s
+        return P(*[sub(s) for s in spec])
+
+    return jax.tree.map(fix, model.cache_specs(),
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def param_structs(cfg: ModelConfig):
+    """Abstract parameter shapes (no allocation)."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda k: model.init(k), jax.random.key(0))
+
+
+def param_specs_with_dp(model, mode: str, dp_axes):
+    """Param specs with FSDP axis widened to dp_axes in multi-pod meshes."""
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+
+    def fix(spec: P) -> P:
+        return P(*[dp if s == "data" else s for s in spec])
+
+    return jax.tree.map(fix, model.param_specs(mode),
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,335 @@
+"""Zamba2-style hybrid LM: Mamba-2 backbone + one *shared* attention block
+invoked every `attn_every` SSM layers (weights reused at every invocation).
+
+Mamba-2 recurrence (per head h, head dim Ph, state N):
+    S_t = exp(dt_t * a_h) * S_{t-1} + dt_t * (x_t outer B_t)
+    y_t = S_t C_t + D_h x_t
+with scalar a_h per head — the SSD simplification of Mamba-1's per-channel A.
+
+At long_500k the shared attention block runs with a sliding window
+(cfg.sliding_window) so the whole model stays sub-quadratic (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.attn_every > 0
+        self.n_groups = cfg.n_layers // cfg.attn_every
+        self.n_tail = cfg.n_layers - self.n_groups * cfg.attn_every
+
+    # ------------------------------------------------------------- params --
+    def _mamba2_layer(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        ks = jax.random.split(key, 4)
+        return {
+            "norm": L.norm_params(cfg.d_model, "rmsnorm", dt),
+            "in_proj": L.dense_init(ks[0], (cfg.d_model, 2 * di), dt),
+            "conv_w": L.dense_init(ks[1], (cfg.d_conv, di), dt, scale=0.5),
+            "conv_b": jnp.zeros((di,), dt),
+            "bcdt_proj": L.dense_init(ks[2], (di, 2 * N + H), dt),
+            "dt_bias": jnp.full((H,), -4.6, jnp.float32),
+            "a_log": jnp.zeros((H,), jnp.float32),
+            "D": jnp.ones((H,), jnp.float32),
+            "out_proj": L.dense_init(ks[3], (di, cfg.d_model), dt),
+        }
+
+    def _shared_attn_block(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.norm_params(cfg.d_model, "rmsnorm", dt),
+            "attn": L.attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim_, False, dt),
+            "ln2": L.norm_params(cfg.d_model, "rmsnorm", dt),
+            "mlp": L.swiglu_params(k2, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        kE, kM, kA, kH = jax.random.split(key, 4)
+        return {
+            "embed": {"w": L.embed_init(kE, (cfg.padded_vocab, cfg.d_model), dt)},
+            "mamba": jax.vmap(self._mamba2_layer)(jax.random.split(kM, cfg.n_layers)),
+            "shared_attn": self._shared_attn_block(kA),
+            "ln_f": L.norm_params(cfg.d_model, "rmsnorm", dt),
+            "lm_head": {"w": L.dense_init(kH, (cfg.d_model, cfg.padded_vocab), dt)},
+        }
+
+    def param_specs(self, mode: str = "train"):
+        fsdp = "data" if mode == "train" else None
+        mamba = {
+            "norm": {"w": P(None)},
+            "in_proj": P(fsdp, "model"),
+            "conv_w": P(None, "model"),
+            "conv_b": P("model"),
+            "bcdt_proj": P("model", fsdp),
+            "dt_bias": P(None),
+            "a_log": P(None),
+            "D": P(None),
+            "out_proj": P("model", fsdp),
+        }
+        mamba = jax.tree.map(lambda s: P(None, *s), mamba,
+                             is_leaf=lambda s: isinstance(s, P))
+        attn = {
+            "ln1": {"w": P(None)},
+            "attn": {"wq": P(fsdp, "model"), "wk": P(fsdp, "model"),
+                     "wv": P(fsdp, "model"), "wo": P("model", fsdp)},
+            "ln2": {"w": P(None)},
+            "mlp": {"wg": P(fsdp, "model"), "wu": P(fsdp, "model"), "wd": P("model", fsdp)},
+        }
+        return {
+            "embed": {"w": P("model", fsdp)},
+            "mamba": mamba,
+            "shared_attn": attn,
+            "ln_f": {"w": P(None)},
+            "lm_head": {"w": P(fsdp, "model")},
+        }
+
+    # -------------------------------------------------------------- mamba --
+    def _causal_conv(self, lp, x):
+        K = self.cfg.d_conv
+        pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        out = jnp.zeros_like(x)
+        for t in range(K):
+            out = out + pads[:, t:t + x.shape[1], :] * lp["conv_w"][t][None, None, :]
+        return out + lp["conv_b"][None, None, :]
+
+    def _mamba2_block(self, x, lp, want_state: bool = False):
+        cfg = self.cfg
+        di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        Ph = di // H
+        h = L.rmsnorm(x, lp["norm"]["w"])
+        xz = h @ lp["in_proj"]
+        xi, z = xz[..., :di], xz[..., di:]
+        xc = jax.nn.silu(self._causal_conv(lp, xi))
+        bcdt = xc @ lp["bcdt_proj"]
+        Bm = bcdt[..., :N]
+        Cm = bcdt[..., N:2 * N]
+        dtv = jax.nn.softplus(bcdt[..., 2 * N:].astype(jnp.float32) + lp["dt_bias"])  # (B,S,H)
+        a = -jnp.exp(lp["a_log"])                   # (H,)
+        B_, S = x.shape[0], x.shape[1]
+        xh = xc.reshape(B_, S, H, Ph)
+
+        def step(state, inp):                       # state: (B,H,Ph,N) fp32
+            x_t, dt_t, b_t, c_t = inp                # (B,H,Ph),(B,H),(B,N),(B,N)
+            da = jnp.exp(dt_t * a[None])             # (B,H)
+            upd = (dt_t[..., None, None] * x_t[..., None]) * b_t[:, None, None, :]
+            state = da[..., None, None] * state + upd
+            y_t = jnp.einsum("bhpn,bn->bhp", state, c_t)
+            return state, y_t
+
+        xs = (xh.astype(jnp.float32).transpose(1, 0, 2, 3),
+              dtv.transpose(1, 0, 2),
+              Bm.astype(jnp.float32).transpose(1, 0, 2),
+              Cm.astype(jnp.float32).transpose(1, 0, 2))
+        state0 = jnp.zeros((B_, H, Ph, N), jnp.float32)
+        state, ys = jax.lax.scan(step, state0, xs)
+        y = ys.transpose(1, 0, 2, 3)                 # (B,S,H,Ph)
+        y = y + lp["D"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B_, S, di).astype(x.dtype)
+        y = y * jax.nn.silu(z)
+        out = x + y @ lp["out_proj"]
+        if want_state:
+            return out, (xi[:, -(cfg.d_conv - 1):, :], state)
+        return out
+
+    def _attn_block(self, x, ap, positions, window: int = 0):
+        cfg = self.cfg
+        h = L.rmsnorm(x, ap["ln1"]["w"])
+        q, k, v = L.attn_qkv(ap["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+        q = L.apply_rope(q, positions, cfg.head_dim_, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.head_dim_, cfg.rope_theta)
+        o = L.attention_core(q, k, v, causal=True, window=window, q_chunk=cfg.q_chunk)
+        x = x + L.attn_out(ap["attn"], o)
+        h = L.rmsnorm(x, ap["ln2"]["w"])
+        return x + L.swiglu(ap["mlp"], h)
+
+
+    def _split_mamba(self, params):
+        """(grouped [G, A, ...], tail [T, ...]) views of the stacked layers."""
+        G, A, T = self.n_groups, self.cfg.attn_every, self.n_tail
+        grouped = jax.tree.map(lambda a: a[:G * A].reshape(G, A, *a.shape[1:]),
+                               params["mamba"])
+        tail = jax.tree.map(lambda a: a[G * A:], params["mamba"])
+        return grouped, tail
+
+    # ------------------------------------------------------------ forward --
+    def apply(self, params, batch, window: int = 0):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+        positions = jnp.arange(x.shape[1])
+        grouped, tail = self._split_mamba(params)
+        ap = params["shared_attn"]
+
+        def mamba_fn(x, lp):
+            return self._mamba2_block(x, lp), None
+
+        if cfg.remat:
+            mamba_fn = L.remat_block(mamba_fn, cfg)
+
+        def group_fn(x, glp):
+            x, _ = jax.lax.scan(mamba_fn, x, glp)
+            x = self._attn_block(x, ap, positions, window)
+            return x, None
+
+        x, _ = jax.lax.scan(group_fn, x, grouped)
+        if self.n_tail:
+            x, _ = jax.lax.scan(mamba_fn, x, tail)
+        x = L.rmsnorm(x, params["ln_f"]["w"])
+        return x @ params["lm_head"]["w"]
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                               batch.get("loss_mask"))
+
+    def prefill(self, params, batch, window: int = 0):
+        """Forward pass that also returns decode-ready caches."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+        positions = jnp.arange(x.shape[1])
+        grouped, tail = self._split_mamba(params)
+        ap = params["shared_attn"]
+
+        def mamba_fn(x, lp):
+            out, st = self._mamba2_block(x, lp, want_state=True)
+            return out, st
+
+        if cfg.remat:
+            mamba_fn = L.remat_block(mamba_fn, cfg)
+
+        def group_fn(x, glp):
+            x, (gconv, gssm) = jax.lax.scan(mamba_fn, x, glp)
+            h = L.rmsnorm(x, ap["ln1"]["w"])
+            q, k, v = L.attn_qkv(ap["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+            q = L.apply_rope(q, positions, cfg.head_dim_, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.head_dim_, cfg.rope_theta)
+            o = L.attention_core(q, k, v, causal=True, window=window, q_chunk=cfg.q_chunk)
+            x = x + L.attn_out(ap["attn"], o)
+            h = L.rmsnorm(x, ap["ln2"]["w"])
+            x = x + L.swiglu(ap["mlp"], h)
+            return x, (gconv, gssm, k, v)
+
+        x, (convs, ssms, ks, vs) = jax.lax.scan(group_fn, x, grouped)
+        new_conv = jax.tree.map(lambda a: a.reshape(self.n_groups * cfg.attn_every, *a.shape[2:]), convs)
+        new_ssm = jax.tree.map(lambda a: a.reshape(self.n_groups * cfg.attn_every, *a.shape[2:]), ssms)
+        if self.n_tail:
+            x, (tc, ts) = jax.lax.scan(mamba_fn, x, tail)
+            new_conv = jnp.concatenate([new_conv, tc], axis=0)
+            new_ssm = jnp.concatenate([new_ssm, ts], axis=0)
+        x = L.rmsnorm(x, params["ln_f"]["w"])
+        logits = x @ params["lm_head"]["w"]
+        return logits, {"conv": new_conv, "ssm": new_ssm, "k": ks, "v": vs}
+
+    # ------------------------------------------------------------- decode --
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        Ph = di // H
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1, di), _dtype(cfg)),
+            "ssm": jnp.zeros((cfg.n_layers, batch, H, Ph, N), jnp.float32),
+            # one shared attention block -> one KV cache (per invocation site
+            # it is re-read/re-written; sites share it causally in sequence)
+            "k": jnp.zeros((self.n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), _dtype(cfg)),
+            "v": jnp.zeros((self.n_groups, batch, max_len, cfg.n_kv_heads, cfg.head_dim_), _dtype(cfg)),
+        }
+
+    def cache_specs(self):
+        return {"conv": P(None, "data", None, "model"),
+                "ssm": P(None, "data", "model", None, None),
+                "k": P(None, "data", "model", None, None),
+                "v": P(None, "data", "model", None, None)}
+
+    def _mamba2_decode(self, x, lp, conv_state, state):
+        cfg = self.cfg
+        di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        Ph = di // H
+        h = L.rmsnorm(x, lp["norm"]["w"])
+        xz = h @ lp["in_proj"]
+        xi, z = xz[..., :di], xz[..., di:]
+        window = jnp.concatenate([conv_state, xi[:, None, :]], axis=1)
+        xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, lp["conv_w"]) + lp["conv_b"])
+        bcdt = xc @ lp["bcdt_proj"]
+        Bm, Cm = bcdt[..., :N], bcdt[..., N:2 * N]
+        dtv = jax.nn.softplus(bcdt[..., 2 * N:].astype(jnp.float32) + lp["dt_bias"])
+        a = -jnp.exp(lp["a_log"])
+        da = jnp.exp(dtv * a[None])
+        xh = xc.reshape(-1, H, Ph).astype(jnp.float32)
+        upd = (dtv[..., None, None] * xh[..., None]) * Bm.astype(jnp.float32)[:, None, None, :]
+        state = da[..., None, None] * state + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, Cm.astype(jnp.float32))
+        y = y + lp["D"][None, :, None] * xh
+        y = y.reshape(-1, di).astype(x.dtype) * jax.nn.silu(z)
+        return x + y @ lp["out_proj"], window[:, 1:, :], state
+
+    def decode_step(self, params, cache, tokens, pos, *, window: int = 0):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], tokens[:, 0], axis=0)
+        positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+        grouped, tail = self._split_mamba(params)
+        G, A = self.n_groups, cfg.attn_every
+        ap = params["shared_attn"]
+
+        conv_g = jax.tree.map(lambda a: a[:G * A].reshape(G, A, *a.shape[1:]), cache["conv"])
+        ssm_g = jax.tree.map(lambda a: a[:G * A].reshape(G, A, *a.shape[1:]), cache["ssm"])
+
+        def group_fn(x, inp):
+            glp, gconv, gssm, ck, cv = inp
+
+            def mamba_fn(x, minp):
+                lp, cs, ss = minp
+                x, cs, ss = self._mamba2_decode(x, lp, cs, ss)
+                return x, (cs, ss)
+
+            x, (gconv, gssm) = jax.lax.scan(mamba_fn, x, (glp, gconv, gssm))
+            # shared attention with its per-site KV cache
+            h = L.rmsnorm(x[:, None, :], ap["ln1"]["w"])
+            q, k, v = L.attn_qkv(ap["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+            q = L.apply_rope(q, positions, cfg.head_dim_, cfg.rope_theta)
+            k = L.apply_rope(k, positions, cfg.head_dim_, cfg.rope_theta)
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, pos, axis=1)
+            o = L.attention_core(q, ck, cv, causal=True, q_offset=pos, window=window)
+            xs = x[:, None, :] + L.attn_out(ap["attn"], o)
+            h = L.rmsnorm(xs, ap["ln2"]["w"])
+            x = (xs + L.swiglu(ap["mlp"], h))[:, 0, :]
+            return x, (gconv, gssm, ck, cv)
+
+        x, (conv_g, ssm_g, ks, vs) = jax.lax.scan(
+            group_fn, x, (grouped, conv_g, ssm_g, cache["k"], cache["v"]))
+
+        new_conv = jax.tree.map(lambda a: a.reshape(G * A, *a.shape[2:]), conv_g)
+        new_ssm = jax.tree.map(lambda a: a.reshape(G * A, *a.shape[2:]), ssm_g)
+        if self.n_tail:
+            def mamba_fn(x, minp):
+                lp, cs, ss = minp
+                x, cs, ss = self._mamba2_decode(x, lp, cs, ss)
+                return x, (cs, ss)
+            tconv = jax.tree.map(lambda a: a[G * A:], cache["conv"])
+            tssm = jax.tree.map(lambda a: a[G * A:], cache["ssm"])
+            x, (tc, ts) = jax.lax.scan(mamba_fn, x, (tail, tconv, tssm))
+            new_conv = jnp.concatenate([new_conv, tc], axis=0)
+            new_ssm = jnp.concatenate([new_ssm, ts], axis=0)
+        x = L.rmsnorm(x, params["ln_f"]["w"])
+        logits = x @ params["lm_head"]["w"]
+        return logits[:, None, :], {"conv": new_conv, "ssm": new_ssm, "k": ks, "v": vs}

@@ -1,0 +1,265 @@
+"""Shared transformer building blocks: norms, RoPE, GQA attention, MLPs.
+
+Everything is functional (params = nested dicts of arrays) and scan-friendly:
+per-layer parameter pytrees are stacked on a leading layer axis and consumed
+by `lax.scan` in the model definitions, so the lowered HLO stays O(1) in depth
+(critical for the 94-layer dry-run cells).
+
+Attention is query-chunked (flash-style at the XLA level): scores for one
+query chunk at a time, so peak activation memory is O(q_chunk * S) per head
+— this is what makes prefill_32k lowerable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def norm_params(d_model: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"w": jnp.ones((d_model,), dtype)}
+    return {"w": jnp.ones((d_model,), dtype), "b": jnp.zeros((d_model,), dtype)}
+
+
+def apply_norm(x, p, kind: str):
+    return rmsnorm(x, p["w"]) if kind == "rmsnorm" else layernorm(x, p["w"], p["b"])
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (partial-rotary capable, e.g. StableLM 25%)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(rotary_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, rotary_dim, 2, dtype=jnp.float32) / rotary_dim)
+
+
+def apply_rope(x, positions, rotary_dim: int, theta: float):
+    """x: (B, S, H, Dh); positions: (B, S) or (S,). Rotates first rotary_dim."""
+    if rotary_dim == 0:
+        return x
+    freqs = rope_freqs(rotary_dim, theta)                   # (rd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, rd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    rot, rest = x[..., :rotary_dim], x[..., rotary_dim:]
+    r1, r2 = rot[..., ::2], rot[..., 1::2]
+    out1 = r1 * cos - r2 * sin
+    out2 = r2 * cos + r1 * sin
+    rot = jnp.stack([out1, out2], axis=-1).reshape(rot.shape)
+    return jnp.concatenate([rot, rest], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, causal / full / cross, query-chunked, sliding-window)
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def attention_core(q, k, v, *, causal: bool, q_offset=0, window: int = 0,
+                   q_chunk: int = 1024):
+    """q: (B, Sq, Hq, D); k,v: (B, Sk, Hkv, D).  Returns (B, Sq, Hq, D).
+
+    q_offset: global position of q[0] (for decode / chunked prefill masks).
+    window > 0 enables sliding-window attention (keys within `window`).
+    """
+    b, sq, hq, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def chunk_attn(qc, off, k_lo: int, k_hi: int):
+        # qc: (B, C, Hq, D); off: global position of qc[0]; [k_lo, k_hi) is
+        # the static key range this chunk can possibly attend to.
+        # GQA via grouped-head einsum — the KV tensors are NEVER expanded to
+        # Hq heads (materialising the broadcast replicated multi-GB decode
+        # caches and their collectives; §Perf hillclimb H5).
+        cq = qc.shape[1]
+        ks = kf[:, k_lo:k_hi]
+        vs = vf[:, k_lo:k_hi]
+        qg = qc.astype(jnp.float32).reshape(b, cq, hkv, rep, dh)
+        scores = jnp.einsum("bqhrd,bkhd->bhrqk", qg, ks) * scale
+        kpos = k_lo + jnp.arange(k_hi - k_lo)
+        qpos = off + jnp.arange(cq)
+        mask = jnp.ones((cq, k_hi - k_lo), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window > 0:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, vs)
+        return out.reshape(b, cq, hq, dh).astype(q.dtype)
+
+    if sq <= q_chunk:
+        return chunk_attn(q, q_offset, 0, sk)
+
+    # Causal chunking with STATIC per-chunk key ranges (§Perf H7): query
+    # chunk i only ever sees keys < (i+1)*c (minus the window lower bound),
+    # so the unrolled loop halves attention FLOPs vs scoring the full S per
+    # chunk.  Unrolled (not scanned): ranges must be static; the layer scan
+    # above keeps total HLO size bounded.
+    assert q_offset == 0 or not causal, "chunked attention assumes offset 0"
+    c = q_chunk
+    pad = (-sq) % c
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = qp.shape[0] and qp.shape[1] // c
+    outs = []
+    for i in range(n_chunks):
+        qc = qp[:, i * c:(i + 1) * c]
+        k_hi = min((i + 1) * c, sk) if causal else sk
+        k_lo = max(0, i * c - window + 1) if (causal and window > 0) else 0
+        k_lo = (k_lo // 128) * 128                     # lane-aligned start
+        outs.append(chunk_attn(qc, i * c, k_lo, k_hi))
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :sq]
+
+
+def attn_params(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                qkv_bias: bool, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim), dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def attn_qkv(p, x, n_heads: int, n_kv: int, head_dim: int):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return (q.reshape(b, s, n_heads, head_dim),
+            k.reshape(b, s, n_kv, head_dim),
+            v.reshape(b, s, n_kv, head_dim))
+
+
+def attn_out(p, o):
+    b, s, h, d = o.shape
+    return o.reshape(b, s, h * d) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_params(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {"wg": dense_init(ks[0], (d_model, d_ff), dtype),
+            "wu": dense_init(ks[1], (d_model, d_ff), dtype),
+            "wd": dense_init(ks[2], (d_ff, d_model), dtype)}
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+def gelu_mlp_params(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 2)
+    return {"w1": dense_init(ks[0], (d_model, d_ff), dtype),
+            "b1": jnp.zeros((d_ff,), dtype),
+            "w2": dense_init(ks[1], (d_ff, d_model), dtype),
+            "b2": jnp.zeros((d_model,), dtype)}
+
+
+def gelu_mlp(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits, labels, mask=None):
+    """logits: (B, S, V) any float dtype; labels: (B, S) int32; mask: (B, S).
+
+    Computed in float32; ignores positions where mask == 0.
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def remat_block(fn, cfg):
+    """Per-layer remat with the config's policy: "nothing" recomputes the whole
+    block in backward (min memory); "dots" saves non-batch matmul outputs;
+    "dots_full" saves every dot output (no matmul recompute at all — max
+    FLOP saving, max activation memory; §Perf hillclimb H2)."""
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if cfg.remat_policy == "dots_full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(fn)
+
+
+def shard_hint(x, spec):
+    """Best-effort with_sharding_constraint: active when tracing inside a mesh
+    context (dry-run / production), a no-op otherwise (CPU smoke tests)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

@@ -1,0 +1,103 @@
+"""Top-k MoE block with capacity-bounded sort-based dispatch (EP-shardable).
+
+Dispatch algorithm (honest-FLOPs, dense-shape friendly):
+  1. router: softmax over E experts in fp32, top-k gates per token;
+  2. flatten (token, expert) assignments, stable-argsort by expert id;
+  3. position-within-expert via exclusive cumsum of per-expert counts;
+     assignments beyond capacity C = ceil(cf * T * k / E) are dropped
+     (scatter with mode='drop');
+  4. gather tokens into the (E, C, D) expert batch, run all experts as one
+     batched einsum (E rides the 'model' mesh axis => expert parallelism),
+  5. scatter-add gated expert outputs back to token slots.
+
+Compute is O(T * k * cf * D * F) — proportional to *active* experts, matching
+the 6*N_active*D roofline accounting in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+
+
+def moe_params(key, cfg, dt):
+    ks = jax.random.split(key, 4)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.moe_d_ff
+    return {
+        "router": {"w": L.dense_init(ks[0], (D, E), jnp.float32)},
+        "wg": L.dense_init(ks[1], (E, D, F), dt),
+        "wu": L.dense_init(ks[2], (E, D, F), dt),
+        "wd": L.dense_init(ks[3], (E, F, D), dt, scale=1.0 / math.sqrt(F)),
+    }
+
+
+def moe_specs(cfg, fsdp):
+    return {
+        "router": {"w": P(None, None)},
+        "wg": P("model", fsdp, None),
+        "wu": P("model", fsdp, None),
+        "wd": P("model", None, fsdp),
+    }
+
+
+def moe_block(p, x, cfg):
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(math.ceil(cfg.capacity_factor * T * k / E)))
+    xt = x.reshape(T, D)
+
+    # 1. routing (fp32)
+    logits = xt.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eids = jax.lax.top_k(probs, k)                  # (T, k)
+    gates = gates / jnp.sum(gates, axis=-1, keepdims=True)
+
+    # 2-3. sort assignments by expert, compute in-expert positions
+    e_flat = eids.reshape(-1)                              # (T*k,)
+    tok_flat = jnp.arange(T * k, dtype=jnp.int32) // k
+    gate_flat = gates.reshape(-1)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    gate_sorted = gate_flat[order]
+    counts = jnp.bincount(e_flat, length=E)
+    start = jnp.cumsum(counts) - counts                    # exclusive prefix
+    pos_in_e = jnp.arange(T * k) - start[e_sorted]
+    keep = pos_in_e < C
+    dst = jnp.where(keep, e_sorted * C + pos_in_e, E * C)  # OOB => dropped
+
+    disp_tok = jnp.zeros((E * C,), jnp.int32).at[dst].set(tok_sorted, mode="drop")
+    disp_gate = jnp.zeros((E * C,), jnp.float32).at[dst].set(gate_sorted, mode="drop")
+    # slots never written keep gate 0 => contribute nothing on combine
+
+    # 4. expert batch: (E, C, D) -> batched experts on the 'model' axis.
+    # NOTE(§Perf H3, refuted): forcing P("model", None, None) constraints on
+    # xe/hg/he here made things far WORSE (+123% HLO FLOPs, +770% collective
+    # bytes on qwen3-moe train_4k) — GSPMD's propagated layout already keeps
+    # the expert einsums EP-local; the constraints induced resharding.
+    xe = jnp.take(xt, disp_tok, axis=0).reshape(E, C, D)
+    hg = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["wg"]))
+    hu = jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    he = jnp.einsum("ecf,efd->ecd", hg * hu, p["wd"])      # (E, C, D)
+
+    # 5. combine: gated scatter-add back to tokens
+    out = jnp.zeros((T, D), jnp.float32).at[disp_tok].add(
+        he.reshape(E * C, D).astype(jnp.float32) * disp_gate[:, None])
+    return out.reshape(B, S, D).astype(x.dtype)
+
+
+def load_balance_loss(p, x, cfg):
+    """Auxiliary load-balancing loss (Switch-style): E * sum_e f_e * p_e."""
+    B, S, D = x.shape
+    T = B * S
+    logits = x.reshape(T, D).astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, eids = jax.lax.top_k(probs, cfg.top_k)
+    f = jnp.mean(jax.nn.one_hot(eids, cfg.n_experts, dtype=jnp.float32), axis=(0, 1))
+    pmean = jnp.mean(probs, axis=0)
+    return cfg.n_experts * jnp.sum(f * pmean)

@@ -1,0 +1,219 @@
+"""Mamba-1 selective-state-space LM (falcon-mamba-7b family).
+
+Training/prefill runs a `lax.scan` over time inside a `lax.scan` over layers;
+per-step tensors (dA etc.) are built inside the time step so nothing of size
+O(S * d_inner * N) ever materialises.  Decode carries (conv_state, ssm_state)
+per layer — O(1) in context length, which is why this family runs long_500k.
+
+Sharding: d_inner rides the 'model' axis (in_proj row-sharded), so conv,
+gating, x_proj and the state update are all TP-local; out_proj reduces over
+'model' (one psum per layer inserted by GSPMD).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dt_rank(cfg) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+class MambaLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params --
+    def _layer_params(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        di, N, R = cfg.d_inner, cfg.ssm_state, dt_rank(cfg)
+        ks = jax.random.split(key, 5)
+        a = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))
+        return {
+            "norm": L.norm_params(cfg.d_model, "rmsnorm", dt),
+            "in_proj": L.dense_init(ks[0], (cfg.d_model, 2 * di), dt),
+            "conv_w": L.dense_init(ks[1], (cfg.d_conv, di), dt, scale=1.0 / math.sqrt(cfg.d_conv)),
+            "conv_b": jnp.zeros((di,), dt),
+            "x_proj": L.dense_init(ks[2], (di, R + 2 * N), dt),
+            "dt_proj": L.dense_init(ks[3], (R, di), dt, scale=1.0 / math.sqrt(R)),
+            "dt_bias": jnp.full((di,), -4.6, dt),   # softplus^-1(0.01)
+            "A_log": jnp.log(a),                     # fp32
+            "D": jnp.ones((di,), jnp.float32),
+            "out_proj": L.dense_init(ks[4], (di, cfg.d_model), dt),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        kE, kL, kH = jax.random.split(key, 3)
+        return {
+            "embed": {"w": L.embed_init(kE, (cfg.padded_vocab, cfg.d_model), dt)},
+            "layers": jax.vmap(self._layer_params)(jax.random.split(kL, cfg.n_layers)),
+            "ln_f": L.norm_params(cfg.d_model, "rmsnorm", dt),
+            "lm_head": {"w": L.dense_init(kH, (cfg.d_model, cfg.padded_vocab), dt)},
+        }
+
+    def param_specs(self, mode: str = "train"):
+        fsdp = "data" if mode == "train" else None
+        layer = {
+            "norm": {"w": P(None)},
+            "in_proj": P(fsdp, "model"),
+            "conv_w": P(None, "model"),
+            "conv_b": P("model"),
+            "x_proj": P("model", fsdp),
+            "dt_proj": P(fsdp, "model"),
+            "dt_bias": P("model"),
+            "A_log": P("model", None),
+            "D": P("model"),
+            "out_proj": P("model", fsdp),
+        }
+        layer = jax.tree.map(lambda s: P(None, *s), layer,
+                             is_leaf=lambda s: isinstance(s, P))
+        return {
+            "embed": {"w": P("model", fsdp)},
+            "layers": layer,
+            "ln_f": {"w": P(None)},
+            "lm_head": {"w": P(fsdp, "model")},
+        }
+
+    # -------------------------------------------------------------- block --
+    def _ssm_scan(self, lp, xc, dtv, Bm, Cm):
+        """Selective scan.  xc: (B,S,di) conv output; dtv: (B,S,di);
+        Bm, Cm: (B,S,N).  Returns y: (B,S,di).  fp32 state."""
+        A = -jnp.exp(lp["A_log"])                    # (di, N)
+
+        def step(h, inp):
+            x_t, dt_t, b_t, c_t = inp                # (B,di),(B,di),(B,N),(B,N)
+            dA = jnp.exp(dt_t[..., None] * A[None])  # (B,di,N)
+            dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+            h = dA * h + dBx
+            y_t = jnp.einsum("bdn,bn->bd", h, c_t)
+            return h, y_t
+
+        B_, S, di = xc.shape
+        N = Bm.shape[-1]
+        h0 = jnp.zeros((B_, di, N), jnp.float32)
+        xs = (xc.astype(jnp.float32).transpose(1, 0, 2),
+              dtv.astype(jnp.float32).transpose(1, 0, 2),
+              Bm.astype(jnp.float32).transpose(1, 0, 2),
+              Cm.astype(jnp.float32).transpose(1, 0, 2))
+        h, ys = jax.lax.scan(step, h0, xs)
+        return ys.transpose(1, 0, 2), h              # y (B,S,di), final state
+
+    def _causal_conv(self, lp, x):
+        """Depthwise causal conv over time. x: (B,S,di)."""
+        cfg = self.cfg
+        K = cfg.d_conv
+        pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        out = jnp.zeros_like(x)
+        for t in range(K):                           # small static K (=4)
+            out = out + pads[:, t:t + x.shape[1], :] * lp["conv_w"][t][None, None, :]
+        return out + lp["conv_b"][None, None, :]
+
+    def _block(self, x, lp, want_state: bool = False):
+        cfg = self.cfg
+        di, N, R = cfg.d_inner, cfg.ssm_state, dt_rank(cfg)
+        h = L.rmsnorm(x, lp["norm"]["w"])
+        xz = h @ lp["in_proj"]
+        xi, z = xz[..., :di], xz[..., di:]
+        xc = jax.nn.silu(self._causal_conv(lp, xi))
+        dbc = xc @ lp["x_proj"]
+        dtv = jax.nn.softplus(dbc[..., :R] @ lp["dt_proj"] + lp["dt_bias"])
+        Bm = dbc[..., R:R + N]
+        Cm = dbc[..., R + N:]
+        y, h_last = self._ssm_scan(lp, xc, dtv, Bm, Cm)
+        y = y.astype(x.dtype) + lp["D"].astype(x.dtype) * xc
+        y = y * jax.nn.silu(z)
+        out = x + y @ lp["out_proj"]
+        if want_state:
+            conv_tail = xi[:, -(cfg.d_conv - 1):, :]
+            return out, (conv_tail, h_last)
+        return out
+
+    # ------------------------------------------------------------ forward --
+    def apply(self, params, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+
+        def block_fn(x, lp):
+            return self._block(x, lp), None
+
+        if cfg.remat:
+            block_fn = L.remat_block(block_fn, cfg)
+        x, _ = jax.lax.scan(block_fn, x, params["layers"])
+        x = L.rmsnorm(x, params["ln_f"]["w"])
+        return x @ params["lm_head"]["w"]
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                               batch.get("loss_mask"))
+
+    # ------------------------------------------------------------- decode --
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        di, N = cfg.d_inner, cfg.ssm_state
+        return {
+            "conv": jnp.zeros((cfg.n_layers, batch, cfg.d_conv - 1, di), _dtype(cfg)),
+            "ssm": jnp.zeros((cfg.n_layers, batch, di, N), jnp.float32),
+        }
+
+    def cache_specs(self):
+        return {"conv": P(None, "data", None, "model"),
+                "ssm": P(None, "data", "model", None)}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+
+        def block_fn(x, lp):
+            out, (conv_tail, h_last) = self._block(x, lp, want_state=True)
+            return out, (conv_tail, h_last)
+
+        if cfg.remat:
+            block_fn = L.remat_block(block_fn, cfg)
+        x, (convs, ssms) = jax.lax.scan(block_fn, x, params["layers"])
+        x = L.rmsnorm(x, params["ln_f"]["w"])
+        return x @ params["lm_head"]["w"], {"conv": convs, "ssm": ssms}
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens: (B, 1).  O(1)-in-context single-token step."""
+        cfg = self.cfg
+        di, N, R = cfg.d_inner, cfg.ssm_state, dt_rank(cfg)
+        x = jnp.take(params["embed"]["w"], tokens[:, 0], axis=0)   # (B, D)
+
+        def block_fn(x, inp):
+            lp, conv_state, h = inp                   # conv:(B,K-1,di) h:(B,di,N)
+            hN = L.rmsnorm(x, lp["norm"]["w"])
+            xz = hN @ lp["in_proj"]
+            xi, z = xz[..., :di], xz[..., di:]        # (B, di)
+            window = jnp.concatenate([conv_state, xi[:, None, :]], axis=1)  # (B,K,di)
+            xc = jnp.einsum("bkd,kd->bd", window, lp["conv_w"]) + lp["conv_b"]
+            xc = jax.nn.silu(xc)
+            dbc = xc @ lp["x_proj"]
+            dtv = jax.nn.softplus(dbc[..., :R] @ lp["dt_proj"] + lp["dt_bias"])
+            Bm, Cm = dbc[..., R:R + N], dbc[..., R + N:]
+            dA = jnp.exp(dtv.astype(jnp.float32)[..., None] * (-jnp.exp(lp["A_log"]))[None])
+            h = dA * h + ((dtv * xc).astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, None, :]
+            y = jnp.einsum("bdn,bn->bd", h, Cm.astype(jnp.float32)).astype(x.dtype)
+            y = y + lp["D"].astype(x.dtype) * xc
+            y = y * jax.nn.silu(z)
+            x = x + y @ lp["out_proj"]
+            return x, (window[:, 1:, :], h)
+
+        x, (convs, ssms) = jax.lax.scan(block_fn, x,
+                                        (params["layers"], cache["conv"], cache["ssm"]))
+        x = L.rmsnorm(x, params["ln_f"]["w"])
+        logits = x @ params["lm_head"]["w"]
+        return logits[:, None, :], {"conv": convs, "ssm": ssms}

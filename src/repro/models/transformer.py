@@ -1,0 +1,229 @@
+"""Dense / VLM / MoE decoder-only transformer LM (scan-over-layers).
+
+One implementation covers stablelm-12b, llama3.2-1b, glm4-9b, qwen2.5-14b,
+internvl2-2b (VLM: precomputed patch embeddings prepended) and the two MoE
+archs (FFN swapped for a top-k expert block, see moe.py).
+
+Layer parameters are stacked on a leading L axis and consumed by `lax.scan`
+(+ optional `jax.checkpoint` remat per block), so HLO size is depth-independent
+and activation memory is one layer boundary per layer.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+from .moe import moe_block, moe_params, moe_specs
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params --
+    def _layer_params(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {
+            "ln1": L.norm_params(cfg.d_model, cfg.norm, dt),
+            "attn": L.attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim_, cfg.qkv_bias, dt),
+            "ln2": L.norm_params(cfg.d_model, cfg.norm, dt),
+        }
+        if cfg.family == "moe":
+            p["moe"] = moe_params(k2, cfg, dt)
+        elif cfg.mlp == "swiglu":
+            p["mlp"] = L.swiglu_params(k2, cfg.d_model, cfg.d_ff, dt)
+        else:
+            p["mlp"] = L.gelu_mlp_params(k2, cfg.d_model, cfg.d_ff, dt)
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        kE, kL, kH, kV = jax.random.split(key, 4)
+        layer_keys = jax.random.split(kL, cfg.n_layers)
+        params = {
+            "embed": {"w": L.embed_init(kE, (cfg.padded_vocab, cfg.d_model), dt)},
+            "layers": jax.vmap(self._layer_params)(layer_keys),
+            "ln_f": L.norm_params(cfg.d_model, cfg.norm, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {"w": L.dense_init(kH, (cfg.d_model, cfg.padded_vocab), dt)}
+        if cfg.family == "vlm":
+            params["vision_proj"] = {"w": L.dense_init(kV, (cfg.d_model, cfg.d_model), dt)}
+        return params
+
+    def param_specs(self, mode: str = "train"):
+        """PartitionSpecs matching init()'s pytree.  TP over 'model'; in train
+        mode large weight matrices are additionally FSDP-sharded over 'data'."""
+        cfg = self.cfg
+        fsdp = "data" if mode == "train" else None
+        n = lambda: P(None)                      # replicated vector
+        row = lambda: P(fsdp, "model")           # [in, out] -> out over model
+        col = lambda: P("model", fsdp)           # [in, out] -> in over model
+        norm = {"w": n()} if cfg.norm == "rmsnorm" else {"w": n(), "b": n()}
+        attn = {"wq": row(), "wk": row(), "wv": row(), "wo": col()}
+        if cfg.qkv_bias:
+            attn.update({"bq": P("model"), "bk": P("model"), "bv": P("model")})
+        layer = {"ln1": dict(norm), "attn": attn, "ln2": dict(norm)}
+        if cfg.family == "moe":
+            layer["moe"] = moe_specs(cfg, fsdp)
+        elif cfg.mlp == "swiglu":
+            layer["mlp"] = {"wg": row(), "wu": row(), "wd": col()}
+        else:
+            layer["mlp"] = {"w1": row(), "b1": P("model"), "w2": col(), "b2": n()}
+        # prepend the stacked-layer axis
+        layer = jax.tree.map(lambda s: P(None, *s), layer,
+                             is_leaf=lambda s: isinstance(s, P))
+        specs = {
+            "embed": {"w": P("model", fsdp)},
+            "layers": layer,
+            "ln_f": dict(norm),
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = {"w": P(fsdp, "model")}
+        if cfg.family == "vlm":
+            specs["vision_proj"] = {"w": P(None, "model")}
+        return specs
+
+    # ------------------------------------------------------------ forward --
+    def _block(self, x, lp, positions, *, window: int = 0):
+        cfg = self.cfg
+        h = L.apply_norm(x, lp["ln1"], cfg.norm)
+        q, k, v = L.attn_qkv(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+        rd = int(cfg.head_dim_ * cfg.partial_rotary)
+        q = L.apply_rope(q, positions, rd, cfg.rope_theta)
+        k = L.apply_rope(k, positions, rd, cfg.rope_theta)
+        o = L.attention_core(q, k, v, causal=True, window=window, q_chunk=cfg.q_chunk)
+        x = x + L.attn_out(lp["attn"], o)
+        h = L.apply_norm(x, lp["ln2"], cfg.norm)
+        if cfg.family == "moe":
+            x = x + moe_block(lp["moe"], h, cfg)
+        elif cfg.mlp == "swiglu":
+            x = x + L.swiglu(lp["mlp"], h)
+        else:
+            x = x + L.gelu_mlp(lp["mlp"], h)
+        return x
+
+    def _embed_inputs(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)
+        if cfg.family == "vlm":
+            vis = batch["patch_embeds"].astype(x.dtype) @ params["vision_proj"]["w"]
+            x = jnp.concatenate([vis, x], axis=1)
+        return x
+
+    def apply(self, params, batch):
+        """Teacher-forced forward -> logits (B, S_total, V)."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+
+        def block_fn(x, lp):
+            return self._block(x, lp, positions), None
+
+        if cfg.remat:
+            block_fn = L.remat_block(block_fn, cfg)
+        x, _ = jax.lax.scan(block_fn, x, params["layers"])
+        x = L.apply_norm(x, params["ln_f"], cfg.norm)
+        head = params["embed"]["w"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+        return x @ head
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits = self.apply(params, batch)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if cfg.family == "vlm":   # image positions carry no next-token loss
+            logits = logits[:, cfg.n_vision_tokens:, :]
+        return L.cross_entropy(logits[:, :-1], labels[:, 1:],
+                               None if mask is None else mask[:, 1:])
+
+    # ------------------------------------------------------------- decode --
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    def cache_specs(self):
+        # batch over data, SEQUENCE over model (H6): contracting head_dim
+        # locally and psum-ing the tiny scores/outputs beats all-gathering the
+        # cache over the model axis (55 GB/dev -> MBs; EXPERIMENTS.md §Perf)
+        s = P(None, "data", "model", None, None)
+        return {"k": s, "v": s}
+
+    def prefill(self, params, batch):
+        """Full-sequence forward that also returns the KV cache."""
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        positions = jnp.arange(x.shape[1])
+
+        def block_fn(x, lp):
+            h = L.apply_norm(x, lp["ln1"], cfg.norm)
+            q, k, v = L.attn_qkv(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+            rd = int(cfg.head_dim_ * cfg.partial_rotary)
+            q = L.apply_rope(q, positions, rd, cfg.rope_theta)
+            k = L.apply_rope(k, positions, rd, cfg.rope_theta)
+            o = L.attention_core(q, k, v, causal=True, q_chunk=cfg.q_chunk)
+            x = x + L.attn_out(lp["attn"], o)
+            h = L.apply_norm(x, lp["ln2"], cfg.norm)
+            if cfg.family == "moe":
+                x = x + moe_block(lp["moe"], h, cfg)
+            elif cfg.mlp == "swiglu":
+                x = x + L.swiglu(lp["mlp"], h)
+            else:
+                x = x + L.gelu_mlp(lp["mlp"], h)
+            return x, (k, v)
+
+        if cfg.remat:
+            block_fn = L.remat_block(block_fn, cfg)
+        x, (ks, vs) = jax.lax.scan(block_fn, x, params["layers"])
+        x = L.apply_norm(x, params["ln_f"], cfg.norm)
+        head = params["embed"]["w"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+        return x @ head, {"k": ks, "v": vs}
+
+    def decode_step(self, params, cache, tokens, pos, *, window: int = 0):
+        """One decode step. tokens: (B, 1) int32; pos: scalar int32 (write slot).
+        Returns (logits (B, 1, V), new_cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)
+        positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+
+        def block_fn(x, inputs):
+            lp, ck, cv = inputs
+            h = L.apply_norm(x, lp["ln1"], cfg.norm)
+            q, k, v = L.attn_qkv(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+            rd = int(cfg.head_dim_ * cfg.partial_rotary)
+            q = L.apply_rope(q, positions, rd, cfg.rope_theta)
+            k = L.apply_rope(k, positions, rd, cfg.rope_theta)
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k, pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v, pos, axis=1)
+            o = L.attention_core(q, ck, cv, causal=True, q_offset=pos, window=window)
+            x = x + L.attn_out(lp["attn"], o)
+            h = L.apply_norm(x, lp["ln2"], cfg.norm)
+            if cfg.family == "moe":
+                x = x + moe_block(lp["moe"], h, cfg)
+            elif cfg.mlp == "swiglu":
+                x = x + L.swiglu(lp["mlp"], h)
+            else:
+                x = x + L.gelu_mlp(lp["mlp"], h)
+            return x, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(block_fn, x, (params["layers"], cache["k"], cache["v"]))
+        x = L.apply_norm(x, params["ln_f"], cfg.norm)
+        head = params["embed"]["w"].T if cfg.tie_embeddings else params["lm_head"]["w"]
+        return x @ head, {"k": ks, "v": vs}

@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder (whisper-base).
+
+The conv/mel frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings (B, enc_seq, d_model); sinusoidal positions are
+added on the fly (stand-in for Whisper's learned/sinusoidal tables so the
+decoder is length-agnostic for the decode_32k cell).
+
+Encoder: non-causal self-attention blocks.  Decoder: causal self-attention +
+cross-attention to encoder states + GELU MLP.  Decode caches: growing self-
+attention KV + fixed cross-attention KV (computed once from encoder states).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import layers as L
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def sinusoid_positions(positions, d_model: int):
+    """positions: (S,) or (B,S) -> (..., d_model) sinusoidal embeddings."""
+    half = d_model // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------- params --
+    def _enc_layer(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": L.norm_params(cfg.d_model, cfg.norm, dt),
+            "attn": L.attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim_, False, dt),
+            "ln2": L.norm_params(cfg.d_model, cfg.norm, dt),
+            "mlp": L.gelu_mlp_params(k2, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def _dec_layer(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": L.norm_params(cfg.d_model, cfg.norm, dt),
+            "self_attn": L.attn_params(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                       cfg.head_dim_, False, dt),
+            "ln2": L.norm_params(cfg.d_model, cfg.norm, dt),
+            "cross_attn": L.attn_params(k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                        cfg.head_dim_, False, dt),
+            "ln3": L.norm_params(cfg.d_model, cfg.norm, dt),
+            "mlp": L.gelu_mlp_params(k3, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    def init(self, key):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        kE, kEnc, kDec = jax.random.split(key, 3)
+        return {
+            "embed": {"w": L.embed_init(kE, (cfg.padded_vocab, cfg.d_model), dt)},
+            "enc_layers": jax.vmap(self._enc_layer)(jax.random.split(kEnc, cfg.n_enc_layers)),
+            "ln_enc": L.norm_params(cfg.d_model, cfg.norm, dt),
+            "dec_layers": jax.vmap(self._dec_layer)(jax.random.split(kDec, cfg.n_layers)),
+            "ln_f": L.norm_params(cfg.d_model, cfg.norm, dt),
+        }
+
+    def param_specs(self, mode: str = "train"):
+        cfg = self.cfg
+        fsdp = "data" if mode == "train" else None
+        norm = {"w": P(None), "b": P(None)}
+        attn = {"wq": P(fsdp, "model"), "wk": P(fsdp, "model"),
+                "wv": P(fsdp, "model"), "wo": P("model", fsdp)}
+        mlp = {"w1": P(fsdp, "model"), "b1": P("model"), "w2": P("model", fsdp), "b2": P(None)}
+        enc = {"ln1": dict(norm), "attn": dict(attn), "ln2": dict(norm), "mlp": dict(mlp)}
+        dec = {"ln1": dict(norm), "self_attn": dict(attn), "ln2": dict(norm),
+               "cross_attn": dict(attn), "ln3": dict(norm), "mlp": dict(mlp)}
+        stack = lambda t: jax.tree.map(lambda s: P(None, *s), t,
+                                       is_leaf=lambda s: isinstance(s, P))
+        return {
+            "embed": {"w": P("model", fsdp)},
+            "enc_layers": stack(enc),
+            "ln_enc": dict(norm),
+            "dec_layers": stack(dec),
+            "ln_f": dict(norm),
+        }
+
+    # ------------------------------------------------------------ encoder --
+    def encode(self, params, enc_frames):
+        cfg = self.cfg
+        x = enc_frames.astype(_dtype(cfg))
+        x = x + sinusoid_positions(jnp.arange(x.shape[1]), cfg.d_model).astype(x.dtype)[None]
+
+        def block(x, lp):
+            h = L.apply_norm(x, lp["ln1"], cfg.norm)
+            q, k, v = L.attn_qkv(lp["attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+            o = L.attention_core(q, k, v, causal=False, q_chunk=cfg.q_chunk)
+            x = x + L.attn_out(lp["attn"], o)
+            h = L.apply_norm(x, lp["ln2"], cfg.norm)
+            return x + L.gelu_mlp(lp["mlp"], h), None
+
+        if cfg.remat:
+            block = L.remat_block(block, cfg)
+        x, _ = jax.lax.scan(block, x, params["enc_layers"])
+        return L.apply_norm(x, params["ln_enc"], cfg.norm)
+
+    # ------------------------------------------------------------ decoder --
+    def _dec_block(self, x, lp, enc_out, positions, collect_kv: bool = False):
+        cfg = self.cfg
+        h = L.apply_norm(x, lp["ln1"], cfg.norm)
+        q, k, v = L.attn_qkv(lp["self_attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+        o = L.attention_core(q, k, v, causal=True, q_chunk=cfg.q_chunk)
+        x = x + L.attn_out(lp["self_attn"], o)
+        h = L.apply_norm(x, lp["ln2"], cfg.norm)
+        b, s, _ = h.shape
+        se = enc_out.shape[1]
+        qc = (h @ lp["cross_attn"]["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim_)
+        kc = (enc_out @ lp["cross_attn"]["wk"]).reshape(b, se, cfg.n_kv_heads, cfg.head_dim_)
+        vc = (enc_out @ lp["cross_attn"]["wv"]).reshape(b, se, cfg.n_kv_heads, cfg.head_dim_)
+        oc = L.attention_core(qc, kc, vc, causal=False, q_chunk=cfg.q_chunk)
+        x = x + L.attn_out(lp["cross_attn"], oc)
+        h = L.apply_norm(x, lp["ln3"], cfg.norm)
+        x = x + L.gelu_mlp(lp["mlp"], h)
+        if collect_kv:
+            return x, (k, v, kc, vc)
+        return x
+
+    def apply(self, params, batch):
+        """Teacher-forced enc-dec forward -> decoder logits."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["enc_frames"])
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)
+        positions = jnp.arange(x.shape[1])
+        x = x + sinusoid_positions(positions, cfg.d_model).astype(x.dtype)[None]
+
+        def block(x, lp):
+            return self._dec_block(x, lp, enc_out, positions), None
+
+        if cfg.remat:
+            block = L.remat_block(block, cfg)
+        x, _ = jax.lax.scan(block, x, params["dec_layers"])
+        x = L.apply_norm(x, params["ln_f"], cfg.norm)
+        return x @ params["embed"]["w"].T          # whisper ties output proj
+
+    def loss(self, params, batch):
+        logits = self.apply(params, batch)
+        return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:],
+                               batch.get("loss_mask"))
+
+    # ------------------------------------------------------------- decode --
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        kv = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+        cross = (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim_)
+        return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt),
+                "ck": jnp.zeros(cross, dt), "cv": jnp.zeros(cross, dt)}
+
+    def cache_specs(self):
+        # self-attn cache: sequence over model (H6); cross cache: enc_seq=1500
+        # is not divisible by 16, so it stays head_dim-sharded.
+        s = P(None, "data", "model", None, None)
+        c = P(None, "data", None, None, "model")
+        return {"k": s, "v": s, "ck": c, "cv": c}
+
+    def prefill(self, params, batch):
+        """Encoder + teacher-forced decoder pass, returning decode caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["enc_frames"])
+        tokens = batch["tokens"]
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)
+        positions = jnp.arange(x.shape[1])
+        x = x + sinusoid_positions(positions, cfg.d_model).astype(x.dtype)[None]
+
+        def block(x, lp):
+            return self._dec_block(x, lp, enc_out, positions, collect_kv=True)
+
+        if cfg.remat:
+            block = L.remat_block(block, cfg)
+        x, (ks, vs, cks, cvs) = jax.lax.scan(block, x, params["dec_layers"])
+        x = L.apply_norm(x, params["ln_f"], cfg.norm)
+        logits = x @ params["embed"]["w"].T
+        return logits, {"k": ks, "v": vs, "ck": cks, "cv": cvs}
+
+    def decode_step(self, params, cache, tokens, pos):
+        cfg = self.cfg
+        x = jnp.take(params["embed"]["w"], tokens, axis=0)   # (B,1,D)
+        positions = jnp.full((tokens.shape[0], 1), pos, jnp.int32)
+        x = x + sinusoid_positions(positions, cfg.d_model).astype(x.dtype)
+
+        def block(x, inp):
+            lp, ck_, cv_, xk, xv = inp
+            h = L.apply_norm(x, lp["ln1"], cfg.norm)
+            q, k, v = L.attn_qkv(lp["self_attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)
+            ck_ = jax.lax.dynamic_update_slice_in_dim(ck_, k, pos, axis=1)
+            cv_ = jax.lax.dynamic_update_slice_in_dim(cv_, v, pos, axis=1)
+            o = L.attention_core(q, ck_, cv_, causal=True, q_offset=pos)
+            x = x + L.attn_out(lp["self_attn"], o)
+            h = L.apply_norm(x, lp["ln2"], cfg.norm)
+            qc = L.attn_qkv(lp["cross_attn"], h, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_)[0]
+            oc = L.attention_core(qc, xk, xv, causal=False)
+            x = x + L.attn_out(lp["cross_attn"], oc)
+            h = L.apply_norm(x, lp["ln3"], cfg.norm)
+            x = x + L.gelu_mlp(lp["mlp"], h)
+            return x, (ck_, cv_)
+
+        x, (ks, vs) = jax.lax.scan(block, x, (params["dec_layers"], cache["k"],
+                                              cache["v"], cache["ck"], cache["cv"]))
+        x = L.apply_norm(x, params["ln_f"], cfg.norm)
+        logits = x @ params["embed"]["w"].T
+        return logits, {"k": ks, "v": vs, "ck": cache["ck"], "cv": cache["cv"]}

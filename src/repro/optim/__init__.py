@@ -1,0 +1,2 @@
+from . import adamw, grad_compress
+from .adamw import AdamWConfig, AdamWState

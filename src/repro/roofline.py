@@ -1,0 +1,341 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Hardware model (TPU v5e-class, per chip):
+    peak bf16 compute  197 TFLOP/s
+    HBM bandwidth      819 GB/s
+    ICI link bandwidth ~50 GB/s
+
+Three terms per (arch x shape x mesh), in seconds:
+    compute    = FLOPs / (chips * peak)
+    memory     = HBM bytes / (chips * hbm_bw)
+    collective = collective bytes / (chips * link_bw)
+
+FLOPs / collective bytes are extracted from the *compiled per-device HLO* by a
+structural parser (`HloCostModel`) because XLA's `cost_analysis()` counts
+`while` (scan) bodies exactly once: this repo lowers every model as
+scan-over-layers, so raw numbers undercount depth.  The parser rebuilds the
+call graph (while/fusion/call/to_apply edges), derives each while's trip count
+from its condition's comparison constant, and multiplies dot-FLOPs and
+collective result-bytes by the product of enclosing trip counts.  Raw
+`cost_analysis()` numbers are reported alongside for reference.
+
+MODEL_FLOPS uses the standard 6*N*D (train) / 2*N*D (per decoded token)
+accounting with N = (active) parameter count, D = tokens — the "useful
+compute" yardstick the §Roofline table compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(%?[\w\.\-]+)\s*=\s*(.*)$")
+_CALLSITE_RE = re.compile(r"(?:body|condition|to_apply|calls)=([%\w\.\-]+)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _parse_shape(text: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, []
+    dtype, dims = m.group(1), m.group(2)
+    if dtype not in _DTYPE_BYTES:
+        return None, []
+    return dtype, [int(d) for d in dims.split(",") if d]
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of all array shapes in a (possibly tuple) type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Tuple[str, str]]            # (result_name, rhs text)
+    callees: List[str]
+
+
+class HloCostModel:
+    """Structural HLO cost extraction with while-trip-count multiplication."""
+
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self.multipliers = self._compute_multipliers()
+
+    # -- parsing -------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[Computation] = None
+        for line in text.splitlines():
+            stripped = line.strip()
+            if stripped.startswith(("HloModule",)):
+                continue
+            # computation header, e.g.
+            #   %region_0.2 (arg: (s32[], f32[128,128])) -> (s32[], ...) {
+            #   ENTRY %main.4 (x: f32[...]) -> f32[...] {
+            header = re.match(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*->.*\{\s*$", stripped)
+            if header:
+                name = header.group(2).lstrip("%")
+                cur = Computation(name=name, instructions=[], callees=[])
+                self.computations[name] = cur
+                if header.group(1):
+                    self.entry = name
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _INSTR_RE.match(stripped)
+            if not m:
+                continue
+            rname, rhs = m.group(1).lstrip("%"), m.group(2)
+            cur.instructions.append((rname, rhs))
+
+    def _trip_count(self, cond_name: str) -> int:
+        """Trip count from the condition computation's comparison constant."""
+        comp = self.computations.get(cond_name)
+        if comp is None:
+            return 1
+        consts = []
+        for _, rhs in comp.instructions:
+            m = re.search(r"constant\((\d+)\)", rhs)
+            if m:
+                consts.append(int(m.group(1)))
+            # trip constant may be wrapped in a fusion operand computation:
+            cm = re.search(r"calls=([%\w\.\-]+)", rhs)
+            if cm:
+                consts.append(self._trip_count(cm.group(1).lstrip("%")))
+        return max(consts) if consts else 1
+
+    def _call_edges(self) -> Dict[str, List[Tuple[str, int]]]:
+        """caller -> [(callee, weight per caller-execution)]."""
+        edges: Dict[str, List[Tuple[str, int]]] = defaultdict(list)
+        for cname, comp in self.computations.items():
+            for _, rhs in comp.instructions:
+                if " while(" in rhs:
+                    bm = re.search(r"body=([%\w\.\-]+)", rhs)
+                    cm = re.search(r"condition=([%\w\.\-]+)", rhs)
+                    trips = self._trip_count(cm.group(1).lstrip("%")) if cm else 1
+                    trips = max(trips, 1)
+                    if bm:
+                        edges[cname].append((bm.group(1).lstrip("%"), trips))
+                    if cm:
+                        edges[cname].append((cm.group(1).lstrip("%"), trips))
+                else:
+                    for m in _CALLSITE_RE.finditer(rhs):
+                        edges[cname].append((m.group(1).lstrip("%"), 1))
+        return edges
+
+    def _compute_multipliers(self) -> Dict[str, int]:
+        """multiplier(c) = number of executions of computation c per program
+        run = sum over call sites of caller-multiplier * site weight."""
+        edges = self._call_edges()
+        entry = self.entry or next(iter(self.computations))
+        mult: Dict[str, int] = defaultdict(int)
+        mult[entry] = 1
+        # topological accumulation via DFS with memo (HLO call graphs are DAGs)
+        order: List[str] = []
+        seen = set()
+
+        def topo(name: str):
+            if name in seen:
+                return
+            seen.add(name)
+            for callee, _ in edges.get(name, ()):
+                topo(callee)
+            order.append(name)
+
+        topo(entry)
+        for name in reversed(order):        # callers before callees
+            m = mult.get(name, 0)
+            if m == 0:
+                continue
+            for callee, w in edges.get(name, ()):
+                mult[callee] += m * w
+        return dict(mult)
+
+    # -- queries ---------------------------------------------------------------
+    def _shape_of(self, comp: Computation) -> Dict[str, str]:
+        return {name: rhs for name, rhs in comp.instructions}
+
+    def dot_flops(self) -> float:
+        """2 * prod(result dims) * prod(contracting dims) per dot, x multiplier."""
+        total = 0.0
+        for cname, comp in self.computations.items():
+            m = self.multipliers.get(cname, 0)
+            if m == 0:
+                continue
+            shapes = {}
+            for rname, rhs in comp.instructions:
+                dt, dims = _parse_shape(rhs)
+                if dt is not None:
+                    shapes[rname] = dims
+            for rname, rhs in comp.instructions:
+                if " dot(" not in rhs and not rhs.startswith("dot("):
+                    continue
+                dt, rdims = _parse_shape(rhs)
+                if dt is None:
+                    continue
+                opm = re.search(r"dot\(([^)]*)\)", rhs)
+                contracting = 1
+                if opm:
+                    ops = [o.strip().lstrip("%") for o in opm.group(1).split(",")]
+                    lm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                    if ops and lm and ops[0] in shapes:
+                        lhs_dims = shapes[ops[0]]
+                        for d in lm.group(1).split(","):
+                            if d:
+                                contracting *= lhs_dims[int(d)]
+                res = 1
+                for d in rdims:
+                    res *= d
+                total += 2.0 * res * contracting * m
+        return total
+
+    def collective_bytes(self) -> Tuple[float, Dict[str, float]]:
+        total = 0.0
+        by_kind: Dict[str, float] = defaultdict(float)
+        for cname, comp in self.computations.items():
+            m = self.multipliers.get(cname, 0)
+            if m == 0:
+                continue
+            for rname, rhs in comp.instructions:
+                for kind in _COLLECTIVES:
+                    token = f" {kind}(" if not rhs.startswith(kind) else f"{kind}("
+                    if rhs.startswith(f"{kind}(") or f" {kind}(" in rhs or f"{kind}-start(" in rhs:
+                        if f"{kind}-done" in rhs:
+                            break
+                        b = _shape_bytes(rhs.split("(")[0]) * m
+                        total += b
+                        by_kind[kind] += b
+                        break
+        return total, dict(by_kind)
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS + HBM-byte accounting
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg, shape, n_layers_attn_quadratic: bool = True) -> float:
+    """6*N*D train / 2*N*D per-token decode, + attention score FLOPs."""
+    from repro.configs.base import ModelConfig, ShapeConfig
+    N_active = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        flops = 6.0 * N_active * tokens
+        flops += _attn_flops(cfg, B, S, causal=True) * 3.0   # fwd + 2x bwd
+    elif shape.kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * N_active * tokens
+        flops += _attn_flops(cfg, B, S, causal=True)
+    else:  # decode: one token against an S-long context
+        flops = 2.0 * N_active * B
+        flops += _attn_decode_flops(cfg, B, S)
+    return flops
+
+
+def _attn_flops(cfg, B, S, causal: bool) -> float:
+    if cfg.family == "ssm":
+        # selective scan: ~ 6 * di * N flops per token per layer
+        return 6.0 * cfg.d_inner * cfg.ssm_state * B * S * cfg.n_layers
+    factor = 0.5 if causal else 1.0
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        ssm = 6.0 * cfg.d_inner * cfg.ssm_state * B * S * cfg.n_layers
+        win = min(cfg.sliding_window or S, S)
+        attn = 4.0 * B * S * win * cfg.n_heads * cfg.head_dim_ * n_attn * factor
+        return ssm + attn
+    L = cfg.n_layers + getattr(cfg, "n_enc_layers", 0)
+    return 4.0 * B * S * S * cfg.n_heads * cfg.head_dim_ * L * factor
+
+
+def _attn_decode_flops(cfg, B, S) -> float:
+    if cfg.family == "ssm":
+        return 6.0 * cfg.d_inner * cfg.ssm_state * B * cfg.n_layers
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        win = min(cfg.sliding_window or S, S)
+        return (6.0 * cfg.d_inner * cfg.ssm_state * B * cfg.n_layers +
+                4.0 * B * win * cfg.n_heads * cfg.head_dim_ * n_attn)
+    return 4.0 * B * S * cfg.n_heads * cfg.head_dim_ * cfg.n_layers
+
+
+def hbm_bytes(cfg, shape, n_micro: int = 1) -> float:
+    """Per-step global HBM traffic estimate (see EXPERIMENTS.md §Roofline for
+    the formula).  Sharding spreads this evenly, so the per-chip term divides
+    by the chip count."""
+    N = cfg.param_count()
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    if shape.kind == "train":
+        params = 2.0 * N * 2          # bf16 read in fwd + bwd
+        opt = 4.0 * N * 4 + 2.0 * N * 4   # m,v read+write f32; grads write/read
+        act_ckpt = 2.0 * 2 * B * S * D * cfg.n_layers   # write+read layer inputs
+        logits = 2.0 * B * S * cfg.vocab_size * 2 / max(n_micro, 1) * n_micro
+        return params + opt + act_ckpt + logits
+    if shape.kind == "prefill":
+        params = 2.0 * N
+        act = 2.0 * 2 * B * S * D * cfg.n_layers
+        kv = kv_cache_bytes(cfg, B, S)
+        return params + act + kv
+    # decode: params once + read the whole cache
+    return 2.0 * N + kv_cache_bytes(cfg, B, S)
+
+
+def kv_cache_bytes(cfg, B, S) -> float:
+    if cfg.family == "ssm":
+        return B * cfg.n_layers * (cfg.d_inner * cfg.ssm_state * 4 +
+                                   (cfg.d_conv - 1) * cfg.d_inner * 2)
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_every
+        ssm = B * cfg.n_layers * (cfg.d_inner * cfg.ssm_state * 4 +
+                                  (cfg.d_conv - 1) * cfg.d_inner * 2)
+        win = min(cfg.sliding_window or S, S)
+        return ssm + 2.0 * B * win * cfg.n_kv_heads * cfg.head_dim_ * n_attn * 2
+    L = cfg.n_layers
+    kv = 2.0 * B * S * cfg.n_kv_heads * cfg.head_dim_ * L * 2
+    if cfg.family == "encdec":
+        kv += 2.0 * B * cfg.enc_seq * cfg.n_kv_heads * cfg.head_dim_ * L * 2
+    return kv
+
+
+# ---------------------------------------------------------------------------
+# the three terms
+# ---------------------------------------------------------------------------
+
+def terms(flops: float, hbm: float, coll_bytes_per_chip: float, chips: int) -> Dict[str, float]:
+    compute = flops / (chips * PEAK_FLOPS)
+    memory = hbm / (chips * HBM_BW)
+    collective = coll_bytes_per_chip / ICI_BW     # already per-chip from SPMD HLO
+    dominant = max(("compute", compute), ("memory", memory),
+                   ("collective", collective), key=lambda kv: kv[1])[0]
+    return {"compute_s": compute, "memory_s": memory, "collective_s": collective,
+            "dominant": dominant}

@@ -1,0 +1,38 @@
+"""Serving: prefill + batched greedy/temperature decode loop."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def make_decode_step(model):
+    @jax.jit
+    def step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+    return step
+
+
+def greedy_generate(model, params, prompt_tokens, max_new: int, max_len: int = 0,
+                    extra_batch=None):
+    """prompt_tokens: (B, S0) int32.  Returns (B, S0 + max_new).
+    extra_batch: additional prefill inputs (e.g. whisper's enc_frames)."""
+    B, S0 = prompt_tokens.shape
+    max_len = max_len or (S0 + max_new)
+    batch = {"tokens": prompt_tokens, **(extra_batch or {})}
+    logits, cache = jax.jit(model.prefill)(params, batch)
+    # prefill caches have length S0; pad the KV caches to max_len
+    def pad_time(path_x):
+        return path_x
+    cache = jax.tree.map(
+        lambda a: jnp.pad(a, [(0, 0)] * 2 + [(0, max_len - a.shape[2])] + [(0, 0)] * (a.ndim - 3))
+        if a.ndim >= 3 and a.shape[2] == S0 else a, cache)
+    step = make_decode_step(model)
+    tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+    out = [prompt_tokens, tok]
+    for i in range(max_new - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(S0 + i))
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,74 @@
+"""Train step factory: loss -> grads (optionally microbatched) -> AdamW.
+
+Microbatching: the global batch is reshaped to (n_micro, B/n_micro, S) and a
+`lax.scan` accumulates fp32 grads.  This (a) bounds activation memory — each
+remat checkpoint holds only the microbatch slice — and (b) lets XLA overlap
+the per-microbatch gradient reduce-scatter with the next microbatch's compute
+(the standard grad-accumulation overlap; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+def split_microbatches(batch: Dict[str, Any], n_micro: int) -> Dict[str, Any]:
+    def r(x):
+        b = x.shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+        return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(model, opt_cfg: adamw.AdamWConfig, n_micro: int = 1,
+                    param_constraint=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    param_constraint: optional pytree of NamedShardings.  When set, params are
+    re-constrained (e.g. from FSDP to TP-only sharding) ONCE at the top of the
+    step, so the microbatch scan reuses one weight all-gather instead of
+    re-gathering every microbatch — and the gradient reduce-scatter back to
+    the FSDP layout also happens once (§Perf hillclimb H1).
+    """
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb)
+
+    def grads_of(params, batch):
+        if param_constraint is not None:
+            params = jax.lax.with_sharding_constraint(params, param_constraint)
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        mbs = split_microbatches(batch, n_micro)
+
+        def body(carry, mb):
+            loss_acc, g_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            g_acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return (loss_acc + loss, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), _ = jax.lax.scan(body, (jnp.zeros(()), g0), mbs)
+        inv = 1.0 / n_micro
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = grads_of(params, batch)
+        params, opt_state, metrics = adamw.update(opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params, batch):
+        return model.loss(params, batch)
+    return eval_step

@@ -1,0 +1,12 @@
+import zlib
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng(request):
+    """Per-test deterministic generator: seeding by test name decouples the
+    data each test sees from which other tests ran (no suite-order flakes)."""
+    seed = zlib.crc32(request.node.nodeid.encode()) & 0x7FFFFFFF
+    return np.random.default_rng(seed)

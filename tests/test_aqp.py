@@ -1,0 +1,82 @@
+"""AQP queries on KDE synopses (paper §4.3, eqs. 9-11): closed form vs
+quadrature, accuracy vs exact answers, invariants, mergeability."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (KDESynopsis, count_1d, count_1d_numeric, count_box_diag,
+                        sum_1d, sum_1d_numeric)
+from repro.data import TelemetryStore
+
+
+def test_closed_form_equals_quadrature(rng):
+    x = jnp.asarray(rng.normal(0, 2, 500).astype(np.float32))
+    h = jnp.float32(0.3)
+    a, b = jnp.float32(-1.0), jnp.float32(2.5)
+    assert float(count_1d(x, h, a, b)) == pytest.approx(
+        float(count_1d_numeric(x, h, a, b)), rel=1e-3)
+    assert float(sum_1d(x, h, a, b)) == pytest.approx(
+        float(sum_1d_numeric(x, h, a, b)), rel=2e-3)
+
+
+def test_count_accuracy_vs_exact(rng):
+    data = rng.normal(10.0, 3.0, 20000).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=2048)
+    for a, b in [(7.0, 13.0), (4.0, 10.0), (12.0, 20.0)]:
+        approx = float(syn.count(a, b))
+        exact = float(((data >= a) & (data <= b)).sum())
+        assert approx == pytest.approx(exact, rel=0.08), (a, b)
+
+
+def test_sum_avg_accuracy(rng):
+    data = rng.gamma(4.0, 2.0, 20000).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=2048)
+    sel = (data >= 5.0) & (data <= 12.0)
+    assert float(syn.sum(5.0, 12.0)) == pytest.approx(float(data[sel].sum()), rel=0.12)
+    assert float(syn.avg(5.0, 12.0)) == pytest.approx(float(data[sel].mean()), rel=0.05)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 50), b=st.floats(-1.0, 3.0))
+def test_count_bounds_and_monotonicity(seed, b):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1, 256).astype(np.float32))
+    h = jnp.float32(0.4)
+    c1 = float(count_1d(x, h, jnp.float32(-10.0), jnp.float32(b)))
+    c2 = float(count_1d(x, h, jnp.float32(-10.0), jnp.float32(b + 0.5)))
+    assert -1e-3 <= c1 <= 256 * (1 + 1e-4)
+    assert c2 >= c1 - 1e-4                       # monotone in the upper bound
+
+
+def test_multid_box_count(rng):
+    data = rng.normal(0, 1, (8000, 2)).astype(np.float32)
+    h = jnp.asarray([0.15, 0.15], jnp.float32)
+    approx = float(count_box_diag(jnp.asarray(data), h,
+                                  jnp.asarray([-1.0, -1.0], jnp.float32),
+                                  jnp.asarray([1.0, 1.0], jnp.float32)))
+    exact = float(((np.abs(data) <= 1.0).all(axis=1)).sum())
+    assert approx == pytest.approx(exact, rel=0.08)
+
+
+def test_lscv_H_synopsis_box(rng):
+    data = rng.normal(0, 1, (3000, 2)).astype(np.float32)
+    data[:, 1] = 0.5 * data[:, 0] + 0.9 * data[:, 1]
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="lscv_H", max_sample=512)
+    approx = float(syn.count_box([-1.0, -1.0], [1.0, 1.0]))
+    inbox = ((data >= -1) & (data <= 1)).all(axis=1).sum()
+    assert approx == pytest.approx(float(inbox), rel=0.2)
+
+
+def test_telemetry_store_and_merge(rng):
+    s1 = TelemetryStore(capacity=512, seed=1)
+    s2 = TelemetryStore(capacity=512, seed=2)
+    a = rng.normal(0, 1, 4000).astype(np.float32)
+    b = rng.normal(2, 1, 4000).astype(np.float32)
+    s1.add_batch({"loss": a})
+    s2.add_batch({"loss": b})
+    merged = s1.merge(s2)
+    frac = merged.fraction("loss", -10.0, 1.0, selector="silverman")
+    exact = float((np.concatenate([a, b]) <= 1.0).mean())
+    assert frac == pytest.approx(exact, abs=0.08)
+    assert merged.columns["loss"].n_seen == 8000

@@ -1,0 +1,43 @@
+"""Dry-run machinery on a reduced placeholder mesh (subprocess so the main
+test process keeps its single CPU device).  The full 512-device sweep is run
+by `python -m repro.launch.dryrun --all [--multi-pod]` (EXPERIMENTS.md)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+CELLS = [
+    ("llama3.2-1b", "train_4k", "4,2"),
+    ("granite-moe-1b-a400m", "decode_32k", "4,2"),
+    ("falcon-mamba-7b", "long_500k", "2,2,2"),     # multi-pod axes
+    ("whisper-base", "prefill_32k", "2,2,2"),
+]
+
+
+@pytest.mark.parametrize("arch,shape,mesh", CELLS)
+def test_dryrun_cell_small_mesh(arch, shape, mesh, tmp_path):
+    out = tmp_path / "dry.jsonl"
+    env = dict(os.environ, PYTHONPATH="src",
+               REPRO_DRYRUN_DEVICES=str(eval(mesh.replace(",", "*"))))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh-shape", mesh, "--out", str(out)],
+        capture_output=True, text=True, cwd="/root/repo", timeout=560, env=env)
+    assert r.returncode == 0, (r.stdout[-1000:], r.stderr[-2000:])
+    rec = json.loads(out.read_text().splitlines()[-1])
+    assert rec["ok"], rec
+    assert rec["hlo_dot_flops_per_dev"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert rec["memory"]["temp_gb_per_dev"] > 0
+
+
+def test_long_500k_skips_full_attention():
+    from repro.configs.base import cell_runnable
+    ok, why = cell_runnable("llama3.2-1b", "long_500k")
+    assert not ok and "full-attention" in why
+    ok, _ = cell_runnable("falcon-mamba-7b", "long_500k")
+    assert ok
+    ok, _ = cell_runnable("zamba2-1.2b", "long_500k")
+    assert ok

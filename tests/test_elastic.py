@@ -1,0 +1,43 @@
+"""Elastic re-meshing + straggler detection logic."""
+import pytest
+
+from repro.checkpoint import ElasticController, StragglerMonitor, plan_mesh
+
+
+def test_plan_mesh_prefers_big_tp():
+    assert plan_mesh(256, tp_divisor_of=(8192, 1280)) == (16, 16)
+    assert plan_mesh(128, tp_divisor_of=(8192, 1280)) == (8, 16)
+
+
+def test_plan_mesh_respects_divisors():
+    # model dims divisible only by 4 -> tp capped at 4
+    data, tp = plan_mesh(64, tp_divisor_of=(12, 20))
+    assert tp == 4 and data == 16
+
+
+def test_elastic_controller_failure_replans():
+    ec = ElasticController(n_hosts=64, devices_per_host=4, tp_divisor_of=(8192,))
+    assert ec.current_mesh() == (16, 16)
+    data, tp = ec.fail(step=100, hosts=[0, 1, 2, 3])       # lose 16 devices
+    assert data * tp <= 240
+    assert tp == 16
+    assert len(ec.events) == 1
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(k_sigma=2.0, patience=3)
+    for step in range(20):
+        for h in range(8):
+            mon.record(h, 1.0 + (2.5 if h == 5 and step > 5 else 0.0))
+        if step > 5:
+            mon.update_strikes()
+    assert 5 in mon.stragglers()
+    assert all(h not in mon.stragglers() for h in range(5))
+
+
+def test_straggler_monitor_recovers():
+    mon = StragglerMonitor(k_sigma=2.0, patience=2)
+    for _ in range(10):
+        for h in range(4):
+            mon.record(h, 1.0)
+    assert mon.stragglers() == []

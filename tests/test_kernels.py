@@ -1,0 +1,81 @@
+"""Per-kernel shape/dtype sweeps: every Pallas kernel vs its ref.py oracle
+(interpret mode on CPU), plus the Appendix-A triangle index math."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.triangle import bx_to_ql, n_tri_tiles, ql_to_bx
+
+
+@settings(max_examples=30, deadline=None)
+@given(bx=st.integers(0, 10_000_000))
+def test_triangle_roundtrip(bx):
+    q, l = bx_to_ql(jnp.asarray([bx]))
+    assert int(ql_to_bx(q, l)[0]) == bx
+    assert 0 <= int(q[0]) <= int(l[0])
+
+
+@pytest.mark.parametrize("n", [5, 64, 257, 1000])
+@pytest.mark.parametrize("kind", ["k4", "k6", "gauss"])
+def test_pairwise_ksum(n, kind):
+    # dedicated per-case generator: K^(6) pair sums can cancel towards zero,
+    # so the comparison needs deterministic data + a |sum|-scaled atol.
+    local = np.random.default_rng(1234 + n)
+    x = jnp.asarray(local.normal(0, 1, n).astype(np.float32))
+    g = jnp.float32(0.4)
+    a = ops.pairwise_scaled_ksum(x, g, kind=kind, tile=64)
+    b = ref.pairwise_scaled_ksum(x, g, kind)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4,
+                               atol=max(1e-5, 1e-6 * n))
+
+
+@pytest.mark.parametrize("n,d", [(9, 1), (64, 2), (130, 5), (300, 16)])
+@pytest.mark.parametrize("alg", ["paper", "mxu"])
+def test_sv_matrix(rng, n, d, alg):
+    x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    m0 = rng.normal(0, 1, (d, d)).astype(np.float32)
+    m = jnp.asarray(0.2 * (m0 @ m0.T) + np.eye(d, dtype=np.float32))
+    a = ops.sv_matrix(x, m, tile=64, algorithm=alg)
+    b = ref.sv_matrix(x, m)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,d", [(40, 2), (222, 4), (513, 8)])
+def test_gh_fused(rng, n, d):
+    x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    m0 = rng.normal(0, 1, (d, d)).astype(np.float32)
+    m = jnp.asarray(0.1 * (m0 @ m0.T) + np.eye(d, dtype=np.float32))
+    a = ops.gh_fused_sum(x, m, 0.31, 0.17, tile=64)
+    b = ref.gh_fused_sum(x, m, 0.31, 0.17)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,d,n_h", [(100, 2, 5), (257, 3, 13)])
+def test_lscv_grid(rng, n, d, n_h):
+    x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    m0 = rng.normal(0, 1, (d, d)).astype(np.float32)
+    m = jnp.asarray(0.1 * (m0 @ m0.T) + np.eye(d, dtype=np.float32))
+    hg = jnp.linspace(0.3, 2.0, n_h).astype(jnp.float32)
+    a = ops.lscv_grid_sums(x, m, hg, 0.3, 0.2, tile=64, h_tile=4)
+    b = ref.lscv_grid_sums(x, m, hg, 0.3, 0.2)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("m,n,d", [(3, 17, 1), (65, 64, 2), (128, 500, 8)])
+def test_kde_eval(rng, m, n, d):
+    pts = jnp.asarray(rng.normal(0, 1, (m, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+    a = ops.kde_eval(pts, x, jnp.float32(0.6), tile=64)
+    b = ref.kde_eval(pts, x, jnp.float32(0.6))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=1e-7)
+
+
+def test_kernels_match_at_tile_boundaries(rng):
+    """Exercise n == tile, n == tile+1, n == 2*tile-1 edge shapes."""
+    for n in [64, 65, 127, 128]:
+        x = jnp.asarray(rng.normal(0, 1, n).astype(np.float32))
+        a = ops.pairwise_scaled_ksum(x, jnp.float32(0.5), kind="k4", tile=64)
+        b = ref.pairwise_scaled_ksum(x, jnp.float32(0.5), "k4")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-4, atol=1e-5)

@@ -1,0 +1,124 @@
+"""Per-architecture smoke tests (assignment requirement) + model invariants:
+one forward/train step on CPU with a reduced same-family config, asserting
+output shapes and no NaNs; prefill/decode consistency; MoE dispatch bounds."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import batch_struct, build_model, param_structs
+from repro.models.moe import moe_block, moe_params
+
+
+def _smoke_batch(cfg, B=2, S=64):
+    batch = {"tokens": jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.ones((B, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = jnp.ones((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _smoke_batch(cfg)
+    logits = jax.jit(model.apply)(params, batch)
+    S_total = batch["tokens"].shape[1] + (cfg.n_vision_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (2, S_total, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, max_len = 2, 32
+    cache = model.init_cache(B, max_len)
+    tok = jnp.ones((B, 1), jnp.int32)
+    logits, cache2 = jax.jit(model.decode_step)(params, cache, tok, jnp.int32(0))
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # cache pytree structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "falcon-mamba-7b", "zamba2-1.2b",
+                                  "whisper-base"])
+def test_prefill_decode_matches_full_forward(arch):
+    """logits from (prefill S tokens, then decode token S) must match the
+    teacher-forced forward on S+1 tokens at position S."""
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    B, S = 2, 16
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)
+    batch_full = {"tokens": toks}
+    batch_prefix = {"tokens": toks[:, :S]}
+    if cfg.family == "encdec":
+        frames = jnp.asarray(rng.normal(0, 1, (B, cfg.enc_seq, cfg.d_model)), jnp.bfloat16)
+        batch_full["enc_frames"] = frames
+        batch_prefix["enc_frames"] = frames
+
+    full_logits = model.apply(params, batch_full)                # (B, S+1, V)
+    pre_logits, cache = model.prefill(params, batch_prefix)
+    # pad time axis of KV caches from S to S+1 where applicable
+    cache = jax.tree.map(
+        lambda a: jnp.pad(a, [(0, 0)] * 2 + [(0, 1)] + [(0, 0)] * (a.ndim - 3))
+        if a.ndim >= 3 and a.shape[2] == S else a, cache)
+    step_logits, _ = model.decode_step(params, cache, toks[:, S:S + 1], jnp.int32(S))
+
+    # bf16 params: the single-step decode path accumulates in a different
+    # order than the full-sequence scan; tolerances sized to bf16 eps.
+    np.testing.assert_allclose(np.asarray(pre_logits[:, -1], np.float32),
+                               np.asarray(full_logits[:, S - 1], np.float32),
+                               rtol=5e-2, atol=6e-2)
+    np.testing.assert_allclose(np.asarray(step_logits[:, 0], np.float32),
+                               np.asarray(full_logits[:, S], np.float32),
+                               rtol=5e-2, atol=6e-2)
+
+
+def test_moe_dispatch_capacity_and_gates():
+    from repro.configs.base import get_config
+    cfg = get_config("granite-moe-1b-a400m", smoke=True)
+    p = moe_params(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 32, cfg.d_model), jnp.float32)
+    out = moe_block(p, x, cfg)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out)).all()
+    # with capacity_factor >= 1 and uniform-ish routing, output is non-trivial
+    assert float(jnp.mean(jnp.abs(out))) > 0
+
+
+def test_vlm_loss_masks_image_positions():
+    cfg = get_config("internvl2-2b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _smoke_batch(cfg)
+    loss = float(model.loss(params, batch))
+    # loss over text tokens only: finite and ~ log(padded vocab) at init
+    assert 0 < loss < np.log(cfg.padded_vocab) + 2.0
+
+
+def test_sliding_window_attention_limits_context():
+    """hybrid apply(window=w) must equal apply() when w >= S, differ when small."""
+    cfg = get_config("zamba2-1.2b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = _smoke_batch(cfg, B=1, S=48)
+    a = np.asarray(model.apply(params, batch), np.float32)
+    b = np.asarray(model.apply(params, batch, window=64), np.float32)
+    c = np.asarray(model.apply(params, batch, window=4), np.float32)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+    assert np.abs(a - c).max() > 1e-4

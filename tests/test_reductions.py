@@ -1,0 +1,82 @@
+"""Parallel reduction primitives (paper §5.2-5.5) vs numpy float64."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gaussian as G
+from repro.core.reductions import (kahan_sum, map_reduce, pairwise_quadform_reduce,
+                                   pairwise_reduce, pairwise_sv_matrix, reduce_sum)
+
+
+def test_map_reduce(rng):
+    x = rng.normal(0, 1, 10_000).astype(np.float32)
+    got = float(map_reduce(lambda v: v * v + 1.0, jnp.asarray(x), chunk=777))
+    want = float((x.astype(np.float64) ** 2 + 1).sum())
+    assert got == pytest.approx(want, rel=1e-5)
+
+
+@pytest.mark.parametrize("n,chunk", [(10, 4), (100, 32), (1000, 256), (1001, 256)])
+def test_pairwise_reduce(rng, n, chunk):
+    x = rng.normal(0, 1, n).astype(np.float32)
+    got = float(pairwise_reduce(lambda d: G.k4(d / 0.5), jnp.asarray(x), chunk=chunk))
+    d = (x[:, None] - x[None, :]) / 0.5
+    x2 = d.astype(np.float64) ** 2
+    k4 = (x2 ** 2 - 6 * x2 + 3) * np.exp(-x2 / 2) / np.sqrt(2 * np.pi)
+    want = float(k4[np.triu_indices(n, 1)].sum())
+    assert got == pytest.approx(want, rel=1e-3, abs=1e-4)
+
+
+def test_pairwise_quadform(rng):
+    n, d = 123, 4
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    m0 = rng.normal(0, 1, (d, d)).astype(np.float32)
+    m = 0.2 * m0 @ m0.T + np.eye(d, dtype=np.float32)
+    got = float(pairwise_quadform_reduce(lambda s: jnp.exp(-s), jnp.asarray(x),
+                                         jnp.asarray(m), chunk=32))
+    v = x[:, None, :] - x[None, :, :]
+    s = np.einsum("ijd,de,ije->ij", v, m, v)
+    want = float(np.exp(-s)[np.triu_indices(n, 1)].sum())
+    assert got == pytest.approx(want, rel=1e-3)
+
+
+def test_sv_matrix_masked(rng):
+    n, d = 50, 3
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    m = np.eye(d, dtype=np.float32)
+    s = np.asarray(pairwise_sv_matrix(jnp.asarray(x), jnp.asarray(m), chunk=16))
+    assert (s[np.tril_indices(n)] == 0).all()      # strict upper triangle only
+    v = x[:, None, :] - x[None, :, :]
+    want = np.einsum("ijd,ijd->ij", v, v)
+    np.testing.assert_allclose(s[np.triu_indices(n, 1)],
+                               want[np.triu_indices(n, 1)], rtol=1e-4, atol=1e-5)
+
+
+def test_kahan_beats_naive_on_adversarial():
+    """Classic compensation case: 1 + 1e-8 * 1e6.  A naive fp32 fold loses
+    every small addend (1e-8 < ulp(1)); Kahan's running compensation keeps
+    them (paper §5.2 accuracy discussion, refs [17]/[22])."""
+    x = jnp.asarray(np.array([1.0] + [1e-8] * 1_000_000, np.float32))
+    exact = 1.0 + 1e-8 * 1_000_000          # = 1.01
+
+    def naive_fold(a):
+        def body(c, v):
+            return c + v, None
+        s, _ = __import__("jax").lax.scan(body, jnp.float32(0.0), a)
+        return float(s)
+
+    naive = naive_fold(x)
+    k = float(kahan_sum(x))
+    assert abs(naive - exact) > 5e-3         # naive drops the tail
+    assert k == pytest.approx(exact, abs=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99))
+def test_pairwise_permutation_invariance(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, 128).astype(np.float32)
+    f = lambda d: G.phi(d / 0.7)
+    a = float(pairwise_reduce(f, jnp.asarray(x), chunk=32))
+    b = float(pairwise_reduce(f, jnp.asarray(rng.permutation(x)), chunk=32))
+    assert a == pytest.approx(b, rel=1e-4)

@@ -11,7 +11,7 @@ import sys
 import time
 
 SUITES = ("paper_validation", "plugin", "lscv_h", "lscv_H", "table3",
-          "kernels", "roofline", "serving")
+          "kernels", "aqp_batch", "roofline", "serving")
 
 
 def main() -> None:

@@ -46,6 +46,22 @@ def main():
     inbox = ((joint >= lo) & (joint <= hi)).all(axis=1).sum()
     print(f"COUNT(box) ~ {float(syn2.count_box(lo, hi)):,.0f} exact {inbox:,}")
 
+    print("\n== batched query engine: 1000 mixed queries, one pass/column ==")
+    import time
+    from repro.launch.serve import make_query_mix
+    store = TelemetryStore(capacity=2048, seed=0)
+    store.add_batch({"amount": amount, "latency": latency})
+    queries = make_query_mix(1000, {"amount": (50.0, 1000.0),
+                                    "latency": (20.0, 250.0)}, seed=11)
+    store.query_batch(queries)                # warm-up: fit synopses + compile
+    t0 = time.perf_counter()
+    answers = store.query_batch(queries)
+    dt = time.perf_counter() - t0
+    print(f"answered {len(queries)} queries in {dt * 1e3:.1f} ms "
+          f"({len(queries) / dt:,.0f} queries/s)")
+    for q, ans in list(zip(queries, answers))[:3]:
+        print(f"  {q.op.upper():5s}({q.column}) [{q.a:7.1f}, {q.b:7.1f}] ~= {ans:,.1f}")
+
     print("\n== mergeable synopses across 4 'hosts' ==")
     stores = []
     for h in range(4):

@@ -8,13 +8,15 @@ Public API:
   distributed.*                                  — multi-chip selectors (beyond paper)
   binned.*                                       — binned/FFT variants (§2.2)
 """
-from .aqp import KDESynopsis, count_1d, count_1d_numeric, count_box_diag, sum_1d, sum_1d_numeric
+from .aqp import (KDESynopsis, Query, QueryBatch, batch_query_1d, count_1d,
+                  count_1d_numeric, count_box_diag, sum_1d, sum_1d_numeric)
 from .kde import kde_eval, kde_eval_H, silverman_h
 from .lscv import LSCVHResult, LSCVhResult, g_of_H, lscv_H, lscv_h
 from .plugin import PluginResult, plugin_bandwidth, plugin_bandwidth_sequential
 
 __all__ = [
-    "KDESynopsis", "count_1d", "count_1d_numeric", "count_box_diag", "sum_1d",
+    "KDESynopsis", "Query", "QueryBatch", "batch_query_1d",
+    "count_1d", "count_1d_numeric", "count_box_diag", "sum_1d",
     "sum_1d_numeric", "kde_eval", "kde_eval_H", "silverman_h", "LSCVHResult",
     "LSCVhResult", "g_of_H", "lscv_H", "lscv_h", "PluginResult",
     "plugin_bandwidth", "plugin_bandwidth_sequential",

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 from . import gaussian as G
 from .lscv import h_grid_for
 from .reductions import pairwise_reduce
@@ -50,7 +52,7 @@ def _strided_pairwise_partial(fun: Callable, x: jax.Array, p: jax.Array, n_dev: 
     nsteps = (rows_per_dev + pad_rows) // c
     acc0 = jnp.zeros((), x.dtype)
     if axes:  # carry is device-varying inside shard_map (jax>=0.7 vma typing)
-        acc0 = jax.lax.pvary(acc0, axes)
+        acc0 = compat.pvary(acc0, axes)
     acc, _ = jax.lax.scan(body, acc0, jnp.arange(nsteps))
     return acc
 
@@ -66,7 +68,7 @@ def sharded_pairwise_reduce(fun: Callable, x: jax.Array, mesh: Mesh,
         partial_sum = _strided_pairwise_partial(fun, x_rep, p, n_dev, chunk, axes)
         return jax.lax.psum(partial_sum, axes)
 
-    f = jax.shard_map(shard_fn, mesh=mesh, in_specs=P(), out_specs=P())
+    f = compat.shard_map(shard_fn, mesh=mesh, in_specs=P(), out_specs=P())
     return f(x)
 
 
@@ -131,11 +133,11 @@ def sharded_lscv_h_grid(x: jax.Array, sigma_inv: jax.Array, h_grid: jax.Array,
             contrib = jax.lax.map(per_hc, (hg2, hg4)).reshape(-1)[:n_h]
             return acc + contrib, None
 
-        acc0 = jax.lax.pvary(jnp.zeros((n_h,), x.dtype), axes)
+        acc0 = compat.pvary(jnp.zeros((n_h,), x.dtype), axes)
         acc, _ = jax.lax.scan(body, acc0, jnp.arange(nsteps))
         return jax.lax.psum(acc, axes)
 
-    f = jax.shard_map(shard_fn, mesh=mesh, in_specs=(P(), P(), P()), out_specs=P())
+    f = compat.shard_map(shard_fn, mesh=mesh, in_specs=(P(), P(), P()), out_specs=P())
     return f(x, inv2, inv4)
 
 

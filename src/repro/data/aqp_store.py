@@ -8,64 +8,171 @@ AVG over a range, quantile-ish fractions) are answered from the synopsis in
 O(sample) instead of O(history) — and the synopsis is *mergeable* across hosts
 (reservoir union), which is the property that makes this usable on a
 1000-node fleet where no host sees the global stream.
+
+Fitting a synopsis is the expensive step (bandwidth selection is O(sample^2)
+for LSCV), so the store memoises fitted synopses in a `SynopsisCache` keyed by
+(column, selector, reservoir version); any reservoir update bumps the version
+and invalidates stale entries on the next lookup.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+import copy
+import zlib
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.aqp import KDESynopsis
+from repro.core.aqp import KDESynopsis, Query, QueryBatch
 
 
 class Reservoir:
-    """Algorithm-R reservoir sample with deterministic RNG."""
+    """Algorithm-R reservoir sample with deterministic RNG.
+
+    `version` counts accepted updates; synopsis caches key on it so any new
+    data invalidates derived synopses.
+    """
 
     def __init__(self, capacity: int = 4096, seed: int = 0):
         self.capacity = capacity
         self.rng = np.random.default_rng(seed)
         self.buf = np.empty((capacity,), np.float32)
         self.n_seen = 0
+        self.n_filled = 0      # initialized buffer slots; < capacity after a
+        self.version = 0       # merge of reservoirs with smaller samples
 
     def add(self, values: np.ndarray) -> None:
-        for v in np.asarray(values, np.float32).ravel():
-            if self.n_seen < self.capacity:
-                self.buf[self.n_seen] = v
-            else:
-                j = self.rng.integers(0, self.n_seen + 1)
-                if j < self.capacity:
-                    self.buf[j] = v
-            self.n_seen += 1
+        values = np.asarray(values, np.float32).ravel()
+        if values.size == 0:
+            return
+        self.version += 1
+        k = 0
+        if self.n_filled < self.capacity and self.n_seen == self.n_filled:
+            k = min(self.capacity - self.n_filled, values.size)
+            self.buf[self.n_filled: self.n_filled + k] = values[:k]
+            self.n_filled += k
+            self.n_seen += k
+        rest = values[k:]
+        if rest.size:
+            # Vectorised algorithm-R acceptance: one slot draw per element.
+            # Replacement stays bounded by n_filled — after a merge leaves
+            # n_filled < capacity with n_seen > n_filled, growing the sample
+            # would overweight new data; replacing keeps it uniform.
+            # Duplicate accepted slots: numpy fancy assignment keeps the last
+            # write, matching sequential application order.
+            stream_idx = self.n_seen + np.arange(rest.size)
+            j = self.rng.integers(0, stream_idx + 1)
+            accept = j < self.n_filled
+            self.buf[j[accept]] = rest[accept]
+            self.n_seen += rest.size
 
     def sample(self) -> np.ndarray:
-        return self.buf[: min(self.n_seen, self.capacity)].copy()
+        return self.buf[: self.n_filled].copy()
 
     def merge(self, other: "Reservoir") -> "Reservoir":
+        """Weighted union: each side contributes in proportion to the stream
+        size its sample represents (n_seen), not its retained-sample size —
+        otherwise chained cross-host merges skew the mixture (a second-level
+        merge would weight a single host as much as a pair of hosts)."""
         out = Reservoir(self.capacity, seed=int(self.rng.integers(1 << 31)))
-        both = np.concatenate([self.sample(), other.sample()])
-        self.rng.shuffle(both)
-        out.add(both)
-        out.n_seen = self.n_seen + other.n_seen
+        s1, s2 = self.sample(), other.sample()
+        total = self.n_seen + other.n_seen
+        if total == 0:
+            return out
+        w1 = self.n_seen / total
+        w2 = other.n_seen / total
+        # Cap the merged sample so the n_seen proportions are achievable from
+        # the retained points: k <= len(s_i) / w_i.  Without this, a side with
+        # few retained points but little stream weight would be forced in
+        # wholesale and dominate the sample.
+        k = min(self.capacity, len(s1) + len(s2))
+        if w1 > 0:
+            k = min(k, int(len(s1) / w1))
+        if w2 > 0:
+            k = min(k, int(len(s2) / w2))
+        take1 = int(out.rng.binomial(k, w1))
+        take1 = min(len(s1), max(take1, k - len(s2)))
+        take2 = k - take1
+        pick1 = out.rng.choice(len(s1), take1, replace=False) if take1 else []
+        pick2 = out.rng.choice(len(s2), take2, replace=False) if take2 else []
+        buf = np.concatenate([s1[pick1], s2[pick2]]).astype(np.float32)
+        out.rng.shuffle(buf)
+        out.buf[: len(buf)] = buf
+        out.n_filled = len(buf)
+        out.n_seen = total
+        out.version = 1
         return out
 
 
+class SynopsisCache:
+    """Memoises fitted synopses keyed by (column, selector, sample version).
+
+    One live entry per (column, selector): a lookup whose stored version
+    differs from the reservoir's current version is a miss and is replaced on
+    the next `put` — reservoir updates therefore invalidate implicitly.
+    Bounded by `max_entries` (FIFO eviction; entry count, not bytes).
+    """
+
+    def __init__(self, max_entries: int = 128):
+        self.max_entries = max_entries
+        self._entries: Dict[Tuple[str, str], Tuple[int, KDESynopsis]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, column: str, selector: str, version: int) -> Optional[KDESynopsis]:
+        ent = self._entries.get((column, selector))
+        if ent is not None and ent[0] == version:
+            self.hits += 1
+            return ent[1]
+        self.misses += 1
+        return None
+
+    def put(self, column: str, selector: str, version: int, syn: KDESynopsis) -> None:
+        key = (column, selector)
+        if key not in self._entries and len(self._entries) >= self.max_entries:
+            self._entries.pop(next(iter(self._entries)))
+        self._entries[key] = (version, syn)
+
+    def invalidate(self, column: Optional[str] = None) -> None:
+        if column is None:
+            self._entries.clear()
+        else:
+            for key in [k for k in self._entries if k[0] == column]:
+                self._entries.pop(key)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses, "entries": len(self._entries)}
+
+
 class TelemetryStore:
-    def __init__(self, capacity: int = 4096, seed: int = 0):
+    def __init__(self, capacity: int = 4096, seed: int = 0, cache_entries: int = 128):
         self.columns: Dict[str, Reservoir] = {}
         self.capacity = capacity
         self.seed = seed
+        self.cache = SynopsisCache(max_entries=cache_entries)
 
     def add_batch(self, stats: Dict[str, np.ndarray]) -> None:
         for name, values in stats.items():
             if name not in self.columns:
-                self.columns[name] = Reservoir(self.capacity, seed=self.seed + hash(name) % 1000)
+                # crc32, not hash(): Python string hashing is randomised per
+                # process, which would make the reservoirs nondeterministic.
+                col_seed = self.seed + zlib.crc32(name.encode()) % 1000
+                self.columns[name] = Reservoir(self.capacity, seed=col_seed)
             self.columns[name].add(values)
 
     def synopsis(self, column: str, selector: str = "plugin") -> KDESynopsis:
-        res = self.columns[column]
-        syn = KDESynopsis.fit(res.sample(), selector=selector,
-                              max_sample=self.capacity)
-        syn.n_source = res.n_seen
+        res = self.columns.get(column)
+        if res is None:
+            raise KeyError(f"unknown column {column!r}; "
+                           f"have {sorted(self.columns)}")
+        syn = self.cache.get(column, selector, res.version)
+        if syn is None:
+            syn = KDESynopsis.fit(res.sample(), selector=selector,
+                                  max_sample=self.capacity)
+            syn.n_source = res.n_seen
+            self.cache.put(column, selector, res.version, syn)
         return syn
 
     # -- queries ------------------------------------------------------------
@@ -79,11 +186,26 @@ class TelemetryStore:
         res = self.columns[column]
         return self.count(column, a, b, selector) / max(res.n_seen, 1)
 
+    def query_batch(self, queries: Sequence[Query], selector: str = "plugin",
+                    backend: str = "jnp") -> np.ndarray:
+        """Answer N heterogeneous queries (mixed ops/ranges/columns) with one
+        jitted pass per distinct column; synopses come from the cache."""
+        batch = QueryBatch(queries)
+        if None in batch.columns:
+            raise ValueError("every query must name a column when running "
+                             "against a TelemetryStore")
+        synopses = {col: self.synopsis(col, selector) for col in batch.columns}
+        return batch.run(synopses, backend=backend)
+
     def merge(self, other: "TelemetryStore") -> "TelemetryStore":
-        out = TelemetryStore(self.capacity, self.seed)
+        out = TelemetryStore(self.capacity, self.seed,
+                             cache_entries=self.cache.max_entries)
         for name in set(self.columns) | set(other.columns):
             if name in self.columns and name in other.columns:
                 out.columns[name] = self.columns[name].merge(other.columns[name])
             else:
-                out.columns[name] = (self.columns.get(name) or other.columns[name])
+                # deep copy: the merged store is a snapshot, so later updates
+                # to the source store must not leak into it through aliasing
+                out.columns[name] = copy.deepcopy(
+                    self.columns.get(name) or other.columns[name])
         return out

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 
+from . import aqp_batch as _ab
 from . import gh_fused as _gh
 from . import kde_eval as _kde
 from . import lscv_grid as _lg
@@ -36,3 +37,8 @@ def lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=_lg.TILE, h_tile=_lg.H_
 
 def kde_eval(points, x, h, tile=_kde.TILE):
     return _kde.kde_eval(points, x, h, tile=tile, interpret=INTERPRET)
+
+
+def aqp_batch_sums(x, h, a, b, tile=_ab.TILE, q_tile=_ab.Q_TILE):
+    return _ab.aqp_batch_sums(x, h, a, b, tile=tile, q_tile=q_tile,
+                              interpret=INTERPRET)

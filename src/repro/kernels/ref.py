@@ -6,6 +6,9 @@ sweeps.  These are O(n^2)-memory implementations — test scale only.
 """
 from __future__ import annotations
 
+import math
+
+import jax
 import jax.numpy as jnp
 
 from repro.core import gaussian as G
@@ -60,3 +63,18 @@ def kde_eval(points: jnp.ndarray, x: jnp.ndarray, h) -> jnp.ndarray:
     quad = 0.5 * jnp.sum(diff * diff, axis=-1)
     norm = (2.0 * math.pi) ** (-d / 2.0) * h ** (-d)
     return norm * jnp.mean(jnp.exp(-quad), axis=1)
+
+
+def aqp_batch_sums(x: jnp.ndarray, h, a: jnp.ndarray, b: jnp.ndarray):
+    """Unscaled closed-form integrals of eqs. 9-10 for a query batch.
+    x: (n,), a/b: (q,) -> (count_raw, sum_raw), each (q,)."""
+    sqrt1_2 = 1.0 / math.sqrt(2.0)
+    inv_sqrt_2pi = 1.0 / math.sqrt(2.0 * math.pi)
+    za = (a[:, None] - x[None, :]) / h                   # (q, n)
+    zb = (b[:, None] - x[None, :]) / h
+    d_Phi = 0.5 * (jax.scipy.special.erf(zb * sqrt1_2)
+                   - jax.scipy.special.erf(za * sqrt1_2))
+    d_phi = inv_sqrt_2pi * (jnp.exp(-0.5 * zb * zb) - jnp.exp(-0.5 * za * za))
+    count_raw = jnp.sum(d_Phi, axis=1)
+    sum_raw = jnp.sum(x[None, :] * d_Phi - h * d_phi, axis=1)
+    return count_raw, sum_raw

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import roofline
+from repro import compat
 from repro.configs.base import (ARCH_IDS, SHAPES, SHAPES_BY_NAME, cell_runnable,
                                 get_config)
 from repro.launch.mesh import dp_axes, make_production_mesh
@@ -205,7 +206,7 @@ def analyse_cell(arch: str, shape_name: str, mesh, *, n_micro=None,
     chips = meta["chips"]
 
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = compat.cost_analysis_dict(compiled)
     hlo = roofline.HloCostModel(compiled.as_text())
     dot_flops_dev = hlo.dot_flops()                      # per-device, trip-corrected
     coll_bytes_dev, coll_by_kind = hlo.collective_bytes()

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro import compat
+
 
 def spmd_pipeline(stage_fn, stage_params, xs, mesh: Mesh, axis: str = "pipe"):
     n_stages = mesh.shape[axis]
@@ -52,8 +54,8 @@ def spmd_pipeline(stage_fn, stage_params, xs, mesh: Mesh, axis: str = "pipe"):
             recv = jax.lax.ppermute(out, axis, perm)
             return recv, outs
 
-        recv0 = jax.lax.pvary(jnp.zeros(mb_shape, xs.dtype), (axis,))
-        outs0 = jax.lax.pvary(jnp.zeros_like(xs), (axis,))
+        recv0 = compat.pvary(jnp.zeros(mb_shape, xs.dtype), (axis,))
+        outs0 = compat.pvary(jnp.zeros_like(xs), (axis,))
         _, outs = jax.lax.fori_loop(0, ticks, tick, (recv0, outs0))
         # only the last stage holds real outputs; broadcast them to all
         # stages so the result is replicated (one psum).
@@ -61,6 +63,6 @@ def spmd_pipeline(stage_fn, stage_params, xs, mesh: Mesh, axis: str = "pipe"):
         return jax.lax.psum(outs * mask, axis)
 
     param_specs = jax.tree.map(lambda _: P(axis), stage_params)
-    f = jax.shard_map(shard_fn, mesh=mesh, in_specs=(param_specs, P()),
+    f = compat.shard_map(shard_fn, mesh=mesh, in_specs=(param_specs, P()),
                       out_specs=P())
     return f(stage_params, xs)

@@ -1,29 +1,30 @@
-"""Batched serving driver: prefill + greedy decode on a smoke config.
+"""Serving drivers.
+
+LM mode (default): prefill + greedy decode on a smoke config.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
         --batch 4 --prompt-len 16 --max-new 16
+
+AQP mode: stand up a TelemetryStore over synthetic telemetry columns and
+serve a mixed COUNT/SUM/AVG query batch through the batched engine
+(core/aqp.py QueryBatch) — one jitted pass per column, synopses cached.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode aqp \
+        --rows 200000 --queries 2000 --selector plugin
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 
-from repro.configs.base import ARCH_IDS, get_config
-from repro.models import build_model
-from repro.train import greedy_generate
+def run_lm(args) -> None:
+    import jax
+    import jax.numpy as jnp
 
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b", choices=list(ARCH_IDS))
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--max-new", type=int, default=16)
-    args = ap.parse_args()
+    from repro.configs.base import get_config
+    from repro.models import build_model
+    from repro.train import greedy_generate
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
@@ -37,6 +38,93 @@ def main() -> None:
     print(f"[serve] generated {out.shape} in {dt:.2f}s "
           f"({toks / dt:.1f} tok/s incl. compile)")
     print(out[0].tolist())
+
+
+def make_query_mix(n_queries: int, ranges, seed: int = 0):
+    """Deterministic mixed COUNT/SUM/AVG batch.  `ranges` maps column name
+    (or None for a single-synopsis batch) -> (lo, hi) sampling range.  Shared
+    by the serving mode, the AQP example, and the batch benchmark."""
+    import numpy as np
+
+    from repro.core import Query
+
+    rng = np.random.default_rng(seed)
+    columns = list(ranges)
+    ops = ["count", "sum", "avg"]
+    queries = []
+    for i in range(n_queries):
+        col = columns[i % len(columns)]
+        lo, hi = ranges[col]
+        a = float(rng.uniform(lo, hi))
+        b = float(rng.uniform(a, hi))
+        # independent draw, not i % 3: cycling op and column together would
+        # make every column's queries homogeneous when len(ranges) % 3 == 0
+        queries.append(Query(ops[int(rng.integers(3))], a, b, column=col))
+    return queries
+
+
+def run_aqp(args) -> None:
+    import numpy as np
+
+    from repro.data import TelemetryStore
+
+    rng = np.random.default_rng(0)
+    n = args.rows
+    telemetry = {
+        "loss": rng.gamma(3.0, 0.7, n).astype(np.float32),
+        "latency_ms": np.where(rng.random(n) < 0.8, rng.normal(40, 8, n),
+                               rng.normal(160, 30, n)).astype(np.float32),
+        "seq_len": rng.integers(16, 2048, n).astype(np.float32),
+    }
+    store = TelemetryStore(capacity=args.capacity, seed=0)
+    store.add_batch(telemetry)
+
+    columns = list(telemetry)
+    ranges = {c: (float(v.min()), float(v.max())) for c, v in telemetry.items()}
+    queries = make_query_mix(args.queries, ranges, seed=1)
+
+    # Warm-up fits the synopses (cache miss) and compiles the batched pass
+    # at the serving batch shape, so the timed run measures steady state.
+    store.query_batch(queries, selector=args.selector, backend=args.backend)
+    t0 = time.perf_counter()
+    answers = store.query_batch(queries, selector=args.selector,
+                                backend=args.backend)
+    dt = time.perf_counter() - t0
+
+    qps = len(queries) / dt
+    cs = store.cache.stats()
+    print(f"[serve:aqp] {len(queries)} queries over {len(columns)} columns "
+          f"({n:,} rows each) in {dt * 1e3:.1f} ms -> {qps:,.0f} queries/s "
+          f"[{args.backend}]")
+    print(f"[serve:aqp] synopsis cache: {cs['hits']} hits / {cs['misses']} misses "
+          f"({cs['entries']} entries)")
+    for q, ans in list(zip(queries, answers))[:6]:
+        print(f"  {q.op.upper():5s}({q.column}) in [{q.a:9.2f}, {q.b:9.2f}] "
+              f"~= {ans:,.2f}")
+
+
+def main() -> None:
+    from repro.configs.base import ARCH_IDS
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="lm", choices=["lm", "aqp"])
+    ap.add_argument("--arch", default="llama3.2-1b", choices=list(ARCH_IDS))
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--rows", type=int, default=200_000)
+    ap.add_argument("--queries", type=int, default=2000)
+    ap.add_argument("--capacity", type=int, default=2048)
+    ap.add_argument("--selector", default="plugin",
+                    choices=["plugin", "silverman", "lscv_h"])
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    args = ap.parse_args()
+
+    if args.mode == "aqp":
+        run_aqp(args)
+    else:
+        run_lm(args)
 
 
 if __name__ == "__main__":

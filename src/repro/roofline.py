@@ -206,10 +206,18 @@ class HloCostModel:
                 opm = re.search(r"dot\(([^)]*)\)", rhs)
                 contracting = 1
                 if opm:
-                    ops = [o.strip().lstrip("%") for o in opm.group(1).split(",")]
                     lm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
-                    if ops and lm and ops[0] in shapes:
-                        lhs_dims = shapes[ops[0]]
+                    lhs_dims: List[int] = []
+                    # newer HLO dumps type operands inline:
+                    #   dot(f32[64,64]{1,0} %lhs, f32[64,64]{1,0} %rhs)
+                    inline = _SHAPE_RE.search(opm.group(1))
+                    if inline and inline.group(1) in _DTYPE_BYTES:
+                        lhs_dims = [int(d) for d in inline.group(2).split(",") if d]
+                    else:                       # untyped: resolve %lhs by name
+                        names = re.findall(r"%([\w\.\-]+)", opm.group(1))
+                        if names and names[0] in shapes:
+                            lhs_dims = shapes[names[0]]
+                    if lm and lhs_dims:
                         for d in lm.group(1).split(","):
                             if d:
                                 contracting *= lhs_dims[int(d)]

@@ -4,6 +4,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # also declared in pytest.ini; registering here keeps the marker defined
+    # when pytest is invoked with an explicit -c pointing elsewhere
+    config.addinivalue_line(
+        "markers", "slow: jit-heavy / long-running tests excluded from tier-1")
+
+
 @pytest.fixture()
 def rng(request):
     """Per-test deterministic generator: seeding by test name decouples the

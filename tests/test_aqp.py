@@ -3,7 +3,11 @@ quadrature, accuracy vs exact answers, invariants, mergeability."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:      # hypothesis is optional: property tests skip below
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (KDESynopsis, count_1d, count_1d_numeric, count_box_diag,
                         sum_1d, sum_1d_numeric)
@@ -37,9 +41,7 @@ def test_sum_avg_accuracy(rng):
     assert float(syn.avg(5.0, 12.0)) == pytest.approx(float(data[sel].mean()), rel=0.05)
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 50), b=st.floats(-1.0, 3.0))
-def test_count_bounds_and_monotonicity(seed, b):
+def _check_count_bounds_and_monotonicity(seed, b):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.normal(0, 1, 256).astype(np.float32))
     h = jnp.float32(0.4)
@@ -47,6 +49,17 @@ def test_count_bounds_and_monotonicity(seed, b):
     c2 = float(count_1d(x, h, jnp.float32(-10.0), jnp.float32(b + 0.5)))
     assert -1e-3 <= c1 <= 256 * (1 + 1e-4)
     assert c2 >= c1 - 1e-4                       # monotone in the upper bound
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 50), b=st.floats(-1.0, 3.0))
+    def test_count_bounds_and_monotonicity(seed, b):
+        _check_count_bounds_and_monotonicity(seed, b)
+else:
+    @pytest.mark.parametrize("seed,b", [(0, -1.0), (17, 0.3), (50, 3.0)])
+    def test_count_bounds_and_monotonicity(seed, b):
+        _check_count_bounds_and_monotonicity(seed, b)
 
 
 def test_multid_box_count(rng):
@@ -80,3 +93,102 @@ def test_telemetry_store_and_merge(rng):
     exact = float((np.concatenate([a, b]) <= 1.0).mean())
     assert frac == pytest.approx(exact, abs=0.08)
     assert merged.columns["loss"].n_seen == 8000
+
+
+# --- deterministic closed-form + batched-engine tests ----------------------
+
+def test_closed_forms_vs_trapezoid_of_kde_eval(rng):
+    """eqs. 9-10 closed forms vs direct trapezoid quadrature of kde_eval."""
+    from repro.core import kde_eval
+
+    x = jnp.asarray(rng.normal(1.0, 1.5, 400).astype(np.float32))
+    h = jnp.float32(0.35)
+    for a, b in [(-2.0, 0.5), (0.0, 4.0), (-6.0, 6.0)]:
+        grid = jnp.linspace(a, b, 2001)
+        f = kde_eval(grid, x, h)
+        n = x.shape[0]
+        want_count = n * float(jnp.trapezoid(f, grid))
+        want_sum = n * float(jnp.trapezoid(grid * f, grid))
+        assert float(count_1d(x, h, jnp.float32(a), jnp.float32(b))) == \
+            pytest.approx(want_count, rel=1e-4), (a, b)
+        assert float(sum_1d(x, h, jnp.float32(a), jnp.float32(b))) == \
+            pytest.approx(want_sum, rel=1e-4, abs=1e-3), (a, b)
+
+
+def test_degenerate_ranges(rng):
+    x = jnp.asarray(rng.normal(0, 1, 300).astype(np.float32))
+    h = jnp.float32(0.4)
+    # a == b: zero-measure range (sum_1d may carry fp32 roundoff from the
+    # two-term Phi/phi cancellation, so approx rather than exact zero)
+    assert float(count_1d(x, h, jnp.float32(0.7), jnp.float32(0.7))) == 0.0
+    assert float(sum_1d(x, h, jnp.float32(0.7), jnp.float32(0.7))) == \
+        pytest.approx(0.0, abs=1e-6)
+    # empty intersection: range far outside the support
+    assert float(count_1d(x, h, jnp.float32(50.0), jnp.float32(60.0))) == \
+        pytest.approx(0.0, abs=1e-4)
+    assert float(sum_1d(x, h, jnp.float32(50.0), jnp.float32(60.0))) == \
+        pytest.approx(0.0, abs=1e-3)
+
+
+def test_avg_of_degenerate_range_is_finite(rng):
+    data = rng.normal(0, 1, 5000).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=512)
+    assert np.isfinite(float(syn.avg(0.3, 0.3)))
+    assert np.isfinite(float(syn.avg(80.0, 90.0)))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_batched_engine_matches_query_loop(rng, backend):
+    from repro.core import Query, QueryBatch
+
+    data = rng.gamma(4.0, 2.0, 30000).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=1024)
+    ops = ["count", "sum", "avg"]
+    lo, hi = float(data.min()), float(data.max())
+    queries = []
+    for i in range(1001):                 # >= 1000, non-multiple of tile sizes
+        a = float(rng.uniform(lo, hi))
+        queries.append(Query(ops[i % 3], a, float(rng.uniform(a, hi))))
+    queries.append(Query("count", 5.0, 5.0))          # degenerate
+    queries.append(Query("avg", hi + 10, hi + 20))    # empty intersection
+
+    got = QueryBatch(queries).run(syn, backend=backend)
+    fns = {"count": syn.count, "sum": syn.sum, "avg": syn.avg}
+    want = np.asarray([float(fns[q.op](q.a, q.b)) for q in queries])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_query_batch_groups_columns(rng):
+    from repro.core import Query, QueryBatch
+
+    d1 = rng.normal(0, 1, 8000).astype(np.float32)
+    d2 = rng.normal(5, 2, 8000).astype(np.float32)
+    synopses = {
+        "a": KDESynopsis.fit(jnp.asarray(d1), selector="plugin", max_sample=512),
+        "b": KDESynopsis.fit(jnp.asarray(d2), selector="plugin", max_sample=512),
+    }
+    queries = [Query("count", -1, 1, column="a"), Query("sum", 3, 7, column="b"),
+               Query("avg", -2, 0, column="a"), Query("count", 4, 6, column="b")]
+    batch = QueryBatch(queries)
+    assert sorted(batch.columns) == ["a", "b"]
+    got = batch.run(synopses)
+    for q, ans in zip(queries, got):
+        syn = synopses[q.column]
+        want = float({"count": syn.count, "sum": syn.sum, "avg": syn.avg}[q.op](q.a, q.b))
+        assert ans == pytest.approx(want, rel=1e-5, abs=1e-5)
+
+
+def test_query_rejects_unknown_op():
+    from repro.core import Query
+
+    with pytest.raises(ValueError):
+        Query("median", 0.0, 1.0)
+
+
+def test_query_batch_rejects_column_tags_against_bare_synopsis(rng):
+    from repro.core import Query, QueryBatch
+
+    data = rng.normal(0, 1, 2000).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=256)
+    with pytest.raises(ValueError, match="single synopsis"):
+        QueryBatch([Query("count", 0, 1, column="latency")]).run(syn)

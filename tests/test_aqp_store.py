@@ -1,0 +1,159 @@
+"""data/aqp_store.py: reservoir determinism, cross-host merge associativity,
+and SynopsisCache hit/invalidation semantics."""
+import numpy as np
+import pytest
+
+from repro.core import Query
+from repro.data import Reservoir, SynopsisCache, TelemetryStore
+
+
+def test_reservoir_deterministic_under_fixed_seed(rng):
+    data = rng.normal(0, 1, 20_000).astype(np.float32)
+    r1 = Reservoir(capacity=512, seed=7)
+    r2 = Reservoir(capacity=512, seed=7)
+    r1.add(data)
+    r2.add(data)
+    np.testing.assert_array_equal(r1.sample(), r2.sample())
+    assert r1.n_seen == r2.n_seen == 20_000
+    # a different seed keeps a different subsample (overwhelmingly likely)
+    r3 = Reservoir(capacity=512, seed=8)
+    r3.add(data)
+    assert not np.array_equal(r1.sample(), r3.sample())
+
+
+def test_telemetry_store_deterministic_across_instances(rng):
+    data = rng.gamma(3.0, 1.0, 30_000).astype(np.float32)
+    outs = []
+    for _ in range(2):
+        store = TelemetryStore(capacity=1024, seed=0)
+        store.add_batch({"loss": data})
+        outs.append(store.query_batch([Query("count", 1.0, 4.0, column="loss")]))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_reservoir_version_counts_updates(rng):
+    r = Reservoir(capacity=64, seed=0)
+    assert r.version == 0
+    r.add(rng.normal(0, 1, 10))
+    assert r.version == 1
+    r.add(np.empty((0,), np.float32))      # empty batch: no state change
+    assert r.version == 1
+    r.add(rng.normal(0, 1, 200))
+    assert r.version == 2
+
+
+def test_synopsis_merge_associative_across_hosts(rng):
+    """(A + B) + C vs A + (B + C): same n_seen, and both orders answer
+    fraction queries to within synopsis accuracy."""
+    parts = [rng.normal(m, 1, 5000).astype(np.float32) for m in (0.0, 1.0, 2.0)]
+    stores = []
+    for i, part in enumerate(parts):
+        st = TelemetryStore(capacity=512, seed=i)
+        st.add_batch({"x": part})
+        stores.append(st)
+    left = stores[0].merge(stores[1]).merge(stores[2])
+    right = stores[0].merge(stores[1].merge(stores[2]))
+    assert left.columns["x"].n_seen == right.columns["x"].n_seen == 15_000
+    exact = float((np.concatenate(parts) <= 1.0).mean())
+    for merged in (left, right):
+        frac = merged.fraction("x", -50.0, 1.0, selector="silverman")
+        assert frac == pytest.approx(exact, abs=0.08)
+
+
+def test_synopsis_cache_hit_and_invalidation(rng):
+    data = rng.normal(0, 1, 5000).astype(np.float32)
+    store = TelemetryStore(capacity=512, seed=0)
+    store.add_batch({"loss": data})
+
+    s1 = store.synopsis("loss", selector="silverman")
+    assert store.cache.stats()["misses"] == 1
+    s2 = store.synopsis("loss", selector="silverman")
+    assert s2 is s1                               # served from cache
+    assert store.cache.stats()["hits"] == 1
+
+    # a different selector is a distinct cache entry
+    store.synopsis("loss", selector="plugin")
+    assert store.cache.stats()["entries"] == 2
+
+    # new data bumps the reservoir version -> stale entry is a miss
+    store.add_batch({"loss": rng.normal(3, 1, 1000).astype(np.float32)})
+    s3 = store.synopsis("loss", selector="silverman")
+    assert s3 is not s1
+    assert s3.n_source == 6000
+
+
+def test_synopsis_cache_explicit_invalidate():
+    cache = SynopsisCache(max_entries=2)
+    cache.put("a", "plugin", 1, "syn_a")
+    cache.put("b", "plugin", 1, "syn_b")
+    assert cache.get("a", "plugin", 1) == "syn_a"
+    cache.invalidate("a")
+    assert cache.get("a", "plugin", 1) is None
+    # bounded: inserting past max_entries evicts the oldest entry
+    cache.put("c", "plugin", 1, "syn_c")
+    cache.put("d", "plugin", 1, "syn_d")
+    assert len(cache) == 2
+
+
+def test_query_batch_uses_cached_synopses(rng):
+    data = {"a": rng.normal(0, 1, 4000).astype(np.float32),
+            "b": rng.normal(5, 1, 4000).astype(np.float32)}
+    store = TelemetryStore(capacity=512, seed=0)
+    store.add_batch(data)
+    queries = [Query("count", -1, 1, column="a"), Query("avg", 4, 6, column="b")]
+    store.query_batch(queries)
+    misses0 = store.cache.stats()["misses"]
+    store.query_batch(queries)
+    assert store.cache.stats()["misses"] == misses0     # second run: all hits
+    assert store.cache.stats()["hits"] >= 2
+
+
+def test_merge_with_mismatched_capacities_stays_finite_and_weighted(rng):
+    """A merge must never expose uninitialized buffer slots, and must keep
+    each side's contribution proportional to its stream size even when the
+    retained-sample sizes are wildly different."""
+    r1 = Reservoir(capacity=4096, seed=0)
+    r1.add(rng.normal(0, 1, 100).astype(np.float32))            # 1% of stream
+    r2 = Reservoir(capacity=64, seed=1)
+    r2.add(rng.normal(10, 1, 10_000).astype(np.float32))        # 99% of stream
+    m = r1.merge(r2)
+    s = m.sample()
+    # k is capped at len(s2)/w2 ~ 64 so the 100 r1 points cannot be forced in
+    assert len(s) == m.n_filled <= 64
+    assert np.isfinite(s).all()
+    assert m.n_seen == 10_100
+    # r1's well-separated values (~0) must stay a small fraction of the sample
+    assert (s < 5.0).mean() < 0.2
+    # adding after a merge replaces within the filled region (never grows a
+    # deficit sample, which would overweight new data) and stays finite
+    filled = m.n_filled
+    m.add(rng.normal(0, 1, 500).astype(np.float32))
+    assert m.n_filled == filled
+    assert np.isfinite(m.sample()).all()
+
+
+def test_store_query_batch_requires_column(rng):
+    store = TelemetryStore(capacity=64, seed=0)
+    store.add_batch({"x": rng.normal(0, 1, 100).astype(np.float32)})
+    with pytest.raises(ValueError, match="name a column"):
+        store.query_batch([Query("count", 0.0, 1.0)])
+
+
+def test_store_merge_preserves_cache_bound(rng):
+    s1 = TelemetryStore(capacity=64, seed=0, cache_entries=8)
+    s2 = TelemetryStore(capacity=64, seed=1, cache_entries=8)
+    s1.add_batch({"x": rng.normal(0, 1, 100).astype(np.float32)})
+    s2.add_batch({"x": rng.normal(0, 1, 100).astype(np.float32)})
+    assert s1.merge(s2).cache.max_entries == 8
+
+
+def test_merge_snapshot_does_not_alias_single_side_columns(rng):
+    s1 = TelemetryStore(capacity=64, seed=0)
+    s2 = TelemetryStore(capacity=64, seed=1)
+    s1.add_batch({"only_in_a": rng.normal(0, 1, 50).astype(np.float32)})
+    s2.add_batch({"shared": rng.normal(0, 1, 50).astype(np.float32)})
+    s1.add_batch({"shared": rng.normal(0, 1, 50).astype(np.float32)})
+    m = s1.merge(s2)
+    before = m.columns["only_in_a"].n_seen
+    s1.add_batch({"only_in_a": rng.normal(0, 1, 500).astype(np.float32)})
+    assert m.columns["only_in_a"].n_seen == before     # snapshot, not alias

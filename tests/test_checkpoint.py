@@ -63,6 +63,7 @@ def test_reshard_restore(tmp_path):
     np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
 
 
+@pytest.mark.slow
 def test_driver_restart_resumes(tmp_path):
     """Full crash/restart loop through the training driver (subprocess)."""
     import subprocess

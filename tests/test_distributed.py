@@ -9,6 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import gaussian as G
 from repro.core.distributed import distributed_lscv_h, sharded_pairwise_reduce
 from repro.core.reductions import pairwise_reduce
@@ -46,6 +47,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core.distributed import distributed_lscv_h, sharded_pairwise_reduce
 from repro.core.reductions import pairwise_reduce
+from repro import compat
 from repro.core import gaussian as G, lscv_h
 rng = np.random.default_rng(1)
 mesh = jax.make_mesh((4, 2), ("data", "model"))
@@ -86,7 +88,7 @@ def test_compressed_psum_matches_exact(rng):
     def f(g, e):
         return compressed_psum(g, e, "dp")
 
-    out, new_e = jax.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=P())(g, e)
+    out, new_e = compat.shard_map(f, mesh=mesh, in_specs=(P(), P()), out_specs=P())(g, e)
     # single replica: compressed mean == dequantised self, error small
     np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(g["w"]), atol=0.02)
     # error feedback: adding residual back reconstructs g exactly

@@ -8,6 +8,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow      # jit-heavy: excluded from tier-1
+
 CELLS = [
     ("llama3.2-1b", "train_4k", "4,2"),
     ("granite-moe-1b-a400m", "decode_32k", "4,2"),

@@ -7,6 +7,7 @@ import pytest
 from repro.core import g_of_H, kde_eval, lscv_H, plugin_bandwidth
 
 
+@pytest.mark.slow
 def test_multistart_lscv_H_no_worse(rng):
     x = rng.normal(0, 1, (150, 2)).astype(np.float32)
     x[:, 1] = 0.7 * x[:, 0] + 0.7 * x[:, 1]

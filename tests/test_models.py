@@ -10,6 +10,8 @@ from repro.configs.base import ARCH_IDS, get_config
 from repro.models import batch_struct, build_model, param_structs
 from repro.models.moe import moe_block, moe_params
 
+pytestmark = pytest.mark.slow      # jit-heavy: excluded from tier-1
+
 
 def _smoke_batch(cfg, B=2, S=64):
     batch = {"tokens": jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab_size, (B, S)), jnp.int32)}

@@ -3,6 +3,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow      # jit-heavy: excluded from tier-1
+
 
 def test_pipeline_matches_sequential_subprocess():
     code = r"""

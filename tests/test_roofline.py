@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro import roofline
+from repro import compat, roofline
 
 
 def test_trip_count_correction_on_scan():
@@ -17,7 +17,7 @@ def test_trip_count_correction_on_scan():
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     compiled = jax.jit(scanned).lower(x, w).compile()
-    raw = compiled.cost_analysis().get("flops")
+    raw = compat.cost_analysis_dict(compiled).get("flops")
     model = roofline.HloCostModel(compiled.as_text())
     corrected = model.dot_flops()
     one_matmul = 2 * 128 ** 3

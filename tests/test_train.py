@@ -10,6 +10,8 @@ from repro.models import build_model
 from repro.optim import adamw
 from repro.train import make_train_step
 
+pytestmark = pytest.mark.slow      # jit-heavy: excluded from tier-1
+
 
 def test_loss_decreases_on_tiny_model():
     cfg = get_config("llama3.2-1b", smoke=True)

@@ -1,0 +1,108 @@
+"""Batched vs per-query multi-d box AQP throughput (core/aqp_multid.py).
+
+A mixed COUNT/SUM/AVG box batch against one joint synopsis is answered
+three ways:
+  loop    — one jitted call per query (count_box/sum_box/avg_box)
+  batch   — single jitted, vmapped eq. 11 product-kernel pass
+  pallas  — the kernels/aqp_boxes.py tile kernel (interpret mode on CPU)
+
+Reports queries/s and the batch-over-loop speedup; the acceptance bar for
+the multi-d engine is >= 10x over the per-query Python loop on CPU.
+
+Set REPRO_BENCH_QUICK=1 (or `python -m benchmarks.run --quick`) for the CI
+smoke configuration: one small batch, d=2 only.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from .common import emit, time_call
+
+Q_SIZES = (64, 512)
+SAMPLE = 2048
+DIMS = (2, 3)
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def _setup(n_queries: int, d: int, seed: int = 0):
+    import jax.numpy as jnp
+
+    from repro.core import KDESynopsis
+    from repro.core.aqp_multid import BoxQueryBatch
+    from repro.launch.serve import make_box_query_mix
+
+    rng = np.random.default_rng(seed)
+    n_rows = 100_000
+    # correlated joint columns: a latent factor plus per-axis noise
+    latent = rng.normal(0, 1, n_rows)
+    data = np.stack([latent + rng.normal(0, 0.5 + 0.2 * j, n_rows)
+                     for j in range(d)], axis=1).astype(np.float32)
+    sample = SAMPLE if not _quick() else 512
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin",
+                          max_sample=sample)
+    columns = tuple(f"c{j}" for j in range(d))
+    ranges = {c: (float(data[:, j].min()), float(data[:, j].max()))
+              for j, c in enumerate(columns)}
+    queries = make_box_query_mix(n_queries, columns, ranges, seed=seed)
+    # a single-synopsis batch carries no column names
+    from repro.core import BoxQuery
+    bare = [BoxQuery(q.op, q.lo, q.hi, target=q.target_index())
+            for q in queries]
+    return syn, BoxQueryBatch(bare)
+
+
+def _loop_answers(syn, batch) -> np.ndarray:
+    out = np.empty((len(batch.queries),), np.float64)
+    for i, q in enumerate(batch.queries):
+        t = q.target_index()
+        if q.op == "count":
+            out[i] = float(syn.count_box(q.lo, q.hi))
+        elif q.op == "sum":
+            out[i] = float(syn.sum_box(q.lo, q.hi, target=t))
+        else:
+            out[i] = float(syn.avg_box(q.lo, q.hi, target=t))
+    return out
+
+
+def run() -> dict:
+    out = {}
+    q_sizes = Q_SIZES if not _quick() else (32,)
+    dims = DIMS if not _quick() else (2,)
+    for d in dims:
+        for nq in q_sizes:
+            syn, batch = _setup(nq, d)
+
+            want = _loop_answers(syn, batch)
+            got = batch.run(syn)
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+            t_loop = time_call(_loop_answers, syn, batch, repeats=3, warmup=1)
+            t_batch = time_call(batch.run, syn, repeats=5, warmup=2)
+            speedup = t_loop / t_batch
+            emit(f"aqp_boxes_loop_d{d}_q{nq}", t_loop,
+                 f"{nq / (t_loop * 1e-6):,.0f} q/s")
+            emit(f"aqp_boxes_batch_d{d}_q{nq}", t_batch,
+                 f"{nq / (t_batch * 1e-6):,.0f} q/s, {speedup:.1f}x over loop")
+            out[f"speedup_d{d}_q{nq}"] = speedup
+
+            # Pallas tile kernel path: correctness always, timing as reported.
+            # Wider tolerance than the jnp pass: per-tile fp32 accumulation
+            # noise is amplified by the sample->relation scale (~1e2 here).
+            got_pl = batch.run(syn, backend="pallas")
+            np.testing.assert_allclose(got_pl, want, rtol=5e-4, atol=5e-2)
+            t_pl = time_call(lambda: batch.run(syn, backend="pallas"),
+                             repeats=3, warmup=1)
+            emit(f"aqp_boxes_pallas_d{d}_q{nq}", t_pl,
+                 f"{nq / (t_pl * 1e-6):,.0f} q/s (interpret mode on CPU, "
+                 f"{t_loop / t_pl:.1f}x over loop)")
+            out[f"speedup_pallas_d{d}_q{nq}"] = t_loop / t_pl
+    return out
+
+
+if __name__ == "__main__":
+    run()

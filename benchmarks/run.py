@@ -1,23 +1,30 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
 
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines.  --quick sets
+REPRO_BENCH_QUICK=1, which suites honouring it (aqp_boxes) read at run()
+time to shrink to a CI-smoke configuration.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import time
 
 SUITES = ("paper_validation", "plugin", "lscv_h", "lscv_H", "table3",
-          "kernels", "aqp_batch", "roofline", "serving")
+          "kernels", "aqp_batch", "aqp_boxes", "roofline", "serving")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help=f"one of {SUITES}")
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes for CI smoke runs")
     args = ap.parse_args()
+    if args.quick:
+        os.environ["REPRO_BENCH_QUICK"] = "1"
     suites = [args.only] if args.only else list(SUITES)
 
     print("name,us_per_call,derived")

@@ -1,6 +1,8 @@
 """Database scenario (paper §4.3): a multi-column fact table served by KDE
-synopses — per-column 1-D aggregates, a 2-D box COUNT with a full LSCV_H
-bandwidth matrix, and cross-host synopsis merging (the fleet-scale story).
+synopses — per-column 1-D aggregates, multi-column box predicates answered
+from a joint synopsis (eq. 11 product kernel, BoxQueryBatch), a 2-D box
+COUNT with a full LSCV_H bandwidth matrix, and cross-host synopsis merging
+(the fleet-scale story).
 
     PYTHONPATH=src python examples/aqp_database.py
 """
@@ -11,7 +13,7 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import KDESynopsis  # noqa: E402
+from repro.core import BoxQuery, KDESynopsis  # noqa: E402
 from repro.data import TelemetryStore  # noqa: E402
 
 
@@ -50,6 +52,7 @@ def main():
     import time
     from repro.launch.serve import make_query_mix
     store = TelemetryStore(capacity=2048, seed=0)
+    store.track_joint(("amount", "latency"))   # rows sampled from registration on
     store.add_batch({"amount": amount, "latency": latency})
     queries = make_query_mix(1000, {"amount": (50.0, 1000.0),
                                     "latency": (20.0, 250.0)}, seed=11)
@@ -61,6 +64,22 @@ def main():
           f"({len(queries) / dt:,.0f} queries/s)")
     for q, ans in list(zip(queries, answers))[:3]:
         print(f"  {q.op.upper():5s}({q.column}) [{q.a:7.1f}, {q.b:7.1f}] ~= {ans:,.1f}")
+
+    print("\n== multi-column predicates from the joint synopsis (eq. 11) ==")
+    # SQL:  SELECT COUNT(*), SUM(amount), AVG(latency) FROM facts
+    #       WHERE 50 <= amount <= 300 AND 20 <= latency <= 60
+    cols = ("amount", "latency")
+    box = dict(lo=(50.0, 20.0), hi=(300.0, 60.0))
+    box_queries = [
+        BoxQuery("count", columns=cols, **box),
+        BoxQuery("sum", columns=cols, target="amount", **box),
+        BoxQuery("avg", columns=cols, target="latency", **box),
+    ]
+    box_answers = store.query_box_batch(box_queries)
+    sel2 = (amount >= 50) & (amount <= 300) & (latency >= 20) & (latency <= 60)
+    print(f"COUNT(*)     ~ {box_answers[0]:12,.0f}  exact {sel2.sum():12,}")
+    print(f"SUM(amount)  ~ {box_answers[1]:12,.0f}  exact {amount[sel2].sum():12,.0f}")
+    print(f"AVG(latency) ~ {box_answers[2]:12,.2f}  exact {latency[sel2].mean():12,.2f}")
 
     print("\n== mergeable synopses across 4 'hosts' ==")
     stores = []

@@ -94,6 +94,23 @@ def count_box_diag(x: jax.Array, h_diag: jax.Array, lo: jax.Array, hi: jax.Array
     return n * jnp.mean(jnp.prod(per_axis, axis=1))
 
 
+@jax.jit
+def sum_box_diag(x: jax.Array, h_diag: jax.Array, lo: jax.Array, hi: jax.Array,
+                 target: jax.Array) -> jax.Array:
+    """SUM of axis `target` over an axis-aligned box (eq. 11 x eq. 10):
+    the product kernel factorises, so the box integral of x_t f^(x) is the
+    per-axis Phi-difference product with axis t's factor replaced by the 1-D
+    first-moment closed form  X_it [Phi]_a^b - h_t [phi]_a^b.
+    x: (n,d), h_diag: (d,), target: scalar int axis index."""
+    za = (lo[None, :] - x) / h_diag[None, :]
+    zb = (hi[None, :] - x) / h_diag[None, :]
+    d_Phi = _Phi(zb) - _Phi(za)                               # (n, d)
+    moment = x * d_Phi - h_diag[None, :] * (_phi(zb) - _phi(za))
+    axis = jnp.arange(x.shape[1])
+    factors = jnp.where(axis[None, :] == target, moment, d_Phi)
+    return jnp.sum(jnp.prod(factors, axis=1))
+
+
 def _halton(n: int, d: int) -> jnp.ndarray:
     """Deterministic quasi-MC nodes (for full-H boxes)."""
     import numpy as np
@@ -114,22 +131,43 @@ def _halton(n: int, d: int) -> jnp.ndarray:
     return jnp.asarray(out, jnp.float32)
 
 
-def count_box_H(x: jax.Array, H: jax.Array, lo: jax.Array, hi: jax.Array,
-                n_qmc: int = 4096) -> jax.Array:
-    """Full-matrix-H COUNT over a box via quasi-Monte-Carlo on the box."""
+def box_qmc_terms(x: jax.Array, H: jax.Array, lo: jax.Array, hi: jax.Array,
+                  target: int = 0, n_qmc: int = 4096):
+    """Full-matrix-H box integrals by deterministic quasi-MC, returning
+    (count, sum_target) from ONE density evaluation — the Halton nodes and
+    the O(n_qmc * sample) kde_eval_H pass are the whole cost, and COUNT and
+    SUM share both:  count = n vol mean(f),  sum = n vol mean(node_t f)."""
     from .kde import kde_eval_H
     n, d = x.shape
     nodes = lo[None, :] + _halton(n_qmc, d) * (hi - lo)[None, :]
     f = kde_eval_H(nodes, x, H)
     vol = jnp.prod(hi - lo)
-    return n * vol * jnp.mean(f)
+    return n * vol * jnp.mean(f), n * vol * jnp.mean(nodes[:, target] * f)
+
+
+def count_box_H(x: jax.Array, H: jax.Array, lo: jax.Array, hi: jax.Array,
+                n_qmc: int = 4096) -> jax.Array:
+    """Full-matrix-H COUNT over a box via quasi-Monte-Carlo on the box."""
+    return box_qmc_terms(x, H, lo, hi, n_qmc=n_qmc)[0]
+
+
+def sum_box_H(x: jax.Array, H: jax.Array, lo: jax.Array, hi: jax.Array,
+              target: int = 0, n_qmc: int = 4096) -> jax.Array:
+    """Full-matrix-H SUM of axis `target` over a box (quasi-MC)."""
+    return box_qmc_terms(x, H, lo, hi, target=target, n_qmc=n_qmc)[1]
 
 
 @dataclass
 class KDESynopsis:
-    """A fitted density synopsis for one numeric column (or column set)."""
+    """A fitted density synopsis for one numeric column (or column set).
+
+    `h` is a scalar bandwidth for 1-D synopses, and may be a (d,) diagonal
+    bandwidth vector for multi-d synopses (per-axis PLUGIN / silverman —
+    the product-kernel form of eq. 11).  `H` is the full bandwidth matrix
+    (LSCV_H); exactly one of `h`/`H` is set.
+    """
     x: jax.Array                  # retained sample (the synopsis payload)
-    h: Optional[jax.Array] = None # scalar bandwidth (PLUGIN / LSCV_h / silverman)
+    h: Optional[jax.Array] = None # scalar or (d,) diagonal bandwidth
     H: Optional[jax.Array] = None # full bandwidth matrix (LSCV_H)
     n_source: int = 0             # size of the original relation
     selector: str = "plugin"
@@ -145,12 +183,21 @@ class KDESynopsis:
         else:
             sample = data
         if selector == "plugin":
-            if sample.ndim != 1:
-                raise ValueError("PLUGIN selector is 1-D only (paper §4.4)")
-            h = plugin_bandwidth(sample, backend=backend).h
+            if sample.ndim == 1:
+                h = plugin_bandwidth(sample, backend=backend).h
+            else:
+                # per-axis PLUGIN: the paper's selector is univariate (§4.4),
+                # so the multi-d product kernel takes one PLUGIN h per axis
+                h = jnp.stack([plugin_bandwidth(sample[:, j], backend=backend).h
+                               for j in range(sample.shape[1])])
             return cls(x=sample, h=h, n_source=n_source, selector=selector)
         if selector == "silverman":
-            return cls(x=sample, h=silverman_h(sample), n_source=n_source, selector=selector)
+            if sample.ndim == 1:
+                h = silverman_h(sample)
+            else:
+                h = jnp.stack([silverman_h(sample[:, j])
+                               for j in range(sample.shape[1])])
+            return cls(x=sample, h=h, n_source=n_source, selector=selector)
         if selector == "lscv_h":
             res = lscv_h(sample, backend=backend)
             return cls(x=sample, h=res.h, n_source=n_source, selector=selector)
@@ -177,13 +224,41 @@ class KDESynopsis:
     def avg(self, a: float, b: float) -> jax.Array:
         return _avg_or_zero(self.count(a, b), self.sum(a, b))
 
+    def _as_rows(self) -> jax.Array:
+        return self.x[:, None] if self.x.ndim == 1 else self.x
+
+    def h_diag(self) -> jax.Array:
+        """Per-axis bandwidth vector (scalar h broadcast to every axis)."""
+        d = self._as_rows().shape[1]
+        return jnp.broadcast_to(jnp.asarray(self.h, jnp.float32), (d,))
+
+    def _target_index(self, target) -> int:
+        d = self._as_rows().shape[1]
+        t = 0 if target is None else int(target)
+        if not 0 <= t < d:
+            raise ValueError(f"target axis {t} out of range for d={d}")
+        return t
+
     def count_box(self, lo, hi) -> jax.Array:
+        x = self._as_rows()
         lo = jnp.asarray(lo, jnp.float32)
         hi = jnp.asarray(hi, jnp.float32)
         if self.H is not None:
-            return self._scale() * count_box_H(self.x, self.H, lo, hi)
-        h_diag = jnp.full((self.x.shape[1],), self.h, jnp.float32)
-        return self._scale() * count_box_diag(self.x, h_diag, lo, hi)
+            return self._scale() * count_box_H(x, self.H, lo, hi)
+        return self._scale() * count_box_diag(x, self.h_diag(), lo, hi)
+
+    def sum_box(self, lo, hi, target: Optional[int] = None) -> jax.Array:
+        """SUM of axis `target` (default axis 0) over an axis-aligned box."""
+        x = self._as_rows()
+        lo = jnp.asarray(lo, jnp.float32)
+        hi = jnp.asarray(hi, jnp.float32)
+        t = self._target_index(target)
+        if self.H is not None:
+            return self._scale() * sum_box_H(x, self.H, lo, hi, target=t)
+        return self._scale() * sum_box_diag(x, self.h_diag(), lo, hi, jnp.int32(t))
+
+    def avg_box(self, lo, hi, target: Optional[int] = None) -> jax.Array:
+        return _avg_or_zero(self.count_box(lo, hi), self.sum_box(lo, hi, target))
 
     def merge(self, other: "KDESynopsis", max_sample: int = 4096, seed: int = 0) -> "KDESynopsis":
         """Mergeable synopses (beyond paper): union the retained samples
@@ -199,6 +274,11 @@ class KDESynopsis:
     def query_batch(self, queries: Sequence["Query"], backend: str = "jnp") -> np.ndarray:
         """Answer N COUNT/SUM/AVG range queries in one jitted pass."""
         return QueryBatch(queries).run(self, backend=backend)
+
+    def query_box_batch(self, queries, backend: str = "jnp") -> np.ndarray:
+        """Answer N COUNT/SUM/AVG box queries (eq. 11) in one jitted pass."""
+        from .aqp_multid import BoxQueryBatch
+        return BoxQueryBatch(queries).run(self, backend=backend)
 
 
 # --- batched query engine -------------------------------------------------
@@ -322,12 +402,29 @@ class QueryBatch:
                     raise KeyError(f"no synopsis for column {column!r}; "
                                    f"have {sorted(synopses)}")
                 syn = synopses[column]
-            if syn.x.ndim != 1 or syn.h is None:
-                raise ValueError("batched engine answers 1-D scalar-h synopses; "
-                                 "use count_box for multi-d")
-            idx, a, b, ops_arr = self.plan(column)
-            scale = jnp.float32(syn.n_source / syn.x.shape[0])
-            ans = batch_query_1d(syn.x, syn.h, a, b, ops_arr, scale,
-                                 backend=backend)
+            if syn.x.ndim == 1 and syn.h is not None:
+                idx, a, b, ops_arr = self.plan(column)
+                scale = jnp.float32(syn.n_source / syn.x.shape[0])
+                ans = batch_query_1d(syn.x, syn.h, a, b, ops_arr, scale,
+                                     backend=backend)
+            elif syn.x.ndim == 1 and syn.H is not None:
+                # Graceful routing: a full-H 1-D synopsis (LSCV_H) has no
+                # scalar-h closed form, so its group falls back to the
+                # deterministic quasi-MC box path instead of failing the batch.
+                idx = self._groups[column]
+                ans = _qmc_range_answers(syn, [self.queries[i] for i in idx])
+            else:
+                raise ValueError("multi-dimensional synopses answer box "
+                                 "predicates, not scalar ranges; use "
+                                 "BoxQueryBatch (repro.core.aqp_multid)")
             out[np.asarray(idx)] = np.asarray(ans, np.float64)
         return out
+
+
+def _qmc_range_answers(syn: KDESynopsis, qs: Sequence[Query]) -> np.ndarray:
+    """Per-query quasi-MC fallback for full-H synopses: each [a, b] range is
+    a 1-D box handed to the multi-d fallback.  O(n_qmc * sample) per query —
+    correct but slow; the planner only routes here when the closed forms
+    don't apply."""
+    from .aqp_multid import BoxQuery, _qmc_box_answers
+    return _qmc_box_answers(syn, [BoxQuery(q.op, (q.a,), (q.b,)) for q in qs])

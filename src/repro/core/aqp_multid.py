@@ -1,0 +1,236 @@
+"""Multi-dimensional AQP: box predicates over joint KDE synopses (eq. 11).
+
+The paper's multivariate formulation (§4.3) answers aggregates over
+axis-aligned boxes with a *product kernel*: for diagonal bandwidths the box
+integral factorises into per-axis 1-D integrals, each with the same Gaussian
+closed forms as eqs. 9-10:
+
+  COUNT(box) ~= scale * sum_i  prod_j  [Phi((hi_j-X_ij)/h_j) - Phi((lo_j-X_ij)/h_j)]
+  SUM(t;box) ~= scale * sum_i  m_it * prod_{j!=t} [Phi]_ij
+               with  m_ij = X_ij [Phi]_ij - h_j [phi]_ij      (eq. 10 per axis)
+  AVG        =  SUM / COUNT  (same empty-selection guard as the 1-D engine)
+
+A heterogeneous batch against one joint synopsis therefore reduces to ONE
+(queries x samples x dims) Phi-product reduction — evaluated either by a
+jitted vmapped pass here or by the kernels/aqp_boxes.py Pallas tile kernel.
+Full-H synopses (LSCV_H) don't factorise; their groups fall back to the
+deterministic quasi-MC path (count_box_H / sum_box_H), never failing the
+batch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .aqp import (OP_CODES, OP_COUNT, OP_SUM, KDESynopsis, _avg_or_zero, _Phi,
+                  _phi, box_qmc_terms)
+
+ColumnsKey = Optional[Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class BoxQuery:
+    """One aggregate over an axis-aligned box: OP WHERE lo_j <= X_j <= hi_j.
+
+    `columns` names the joint synopsis (None when run against a single
+    synopsis); `target` picks the SUM/AVG axis — a column name (requires
+    `columns`) or an integer axis index, default axis 0.
+    """
+    op: str                                   # "count" | "sum" | "avg"
+    lo: Tuple[float, ...]
+    hi: Tuple[float, ...]
+    columns: Optional[Tuple[str, ...]] = None
+    target: Optional[Union[int, str]] = None
+
+    def __post_init__(self):
+        if self.op not in OP_CODES:
+            raise ValueError(f"unknown op {self.op!r}; expected one of {sorted(OP_CODES)}")
+        object.__setattr__(self, "lo", tuple(float(v) for v in np.ravel(self.lo)))
+        object.__setattr__(self, "hi", tuple(float(v) for v in np.ravel(self.hi)))
+        if len(self.lo) != len(self.hi):
+            raise ValueError(f"lo/hi dimensionality mismatch: "
+                             f"{len(self.lo)} vs {len(self.hi)}")
+        if self.columns is not None:
+            object.__setattr__(self, "columns", tuple(self.columns))
+            if len(self.columns) != len(self.lo):
+                raise ValueError(f"box has {len(self.lo)} axes but names "
+                                 f"{len(self.columns)} columns")
+        self.target_index()      # validate eagerly: planning must not fail late
+
+    @property
+    def d(self) -> int:
+        return len(self.lo)
+
+    def target_index(self) -> int:
+        """Resolve `target` to an axis index (0 when unset)."""
+        if self.target is None:
+            return 0
+        if isinstance(self.target, str):
+            if self.columns is None or self.target not in self.columns:
+                raise ValueError(f"target column {self.target!r} not among "
+                                 f"box columns {self.columns}")
+            return self.columns.index(self.target)
+        t = int(self.target)
+        if not 0 <= t < self.d:
+            raise ValueError(f"target axis {t} out of range for d={self.d}")
+        return t
+
+
+def _box_terms(x: jax.Array, h_diag: jax.Array, lo: jax.Array, hi: jax.Array,
+               tgt: jax.Array, q_chunk: int = 64):
+    """vmapped eq. 11 closed forms: per-query unscaled (count_raw, sum_raw).
+    x: (n,d), h_diag: (d,), lo/hi: (q,d), tgt: (q,) int32.
+
+    Queries are processed in `q_chunk` slabs (lax.map over vmapped chunks):
+    the full (q, n, d) intermediate spills out of cache for serving-sized
+    batches, and the slab form measures ~12% faster on CPU at q=512.
+    """
+    axis = jnp.arange(x.shape[1])
+
+    def one(loq, hiq, t):
+        za = (loq[None, :] - x) / h_diag[None, :]
+        zb = (hiq[None, :] - x) / h_diag[None, :]
+        d_Phi = _Phi(zb) - _Phi(za)                               # (n, d)
+        moment = x * d_Phi - h_diag[None, :] * (_phi(zb) - _phi(za))
+        cnt = jnp.sum(jnp.prod(d_Phi, axis=1))
+        factors = jnp.where(axis[None, :] == t, moment, d_Phi)
+        sm = jnp.sum(jnp.prod(factors, axis=1))
+        return cnt, sm
+
+    q, d = lo.shape
+    if q <= q_chunk:
+        return jax.vmap(one)(lo, hi, tgt)
+    pad = (-q) % q_chunk
+    lop = jnp.pad(lo, ((0, pad), (0, 0))).reshape(-1, q_chunk, d)
+    hip = jnp.pad(hi, ((0, pad), (0, 0))).reshape(-1, q_chunk, d)
+    tgtp = jnp.pad(tgt, (0, pad)).reshape(-1, q_chunk)
+    cnt, sm = jax.lax.map(lambda args: jax.vmap(one)(*args), (lop, hip, tgtp))
+    return cnt.reshape(-1)[:q], sm.reshape(-1)[:q]
+
+
+@partial(jax.jit, static_argnames=("backend",))
+def batch_query_box(x: jax.Array, h_diag: jax.Array, lo: jax.Array,
+                    hi: jax.Array, tgt: jax.Array, ops: jax.Array,
+                    scale: jax.Array, backend: str = "jnp") -> jax.Array:
+    """Answer a mixed box-query batch against one diagonal-bandwidth joint
+    synopsis in a single jitted call.
+
+    x: (n,d) retained rows; lo/hi: (q,d); tgt/ops: (q,); scale: sample ->
+    relation factor.  backend="pallas" routes the (queries x samples x dims)
+    Phi-product reduction through the kernels/aqp_boxes.py tile kernel.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        cnt_raw, sum_raw = kops.aqp_box_sums(x, h_diag, lo, hi, tgt)
+    else:
+        cnt_raw, sum_raw = _box_terms(x, h_diag, lo, hi, tgt)
+    counts = scale * cnt_raw
+    sums = scale * sum_raw
+    avgs = _avg_or_zero(counts, sums)
+    return jnp.select([ops == OP_COUNT, ops == OP_SUM], [counts, sums], avgs)
+
+
+@dataclass
+class BoxQueryBatch:
+    """Planner for heterogeneous box-query batches.
+
+    Groups queries by their column tuple so each joint synopsis is answered in
+    a single jitted pass, then scatters results back to submission order —
+    the multi-d counterpart of QueryBatch.
+    """
+    queries: Sequence[BoxQuery]
+    _groups: Dict[ColumnsKey, List[int]] = field(init=False, repr=False)
+    _plans: Dict[ColumnsKey, tuple] = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self.queries = [q if isinstance(q, BoxQuery) else BoxQuery(*q)
+                        for q in self.queries]
+        groups: Dict[ColumnsKey, List[int]] = {}
+        for i, q in enumerate(self.queries):
+            groups.setdefault(q.columns, []).append(i)
+        for key, idx in groups.items():
+            dims = {self.queries[i].d for i in idx}
+            if len(dims) > 1:
+                raise ValueError(f"queries for synopsis {key} mix box "
+                                 f"dimensionalities {sorted(dims)}")
+        self._groups = groups
+        self._plans = {}    # device arrays built once, reused across run()s
+
+    def __len__(self) -> int:
+        return len(self.queries)
+
+    @property
+    def column_groups(self) -> List[ColumnsKey]:
+        return list(self._groups)
+
+    def plan(self, columns: ColumnsKey):
+        """(indices, lo, hi, target, opcodes) device arrays for one group;
+        memoised so repeated run() calls amortise the host->device build."""
+        if columns in self._plans:
+            return self._plans[columns]
+        idx = self._groups[columns]
+        qs = [self.queries[i] for i in idx]
+        lo = jnp.asarray([q.lo for q in qs], jnp.float32)
+        hi = jnp.asarray([q.hi for q in qs], jnp.float32)
+        tgt = jnp.asarray([q.target_index() for q in qs], jnp.int32)
+        ops_arr = jnp.asarray([OP_CODES[q.op] for q in qs], jnp.int32)
+        self._plans[columns] = (idx, lo, hi, tgt, ops_arr)
+        return self._plans[columns]
+
+    def _resolve(self, synopses, columns: ColumnsKey) -> KDESynopsis:
+        if isinstance(synopses, KDESynopsis):
+            if columns is not None:
+                raise ValueError("queries name columns but a single synopsis "
+                                 "was given; pass a {columns: synopsis} mapping")
+            return synopses
+        if columns is None:
+            raise ValueError("queries must name their columns when running "
+                             "against a synopsis mapping")
+        if columns not in synopses:
+            raise KeyError(f"no joint synopsis for columns {columns!r}; "
+                           f"have {sorted(synopses)}")
+        return synopses[columns]
+
+    def run(self, synopses: Union[KDESynopsis, Mapping[Tuple[str, ...], KDESynopsis]],
+            backend: str = "jnp") -> np.ndarray:
+        """Answer every query; returns answers in submission order."""
+        out = np.empty((len(self.queries),), np.float64)
+        for columns in self._groups:
+            syn = self._resolve(synopses, columns)
+            idx, lo, hi, tgt, ops_arr = self.plan(columns)
+            x = syn.x[:, None] if syn.x.ndim == 1 else syn.x
+            if x.shape[1] != lo.shape[1]:
+                raise ValueError(f"synopsis for {columns} is {x.shape[1]}-d "
+                                 f"but its queries are {lo.shape[1]}-d boxes")
+            if syn.H is not None:
+                ans = _qmc_box_answers(syn, [self.queries[i] for i in idx])
+            else:
+                scale = jnp.float32(syn.n_source / x.shape[0])
+                ans = batch_query_box(x, syn.h_diag(), lo, hi, tgt, ops_arr,
+                                      scale, backend=backend)
+            out[np.asarray(idx)] = np.asarray(ans, np.float64)
+        return out
+
+
+def _qmc_box_answers(syn: KDESynopsis, qs: Sequence[BoxQuery]) -> np.ndarray:
+    """Full-H fallback: eq. 11 has no product form under a full bandwidth
+    matrix, so each box is integrated by deterministic quasi-MC — one
+    node-set + density evaluation per query, shared between COUNT and SUM."""
+    x = syn.x[:, None] if syn.x.ndim == 1 else syn.x
+    scale = syn.n_source / x.shape[0]
+    out = np.empty((len(qs),), np.float64)
+    for i, q in enumerate(qs):
+        lo = jnp.asarray(q.lo, jnp.float32)
+        hi = jnp.asarray(q.hi, jnp.float32)
+        cnt, sm = box_qmc_terms(x, syn.H, lo, hi, target=q.target_index())
+        cnt, sm = scale * cnt, scale * sm
+        if q.op == "count":
+            out[i] = float(cnt)
+        else:
+            out[i] = float(sm if q.op == "sum" else _avg_or_zero(cnt, sm))
+    return out

@@ -1,2 +1,2 @@
-from .aqp_store import Reservoir, SynopsisCache, TelemetryStore
+from .aqp_store import MultiReservoir, Reservoir, SynopsisCache, TelemetryStore
 from .pipeline import TokenPipeline

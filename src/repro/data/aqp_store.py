@@ -9,61 +9,82 @@ O(sample) instead of O(history) — and the synopsis is *mergeable* across hosts
 (reservoir union), which is the property that makes this usable on a
 1000-node fleet where no host sees the global stream.
 
+Multi-column predicates need a *joint* density, which per-column reservoirs
+cannot provide (they decorrelate the columns).  `track_joint` registers a
+`MultiReservoir` that samples whole telemetry *rows* over a column tuple with
+the same versioned, weighted-merge semantics; `joint_synopsis` fits a
+diagonal-bandwidth (or full-H) synopsis over it for eq. 11 box queries.
+
 Fitting a synopsis is the expensive step (bandwidth selection is O(sample^2)
 for LSCV), so the store memoises fitted synopses in a `SynopsisCache` keyed by
-(column, selector, reservoir version); any reservoir update bumps the version
-and invalidates stale entries on the next lookup.
+(column-or-tuple, selector, reservoir version); any reservoir update bumps the
+version and invalidates stale entries on the next lookup.  The cache is a
+byte-bounded LRU (`max_entries` + `max_bytes`) with hit/miss/eviction
+counters surfaced through `TelemetryStore.stats()`.
 """
 from __future__ import annotations
 
 import copy
 import zlib
-from typing import Dict, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.aqp import KDESynopsis, Query, QueryBatch
+from repro.core.aqp_multid import BoxQuery, BoxQueryBatch
+
+ColumnKey = Union[str, Tuple[str, ...]]
 
 
 class Reservoir:
     """Algorithm-R reservoir sample with deterministic RNG.
 
     `version` counts accepted updates; synopsis caches key on it so any new
-    data invalidates derived synopses.
+    data invalidates derived synopses.  Subclasses set `_row_shape` to sample
+    composite items (MultiReservoir samples whole rows); all the acceptance
+    and merge logic operates on the leading axis and is shared.
     """
 
-    def __init__(self, capacity: int = 4096, seed: int = 0):
+    def __init__(self, capacity: int = 4096, seed: int = 0,
+                 _row_shape: Tuple[int, ...] = ()):
         self.capacity = capacity
         self.rng = np.random.default_rng(seed)
-        self.buf = np.empty((capacity,), np.float32)
+        self.buf = np.empty((capacity, *_row_shape), np.float32)
         self.n_seen = 0
         self.n_filled = 0      # initialized buffer slots; < capacity after a
         self.version = 0       # merge of reservoirs with smaller samples
 
+    def _coerce(self, values: np.ndarray) -> np.ndarray:
+        return np.asarray(values, np.float32).ravel()
+
+    def _spawn(self, seed: int) -> "Reservoir":
+        return type(self)(self.capacity, seed=seed)
+
     def add(self, values: np.ndarray) -> None:
-        values = np.asarray(values, np.float32).ravel()
-        if values.size == 0:
+        values = self._coerce(values)
+        if values.shape[0] == 0:
             return
         self.version += 1
         k = 0
         if self.n_filled < self.capacity and self.n_seen == self.n_filled:
-            k = min(self.capacity - self.n_filled, values.size)
+            k = min(self.capacity - self.n_filled, values.shape[0])
             self.buf[self.n_filled: self.n_filled + k] = values[:k]
             self.n_filled += k
             self.n_seen += k
         rest = values[k:]
-        if rest.size:
+        if rest.shape[0]:
             # Vectorised algorithm-R acceptance: one slot draw per element.
             # Replacement stays bounded by n_filled — after a merge leaves
             # n_filled < capacity with n_seen > n_filled, growing the sample
             # would overweight new data; replacing keeps it uniform.
             # Duplicate accepted slots: numpy fancy assignment keeps the last
             # write, matching sequential application order.
-            stream_idx = self.n_seen + np.arange(rest.size)
+            stream_idx = self.n_seen + np.arange(rest.shape[0])
             j = self.rng.integers(0, stream_idx + 1)
             accept = j < self.n_filled
             self.buf[j[accept]] = rest[accept]
-            self.n_seen += rest.size
+            self.n_seen += rest.shape[0]
 
     def sample(self) -> np.ndarray:
         return self.buf[: self.n_filled].copy()
@@ -73,7 +94,7 @@ class Reservoir:
         size its sample represents (n_seen), not its retained-sample size —
         otherwise chained cross-host merges skew the mixture (a second-level
         merge would weight a single host as much as a pair of hosts)."""
-        out = Reservoir(self.capacity, seed=int(self.rng.integers(1 << 31)))
+        out = self._spawn(seed=int(self.rng.integers(1 << 31)))
         s1, s2 = self.sample(), other.sample()
         total = self.n_seen + other.n_seen
         if total == 0:
@@ -103,76 +124,197 @@ class Reservoir:
         return out
 
 
+class MultiReservoir(Reservoir):
+    """Row-sampling reservoir over a tuple of columns.
+
+    Keeps whole telemetry rows (column tuples) so a *joint* density can be
+    fitted — per-column reservoirs sample each column independently and lose
+    every cross-column correlation.  Same versioned algorithm-R acceptance
+    and weighted-merge semantics as the 1-D `Reservoir`.
+    """
+
+    def __init__(self, columns: Sequence[str], capacity: int = 4096, seed: int = 0):
+        self.columns = tuple(columns)
+        if len(self.columns) < 2:
+            raise ValueError("MultiReservoir needs >= 2 columns; use Reservoir "
+                             "for a single column")
+        super().__init__(capacity, seed, _row_shape=(len(self.columns),))
+
+    def _coerce(self, values: np.ndarray) -> np.ndarray:
+        rows = np.asarray(values, np.float32)
+        if rows.ndim != 2 or rows.shape[1] != len(self.columns):
+            raise ValueError(f"expected rows of shape (m, {len(self.columns)}) "
+                             f"for columns {self.columns}, got {rows.shape}")
+        return rows
+
+    def _spawn(self, seed: int) -> "MultiReservoir":
+        return MultiReservoir(self.columns, self.capacity, seed=seed)
+
+    def merge(self, other: "Reservoir") -> "Reservoir":
+        if not isinstance(other, MultiReservoir) or other.columns != self.columns:
+            raise ValueError(f"cannot merge joint reservoirs over different "
+                             f"columns: {self.columns} vs "
+                             f"{getattr(other, 'columns', None)}")
+        return super().merge(other)
+
+
+def _entry_nbytes(syn) -> int:
+    """Byte footprint of a cached synopsis — the device payload (sample +
+    bandwidth).  Payloads without device arrays size to 0; the entry bound
+    still applies to them."""
+    nb = 0
+    for attr in ("x", "h", "H"):
+        v = getattr(syn, attr, None)
+        if v is not None and hasattr(v, "nbytes"):
+            nb += int(v.nbytes)
+    return nb
+
+
 class SynopsisCache:
-    """Memoises fitted synopses keyed by (column, selector, sample version).
+    """Memoises fitted synopses keyed by (column-or-tuple, selector, version).
 
     One live entry per (column, selector): a lookup whose stored version
     differs from the reservoir's current version is a miss and is replaced on
     the next `put` — reservoir updates therefore invalidate implicitly.
-    Bounded by `max_entries` (FIFO eviction; entry count, not bytes).
+    Bounded by `max_entries` and (optionally) `max_bytes`, with LRU eviction:
+    hits refresh recency, eviction pops the least-recently-used entry and is
+    counted in `stats()`.
     """
 
-    def __init__(self, max_entries: int = 128):
+    def __init__(self, max_entries: int = 128, max_bytes: Optional[int] = None):
         self.max_entries = max_entries
-        self._entries: Dict[Tuple[str, str], Tuple[int, KDESynopsis]] = {}
+        self.max_bytes = max_bytes
+        self._entries: "OrderedDict[Tuple[Hashable, str], Tuple[int, KDESynopsis, int]]" = \
+            OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.oversize = 0      # entries refused because nbytes > max_bytes
+        self._bytes = 0
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    def get(self, column: str, selector: str, version: int) -> Optional[KDESynopsis]:
-        ent = self._entries.get((column, selector))
+    @property
+    def nbytes(self) -> int:
+        return self._bytes
+
+    def get(self, column: ColumnKey, selector: str, version: int) -> Optional[KDESynopsis]:
+        key = (column, selector)
+        ent = self._entries.get(key)
         if ent is not None and ent[0] == version:
             self.hits += 1
+            self._entries.move_to_end(key)            # LRU: refresh recency
             return ent[1]
         self.misses += 1
         return None
 
-    def put(self, column: str, selector: str, version: int, syn: KDESynopsis) -> None:
+    def put(self, column: ColumnKey, selector: str, version: int, syn: KDESynopsis) -> None:
         key = (column, selector)
-        if key not in self._entries and len(self._entries) >= self.max_entries:
-            self._entries.pop(next(iter(self._entries)))
-        self._entries[key] = (version, syn)
+        nb = _entry_nbytes(syn)
+        if self.max_bytes is not None and nb > self.max_bytes:
+            # An entry that can never fit must not flush the whole cache on
+            # its way through the eviction loop; refuse it and keep the rest.
+            self.oversize += 1
+            if key in self._entries:
+                self._bytes -= self._entries.pop(key)[2]
+            return
+        if key in self._entries:
+            self._bytes -= self._entries.pop(key)[2]
+        self._entries[key] = (version, syn, nb)
+        self._bytes += nb
+        while (len(self._entries) > self.max_entries
+               or (self.max_bytes is not None and self._bytes > self.max_bytes)):
+            _, (_, _, ev_nb) = self._entries.popitem(last=False)
+            self._bytes -= ev_nb
+            self.evictions += 1
 
-    def invalidate(self, column: Optional[str] = None) -> None:
+    def invalidate(self, column: Optional[ColumnKey] = None) -> None:
         if column is None:
             self._entries.clear()
-        else:
-            for key in [k for k in self._entries if k[0] == column]:
-                self._entries.pop(key)
+            self._bytes = 0
+            return
+        for key in [k for k in self._entries if k[0] == column]:
+            self._bytes -= self._entries.pop(key)[2]
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses, "entries": len(self._entries)}
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries), "bytes": self._bytes,
+                "evictions": self.evictions, "oversize": self.oversize}
 
 
 class TelemetryStore:
-    def __init__(self, capacity: int = 4096, seed: int = 0, cache_entries: int = 128):
+    def __init__(self, capacity: int = 4096, seed: int = 0,
+                 cache_entries: int = 128, cache_bytes: Optional[int] = None):
         self.columns: Dict[str, Reservoir] = {}
+        self.joints: Dict[Tuple[str, ...], MultiReservoir] = {}
         self.capacity = capacity
         self.seed = seed
-        self.cache = SynopsisCache(max_entries=cache_entries)
+        self.cache = SynopsisCache(max_entries=cache_entries,
+                                   max_bytes=cache_bytes)
+
+    def _col_seed(self, name: str) -> int:
+        # crc32, not hash(): Python string hashing is randomised per
+        # process, which would make the reservoirs nondeterministic.
+        return self.seed + zlib.crc32(name.encode()) % 1000
+
+    def track_joint(self, columns: Sequence[str]) -> None:
+        """Register a joint (row) reservoir over a column tuple.  Only rows
+        arriving *after* registration are sampled — per-column reservoirs
+        cannot reconstruct past rows — so call this before `add_batch`."""
+        key = tuple(columns)
+        if key not in self.joints:
+            self.joints[key] = MultiReservoir(
+                key, self.capacity, seed=self._col_seed("|".join(key)))
 
     def add_batch(self, stats: Dict[str, np.ndarray]) -> None:
+        # Build joint rows BEFORE mutating any reservoir: a ragged batch must
+        # fail cleanly, not leave per-column reservoirs updated with the
+        # joints skipped (partial mutation would silently skew every joint
+        # synopsis fitted afterwards).
+        joint_rows = {}
+        for cols in self.joints:
+            if all(c in stats for c in cols):
+                arrays = [np.asarray(stats[c], np.float32).ravel() for c in cols]
+                sizes = {c: a.shape[0] for c, a in zip(cols, arrays)}
+                if len(set(sizes.values())) > 1:
+                    raise ValueError(f"joint {cols} needs row-aligned columns, "
+                                     f"got lengths {sizes}")
+                joint_rows[cols] = np.stack(arrays, axis=1)
         for name, values in stats.items():
             if name not in self.columns:
-                # crc32, not hash(): Python string hashing is randomised per
-                # process, which would make the reservoirs nondeterministic.
-                col_seed = self.seed + zlib.crc32(name.encode()) % 1000
-                self.columns[name] = Reservoir(self.capacity, seed=col_seed)
+                self.columns[name] = Reservoir(self.capacity,
+                                               seed=self._col_seed(name))
             self.columns[name].add(values)
+        for cols, rows in joint_rows.items():
+            self.joints[cols].add(rows)
 
     def synopsis(self, column: str, selector: str = "plugin") -> KDESynopsis:
         res = self.columns.get(column)
         if res is None:
             raise KeyError(f"unknown column {column!r}; "
                            f"have {sorted(self.columns)}")
-        syn = self.cache.get(column, selector, res.version)
+        return self._fit_cached(column, res, selector)
+
+    def joint_synopsis(self, columns: Sequence[str],
+                       selector: str = "plugin") -> KDESynopsis:
+        """Joint synopsis over a tracked column tuple: per-axis diagonal
+        bandwidths (plugin/silverman), scalar LSCV_h, or full-H LSCV_H."""
+        key = tuple(columns)
+        res = self.joints.get(key)
+        if res is None:
+            raise KeyError(f"no joint reservoir for columns {key!r}; call "
+                           f"track_joint({key!r}) before add_batch "
+                           f"(have {sorted(self.joints)})")
+        return self._fit_cached(key, res, selector)
+
+    def _fit_cached(self, key: ColumnKey, res: Reservoir, selector: str) -> KDESynopsis:
+        syn = self.cache.get(key, selector, res.version)
         if syn is None:
             syn = KDESynopsis.fit(res.sample(), selector=selector,
                                   max_sample=self.capacity)
             syn.n_source = res.n_seen
-            self.cache.put(column, selector, res.version, syn)
+            self.cache.put(key, selector, res.version, syn)
         return syn
 
     # -- queries ------------------------------------------------------------
@@ -197,9 +339,32 @@ class TelemetryStore:
         synopses = {col: self.synopsis(col, selector) for col in batch.columns}
         return batch.run(synopses, backend=backend)
 
+    def query_box_batch(self, queries: Sequence[BoxQuery],
+                        selector: str = "plugin",
+                        backend: str = "jnp") -> np.ndarray:
+        """Answer N multi-column box queries (eq. 11) with one jitted pass per
+        distinct column tuple; joint synopses come from the cache."""
+        batch = BoxQueryBatch(queries)
+        if None in batch.column_groups:
+            raise ValueError("every box query must name its columns when "
+                             "running against a TelemetryStore")
+        synopses = {cols: self.joint_synopsis(cols, selector)
+                    for cols in batch.column_groups}
+        return batch.run(synopses, backend=backend)
+
+    def stats(self) -> Dict[str, object]:
+        """Store-level observability: cache hit/miss/eviction counters plus
+        per-reservoir stream sizes (ROADMAP follow-up)."""
+        return {
+            "cache": self.cache.stats(),
+            "columns": {name: res.n_seen for name, res in self.columns.items()},
+            "joints": {key: res.n_seen for key, res in self.joints.items()},
+        }
+
     def merge(self, other: "TelemetryStore") -> "TelemetryStore":
         out = TelemetryStore(self.capacity, self.seed,
-                             cache_entries=self.cache.max_entries)
+                             cache_entries=self.cache.max_entries,
+                             cache_bytes=self.cache.max_bytes)
         for name in set(self.columns) | set(other.columns):
             if name in self.columns and name in other.columns:
                 out.columns[name] = self.columns[name].merge(other.columns[name])
@@ -208,4 +373,10 @@ class TelemetryStore:
                 # to the source store must not leak into it through aliasing
                 out.columns[name] = copy.deepcopy(
                     self.columns.get(name) or other.columns[name])
+        for key in set(self.joints) | set(other.joints):
+            if key in self.joints and key in other.joints:
+                out.joints[key] = self.joints[key].merge(other.joints[key])
+            else:
+                out.joints[key] = copy.deepcopy(
+                    self.joints.get(key) or other.joints[key])
         return out

@@ -6,7 +6,9 @@ lscv_grid       — per-h T~ reduction over precomputed S (LSCV_h)     [§6.2]
 gh_fused        — fused quadratic-form + T_H reduction (LSCV_H)      [§6.3]
 kde_eval        — direct KDE evaluation (AQP serving)                [eq. 3]
 aqp_batch       — batched (queries x sample) Phi-diff reduction      [eqs. 9-10]
+aqp_boxes       — batched (queries x samples x dims) box reduction   [eq. 11]
 triangle        — Appendix-A tile index math (eqs. 49/50)
 ops             — jitted wrappers; ref — pure-jnp oracles
+tuning          — env-overridable tile-size defaults (real-TPU runs)
 """
 from . import ops, ref, triangle

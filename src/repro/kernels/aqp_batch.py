@@ -21,8 +21,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE = 256
-Q_TILE = 128
+from .tuning import env_int
+
+# Env-tunable defaults (REPRO_AQP_TILE / REPRO_AQP_Q_TILE) so interpret=False
+# runs on real TPU can be tuned without editing source; kwargs still win.
+TILE = env_int("REPRO_AQP_TILE", 256)
+Q_TILE = env_int("REPRO_AQP_Q_TILE", 128)
 
 _SQRT1_2 = 1.0 / math.sqrt(2.0)
 _INV_SQRT_2PI = 1.0 / math.sqrt(2.0 * math.pi)

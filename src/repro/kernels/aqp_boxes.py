@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: batched multi-d box-query reduction (paper eq. 11).
+
+One launch answers a whole batch of axis-aligned box queries against one
+joint synopsis with diagonal bandwidth.  For query q (box [lo_q, hi_q],
+SUM/AVG target axis t_q) and sample row x_i it accumulates
+
+    count_raw[q] = sum_i  prod_j  dPhi_qij                      (eq. 11)
+    sum_raw[q]   = sum_i  m_qit * prod_{j != t_q} dPhi_qij
+      with  dPhi_qij = Phi((hi_qj - x_ij)/h_j) - Phi((lo_qj - x_ij)/h_j)
+            m_qij    = x_ij dPhi_qij - h_j dphi_qij             (eq. 10/axis)
+
+Grid: (query-tile major, data-tile minor) — the (qk, 2) accumulator block
+stays resident while data tiles stream through, the same pattern as
+aqp_batch.py.  The dims axis stays whole inside the block (d is small for
+box predicates), so the per-axis select-and-product runs entirely in
+registers/VMEM.  COUNT/SUM/AVG selection and the sample->relation scale are
+applied by the caller (core/aqp_multid.py); the kernel is a pure two-channel
+reduction.
+
+Tile sizes are env-tunable (REPRO_AQP_BOXES_TILE / REPRO_AQP_BOXES_Q_TILE)
+for `interpret=False` runs on real TPU; call-site kwargs still win.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tuning import env_int
+
+TILE = env_int("REPRO_AQP_BOXES_TILE", 128)
+Q_TILE = env_int("REPRO_AQP_BOXES_Q_TILE", 64)
+
+_SQRT1_2 = 1.0 / math.sqrt(2.0)
+_INV_SQRT_2PI = 1.0 / math.sqrt(2.0 * math.pi)
+
+
+def _kernel(lo_ref, hi_ref, tgt_ref, x_ref, h_ref, out_ref,
+            *, n: int, qk: int, k: int, d: int):
+    j = pl.program_id(1)     # data-tile index (minor: varies fastest)
+    lo = lo_ref[...]         # (qk, d) box lower corners
+    hi = hi_ref[...]         # (qk, d) box upper corners
+    tgt = tgt_ref[...]       # (qk,)  SUM/AVG target axis per query
+    x = x_ref[...]           # (k, d) sample rows (padded rows masked below)
+    h = h_ref[...]           # (d,)   diagonal bandwidth
+    inv_h = 1.0 / h
+
+    za = (lo[:, None, :] - x[None, :, :]) * inv_h[None, None, :]   # (qk, k, d)
+    zb = (hi[:, None, :] - x[None, :, :]) * inv_h[None, None, :]
+    d_Phi = 0.5 * (jax.scipy.special.erf(zb * _SQRT1_2)
+                   - jax.scipy.special.erf(za * _SQRT1_2))
+    d_phi = _INV_SQRT_2PI * (jnp.exp(-0.5 * zb * zb) - jnp.exp(-0.5 * za * za))
+    moment = x[None, :, :] * d_Phi - h[None, None, :] * d_phi
+
+    # SUM factors: axis t_q carries the first-moment term, every other axis
+    # its Phi difference — a select beats dividing the full product by
+    # dPhi_t, which blows up when a box edge leaves ~zero mass on an axis.
+    axis = jax.lax.broadcasted_iota(jnp.int32, (1, 1, d), 2)
+    factors = jnp.where(axis == tgt[:, None, None], moment, d_Phi)
+
+    cnt_i = jnp.prod(d_Phi, axis=2)                    # (qk, k)
+    sum_i = jnp.prod(factors, axis=2)
+
+    rows = j * k + jax.lax.broadcasted_iota(jnp.int32, (qk, k), 1)
+    valid = rows < n
+    cnt = jnp.sum(jnp.where(valid, cnt_i, 0.0), axis=1)
+    sm = jnp.sum(jnp.where(valid, sum_i, 0.0), axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.stack([cnt, sm], axis=1)       # (qk, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "q_tile", "interpret"))
+def aqp_box_sums(x: jax.Array, h_diag: jax.Array, lo: jax.Array, hi: jax.Array,
+                 tgt: jax.Array, tile: int = TILE, q_tile: int = Q_TILE,
+                 interpret: bool = True):
+    """Two-channel (queries x samples x dims) reduction.
+
+    x: (n, d) sample rows; h_diag: (d,); lo/hi: (q, d); tgt: (q,) int32.
+    Returns (count_raw, sum_raw), each (q,): the *unscaled* eq. 11 box
+    integrals summed over the retained sample.
+    """
+    n, d = x.shape
+    q = lo.shape[0]
+    if n == 0 or q == 0:
+        # zero grid iterations would leave the output buffer uninitialized
+        z = jnp.zeros((q,), x.dtype)
+        return z, z
+
+    k = min(tile, max(8, 1 << (n - 1).bit_length()))
+    qk = min(q_tile, max(8, 1 << (q - 1).bit_length()))
+    xp = jnp.pad(x, ((0, (-n) % k), (0, 0)))
+    lop = jnp.pad(lo, ((0, (-q) % qk), (0, 0)))
+    hip = jnp.pad(hi, ((0, (-q) % qk), (0, 0)))
+    tgtp = jnp.pad(tgt, (0, (-q) % qk))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n, qk=qk, k=k, d=d),
+        grid=(lop.shape[0] // qk, xp.shape[0] // k),
+        in_specs=[
+            pl.BlockSpec((qk, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((qk, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((qk,), lambda i, j: (i,)),
+            pl.BlockSpec((k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((qk, 2), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((lop.shape[0], 2), x.dtype),
+        interpret=interpret,
+    )(lop, hip, tgtp, xp, h_diag.astype(x.dtype))
+    return out[:q, 0], out[:q, 1]

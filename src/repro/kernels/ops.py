@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 
 from . import aqp_batch as _ab
+from . import aqp_boxes as _abx
 from . import gh_fused as _gh
 from . import kde_eval as _kde
 from . import lscv_grid as _lg
@@ -42,3 +43,8 @@ def kde_eval(points, x, h, tile=_kde.TILE):
 def aqp_batch_sums(x, h, a, b, tile=_ab.TILE, q_tile=_ab.Q_TILE):
     return _ab.aqp_batch_sums(x, h, a, b, tile=tile, q_tile=q_tile,
                               interpret=INTERPRET)
+
+
+def aqp_box_sums(x, h_diag, lo, hi, tgt, tile=_abx.TILE, q_tile=_abx.Q_TILE):
+    return _abx.aqp_box_sums(x, h_diag, lo, hi, tgt, tile=tile, q_tile=q_tile,
+                             interpret=INTERPRET)

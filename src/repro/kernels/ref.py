@@ -65,6 +65,26 @@ def kde_eval(points: jnp.ndarray, x: jnp.ndarray, h) -> jnp.ndarray:
     return norm * jnp.mean(jnp.exp(-quad), axis=1)
 
 
+def aqp_box_sums(x: jnp.ndarray, h_diag: jnp.ndarray, lo: jnp.ndarray,
+                 hi: jnp.ndarray, tgt: jnp.ndarray):
+    """Unscaled eq. 11 box integrals for a query batch (product kernel,
+    diagonal bandwidth).  x: (n,d), lo/hi: (q,d), tgt: (q,) int32 ->
+    (count_raw, sum_raw), each (q,)."""
+    sqrt1_2 = 1.0 / math.sqrt(2.0)
+    inv_sqrt_2pi = 1.0 / math.sqrt(2.0 * math.pi)
+    za = (lo[:, None, :] - x[None, :, :]) / h_diag[None, None, :]   # (q, n, d)
+    zb = (hi[:, None, :] - x[None, :, :]) / h_diag[None, None, :]
+    d_Phi = 0.5 * (jax.scipy.special.erf(zb * sqrt1_2)
+                   - jax.scipy.special.erf(za * sqrt1_2))
+    d_phi = inv_sqrt_2pi * (jnp.exp(-0.5 * zb * zb) - jnp.exp(-0.5 * za * za))
+    moment = x[None, :, :] * d_Phi - h_diag[None, None, :] * d_phi
+    axis = jnp.arange(x.shape[1])
+    factors = jnp.where(axis[None, None, :] == tgt[:, None, None], moment, d_Phi)
+    count_raw = jnp.sum(jnp.prod(d_Phi, axis=2), axis=1)
+    sum_raw = jnp.sum(jnp.prod(factors, axis=2), axis=1)
+    return count_raw, sum_raw
+
+
 def aqp_batch_sums(x: jnp.ndarray, h, a: jnp.ndarray, b: jnp.ndarray):
     """Unscaled closed-form integrals of eqs. 9-10 for a query batch.
     x: (n,), a/b: (q,) -> (count_raw, sum_raw), each (q,)."""

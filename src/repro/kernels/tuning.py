@@ -1,0 +1,29 @@
+"""Tile-size tuning knobs for the Pallas kernels.
+
+Every kernel module resolves its default tile sizes through `env_int` at
+import time, so `interpret=False` runs on real TPU can be tuned without
+editing source:
+
+    REPRO_AQP_TILE=512 REPRO_AQP_Q_TILE=256 python -m benchmarks.run ...
+
+Call-site kwargs (`tile=`, `q_tile=` on the ops.py wrappers) still override
+the environment; the env var only moves the *default*.
+"""
+from __future__ import annotations
+
+import os
+
+
+def env_int(name: str, default: int) -> int:
+    """Positive-int env override with a loud failure on malformed values —
+    a silently ignored typo in a tuning sweep wastes a TPU reservation."""
+    raw = os.environ.get(name)
+    if raw is None or not raw.strip():
+        return default
+    try:
+        value = int(raw)
+    except ValueError:
+        raise ValueError(f"{name} must be a positive integer, got {raw!r}")
+    if value <= 0:
+        raise ValueError(f"{name} must be a positive integer, got {value}")
+    return value

@@ -8,9 +8,11 @@ LM mode (default): prefill + greedy decode on a smoke config.
 AQP mode: stand up a TelemetryStore over synthetic telemetry columns and
 serve a mixed COUNT/SUM/AVG query batch through the batched engine
 (core/aqp.py QueryBatch) — one jitted pass per column, synopses cached.
+A joint (loss, latency_ms) reservoir additionally serves multi-column box
+predicates (eq. 11) through BoxQueryBatch — one jitted pass per column tuple.
 
     PYTHONPATH=src python -m repro.launch.serve --mode aqp \
-        --rows 200000 --queries 2000 --selector plugin
+        --rows 200000 --queries 2000 --box-queries 256 --selector plugin
 """
 from __future__ import annotations
 
@@ -63,6 +65,33 @@ def make_query_mix(n_queries: int, ranges, seed: int = 0):
     return queries
 
 
+def make_box_query_mix(n_queries: int, columns, ranges, seed: int = 0):
+    """Deterministic mixed COUNT/SUM/AVG *box* batch over one column tuple.
+    `columns` is the joint tuple; `ranges` maps each column -> (lo, hi)
+    sampling range.  SUM/AVG target a random axis.  Shared by the serving
+    mode, the AQP example, and the box benchmark."""
+    import numpy as np
+
+    from repro.core import BoxQuery
+
+    rng = np.random.default_rng(seed)
+    columns = tuple(columns)
+    ops = ["count", "sum", "avg"]
+    queries = []
+    for _ in range(n_queries):
+        lo, hi = [], []
+        for col in columns:
+            c_lo, c_hi = ranges[col]
+            a = float(rng.uniform(c_lo, c_hi))
+            lo.append(a)
+            hi.append(float(rng.uniform(a, c_hi)))
+        op = ops[int(rng.integers(3))]
+        target = columns[int(rng.integers(len(columns)))] if op != "count" else None
+        queries.append(BoxQuery(op, tuple(lo), tuple(hi), columns=columns,
+                                target=target))
+    return queries
+
+
 def run_aqp(args) -> None:
     import numpy as np
 
@@ -76,7 +105,9 @@ def run_aqp(args) -> None:
                                rng.normal(160, 30, n)).astype(np.float32),
         "seq_len": rng.integers(16, 2048, n).astype(np.float32),
     }
+    joint_cols = ("loss", "latency_ms")
     store = TelemetryStore(capacity=args.capacity, seed=0)
+    store.track_joint(joint_cols)          # before add_batch: joints sample rows
     store.add_batch(telemetry)
 
     columns = list(telemetry)
@@ -97,10 +128,29 @@ def run_aqp(args) -> None:
           f"({n:,} rows each) in {dt * 1e3:.1f} ms -> {qps:,.0f} queries/s "
           f"[{args.backend}]")
     print(f"[serve:aqp] synopsis cache: {cs['hits']} hits / {cs['misses']} misses "
-          f"({cs['entries']} entries)")
+          f"({cs['entries']} entries, {cs['bytes']:,} bytes, "
+          f"{cs['evictions']} evictions)")
     for q, ans in list(zip(queries, answers))[:6]:
         print(f"  {q.op.upper():5s}({q.column}) in [{q.a:9.2f}, {q.b:9.2f}] "
               f"~= {ans:,.2f}")
+
+    if args.box_queries > 0:
+        box_queries = make_box_query_mix(args.box_queries, joint_cols,
+                                         ranges, seed=2)
+        store.query_box_batch(box_queries, selector=args.selector,
+                              backend=args.backend)           # warm-up
+        t0 = time.perf_counter()
+        box_answers = store.query_box_batch(box_queries, selector=args.selector,
+                                            backend=args.backend)
+        dt = time.perf_counter() - t0
+        print(f"[serve:aqp] {len(box_queries)} box queries over joint "
+              f"{joint_cols} in {dt * 1e3:.1f} ms -> "
+              f"{len(box_queries) / dt:,.0f} queries/s [{args.backend}]")
+        for q, ans in list(zip(box_queries, box_answers))[:4]:
+            box = " & ".join(f"{a:.1f}<={c}<={b:.1f}"
+                             for c, a, b in zip(q.columns, q.lo, q.hi))
+            tgt = f"({q.target})" if q.op != "count" else ""
+            print(f"  {q.op.upper():5s}{tgt} WHERE {box} ~= {ans:,.2f}")
 
 
 def main() -> None:
@@ -115,6 +165,9 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--rows", type=int, default=200_000)
     ap.add_argument("--queries", type=int, default=2000)
+    ap.add_argument("--box-queries", type=int, default=256,
+                    help="multi-column box predicates served from the joint "
+                         "synopsis (0 disables)")
     ap.add_argument("--capacity", type=int, default=2048)
     ap.add_argument("--selector", default="plugin",
                     choices=["plugin", "silverman", "lscv_h"])

@@ -1,0 +1,215 @@
+"""Multi-dimensional AQP (core/aqp_multid.py): BoxQueryBatch vs brute-force
+eq. 11, the quasi-MC fallback, per-axis bandwidth fitting, planner semantics,
+and the graceful full-H routing in the 1-D engine."""
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (BoxQuery, BoxQueryBatch, KDESynopsis, Query,
+                        QueryBatch)
+from repro.core.aqp import AVG_MIN_COUNT
+
+_erf = np.vectorize(math.erf)
+
+
+def _brute_force_eq11(x, h_diag, queries, n_source):
+    """Direct float64 evaluation of the eq. 11 closed forms, one query at a
+    time — the oracle the batched engine must reproduce."""
+    x = np.asarray(x, np.float64)
+    h = np.asarray(h_diag, np.float64)
+    scale = n_source / x.shape[0]
+    inv_sqrt_2pi = 1.0 / math.sqrt(2.0 * math.pi)
+    out = np.empty((len(queries),), np.float64)
+    for qi, q in enumerate(queries):
+        za = (np.asarray(q.lo) - x) / h
+        zb = (np.asarray(q.hi) - x) / h
+        d_Phi = 0.5 * (_erf(zb / math.sqrt(2)) - _erf(za / math.sqrt(2)))
+        d_phi = inv_sqrt_2pi * (np.exp(-0.5 * zb * zb) - np.exp(-0.5 * za * za))
+        count = scale * np.sum(np.prod(d_Phi, axis=1))
+        t = q.target_index()
+        moment = x * d_Phi - h * d_phi
+        factors = d_Phi.copy()
+        factors[:, t] = moment[:, t]
+        s = scale * np.sum(np.prod(factors, axis=1))
+        if q.op == "count":
+            out[qi] = count
+        elif q.op == "sum":
+            out[qi] = s
+        else:
+            out[qi] = s / count if count > AVG_MIN_COUNT else 0.0
+    return out
+
+
+def _mixed_boxes(rng, d, n_queries):
+    ops = ["count", "sum", "avg"]
+    queries = []
+    for i in range(n_queries):
+        lo = rng.uniform(-2.0, 0.0, d)
+        hi = lo + rng.uniform(0.8, 3.0, d)
+        queries.append(BoxQuery(ops[i % 3], tuple(lo), tuple(hi),
+                                target=int(rng.integers(d))))
+    return queries
+
+
+@pytest.mark.parametrize("d", [2, 3])
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_box_batch_matches_brute_force_eq11(rng, d, backend):
+    """Acceptance bar: batched (and Pallas) eq. 11 answers match a float64
+    per-query brute-force evaluation to 1e-5 relative error."""
+    data = rng.normal(0, 1, (1024, d)).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=2048)
+    syn.n_source = 100_000      # exercise a non-trivial sample->relation scale
+    queries = _mixed_boxes(rng, d, 33)    # non-multiple of any tile size
+
+    got = BoxQueryBatch(queries).run(syn, backend=backend)
+    want = _brute_force_eq11(syn.x, np.asarray(syn.h), queries, syn.n_source)
+    np.testing.assert_allclose(
+        got, want, rtol=1e-5, atol=1e-5 * max(1.0, np.abs(want).max()))
+
+
+def test_box_batch_vs_exact_answers(rng):
+    data = rng.normal(0, 1, (40000, 2)).astype(np.float32)
+    data[:, 1] = 0.6 * data[:, 0] + 0.8 * data[:, 1]      # correlated columns
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=2048)
+    lo, hi = (-1.0, -1.0), (1.0, 1.0)
+    ans = BoxQueryBatch([
+        BoxQuery("count", lo, hi),
+        BoxQuery("sum", lo, hi, target=0),
+        BoxQuery("avg", lo, hi, target=1),
+    ]).run(syn)
+    sel = ((data >= -1.0) & (data <= 1.0)).all(axis=1)
+    assert ans[0] == pytest.approx(float(sel.sum()), rel=0.08)
+    # SUM of a near-symmetric column cancels towards zero -> bound by count
+    assert abs(ans[1] - data[sel, 0].sum()) < 0.05 * sel.sum()
+    assert ans[2] == pytest.approx(float(data[sel, 1].mean()), abs=0.05)
+
+
+def test_box_batch_matches_qmc_fallback(rng):
+    """H = diag(h^2) makes the full-H density identical to the product
+    kernel, so the quasi-MC route must agree with the closed forms to QMC
+    accuracy — this pins the two independent integration paths together."""
+    x = jnp.asarray(rng.normal(0, 1, (512, 2)).astype(np.float32))
+    h = jnp.asarray([0.35, 0.45], jnp.float32)
+    syn_diag = KDESynopsis(x=x, h=h, n_source=512)
+    syn_full = KDESynopsis(x=x, H=jnp.diag(h * h), n_source=512)
+    queries = [BoxQuery("count", (-1.5, -1.0), (1.0, 1.5)),
+               BoxQuery("sum", (-1.5, -1.0), (1.0, 1.5), target=1),
+               BoxQuery("avg", (-1.5, -1.0), (1.0, 1.5), target=0)]
+    a = BoxQueryBatch(queries).run(syn_diag)
+    b = BoxQueryBatch(queries).run(syn_full)
+    np.testing.assert_allclose(a, b, rtol=0.05, atol=0.05)
+
+
+def test_multid_fit_per_axis_bandwidths(rng):
+    data = rng.normal(0, 1, (4000, 3)).astype(np.float32)
+    data[:, 2] *= 10.0                      # wider axis -> wider bandwidth
+    for selector in ["plugin", "silverman"]:
+        syn = KDESynopsis.fit(jnp.asarray(data), selector=selector,
+                              max_sample=1024)
+        h = np.asarray(syn.h)
+        assert h.shape == (3,)
+        assert (h > 0).all()
+        assert h[2] > 3.0 * h[0]            # scales with the axis spread
+
+
+def test_degenerate_boxes(rng):
+    data = rng.normal(0, 1, (2000, 2)).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=512)
+    ans = BoxQueryBatch([
+        BoxQuery("count", (0.3, 0.3), (0.3, 0.3)),       # zero-measure box
+        BoxQuery("count", (40.0, 40.0), (50.0, 50.0)),   # empty intersection
+        BoxQuery("avg", (40.0, 40.0), (50.0, 50.0), target=1),
+    ]).run(syn)
+    assert ans[0] == pytest.approx(0.0, abs=1e-5)
+    assert ans[1] == pytest.approx(0.0, abs=1e-3)
+    assert ans[2] == 0.0 and np.isfinite(ans).all()
+
+
+def test_box_batch_groups_column_tuples(rng):
+    d1 = rng.normal(0, 1, (8000, 2)).astype(np.float32)
+    d2 = rng.normal(3, 1, (8000, 3)).astype(np.float32)
+    synopses = {
+        ("a", "b"): KDESynopsis.fit(jnp.asarray(d1), selector="plugin",
+                                    max_sample=512),
+        ("u", "v", "w"): KDESynopsis.fit(jnp.asarray(d2), selector="plugin",
+                                         max_sample=512),
+    }
+    queries = [
+        BoxQuery("count", (-1, -1), (1, 1), columns=("a", "b")),
+        BoxQuery("sum", (2, 2, 2), (4, 4, 4), columns=("u", "v", "w"),
+                 target="w"),
+        BoxQuery("avg", (-2, -2), (0, 0), columns=("a", "b"), target="b"),
+    ]
+    batch = BoxQueryBatch(queries)
+    assert sorted(batch.column_groups) == [("a", "b"), ("u", "v", "w")]
+    got = batch.run(synopses)
+    for q, ans in zip(queries, got):
+        syn = synopses[q.columns]
+        t = q.target_index()
+        want = {"count": lambda: syn.count_box(q.lo, q.hi),
+                "sum": lambda: syn.sum_box(q.lo, q.hi, target=t),
+                "avg": lambda: syn.avg_box(q.lo, q.hi, target=t)}[q.op]()
+        assert ans == pytest.approx(float(want), rel=1e-5, abs=1e-5)
+
+
+def test_box_query_validation():
+    with pytest.raises(ValueError, match="unknown op"):
+        BoxQuery("median", (0, 0), (1, 1))
+    with pytest.raises(ValueError, match="mismatch"):
+        BoxQuery("count", (0, 0), (1, 1, 1))
+    with pytest.raises(ValueError, match="names"):
+        BoxQuery("count", (0, 0), (1, 1), columns=("a",))
+    with pytest.raises(ValueError, match="target"):
+        BoxQuery("sum", (0, 0), (1, 1), target=5)
+    with pytest.raises(ValueError, match="target column"):
+        BoxQuery("sum", (0, 0), (1, 1), columns=("a", "b"), target="c")
+    with pytest.raises(ValueError, match="mix box dimensionalities"):
+        BoxQueryBatch([BoxQuery("count", (0,), (1,)),
+                       BoxQuery("count", (0, 0), (1, 1))])
+
+
+def test_box_batch_synopsis_mismatches(rng):
+    data = rng.normal(0, 1, (1000, 2)).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=256)
+    with pytest.raises(ValueError, match="single synopsis"):
+        BoxQueryBatch([BoxQuery("count", (0, 0), (1, 1),
+                                columns=("a", "b"))]).run(syn)
+    with pytest.raises(ValueError, match="name their columns"):
+        BoxQueryBatch([BoxQuery("count", (0, 0), (1, 1))]).run({("a", "b"): syn})
+    with pytest.raises(KeyError, match="no joint synopsis"):
+        BoxQueryBatch([BoxQuery("count", (0, 0), (1, 1),
+                                columns=("x", "y"))]).run({("a", "b"): syn})
+    with pytest.raises(ValueError, match="2-d"):
+        BoxQueryBatch([BoxQuery("count", (0, 0, 0), (1, 1, 1))]).run(syn)
+
+
+def test_query_batch_full_H_fallback(rng):
+    """Satellite: a full-H 1-D synopsis no longer raises in the batched
+    engine — its group routes through the quasi-MC path."""
+    data = rng.normal(5.0, 2.0, 20000).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="lscv_H", max_sample=512)
+    assert syn.h is None and syn.H is not None
+    queries = [Query("count", 3.0, 7.0), Query("sum", 3.0, 7.0),
+               Query("avg", 3.0, 7.0)]
+    got = QueryBatch(queries).run(syn)
+    sel = (data >= 3.0) & (data <= 7.0)
+    assert got[0] == pytest.approx(float(sel.sum()), rel=0.15)
+    assert got[1] == pytest.approx(float(data[sel].sum()), rel=0.15)
+    assert got[2] == pytest.approx(float(data[sel].mean()), rel=0.10)
+
+
+def test_query_batch_multid_synopsis_points_to_box_engine(rng):
+    data = rng.normal(0, 1, (2000, 2)).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=256)
+    with pytest.raises(ValueError, match="BoxQueryBatch"):
+        QueryBatch([Query("count", 0.0, 1.0)]).run(syn)
+
+
+def test_synopsis_query_box_batch_method(rng):
+    data = rng.normal(0, 1, (5000, 2)).astype(np.float32)
+    syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=512)
+    ans = syn.query_box_batch([BoxQuery("count", (-1, -1), (1, 1))])
+    assert ans[0] == pytest.approx(float(syn.count_box((-1, -1), (1, 1))),
+                                   rel=1e-6)

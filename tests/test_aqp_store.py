@@ -157,3 +157,171 @@ def test_merge_snapshot_does_not_alias_single_side_columns(rng):
     before = m.columns["only_in_a"].n_seen
     s1.add_batch({"only_in_a": rng.normal(0, 1, 500).astype(np.float32)})
     assert m.columns["only_in_a"].n_seen == before     # snapshot, not alias
+
+
+# --- multi-d subsystem: joint reservoirs, byte-bounded LRU cache ------------
+
+def test_chained_weighted_merge_unbiased_over_three_hops(rng):
+    """Satellite: ((A + B) + C) + D must keep every stream's contribution
+    proportional to its n_seen — the weighted merge may not drift as depth
+    grows.  Checked on the merged-sample mean vs the exact stream mean."""
+    from repro.data import Reservoir
+
+    means = [0.0, 3.0, 6.0, 9.0]
+    sizes = [8000, 4000, 2000, 1000]
+    parts = [rng.normal(m, 1.0, s).astype(np.float32)
+             for m, s in zip(means, sizes)]
+    reservoirs = []
+    for i, part in enumerate(parts):
+        r = Reservoir(capacity=1024, seed=i)
+        r.add(part)
+        reservoirs.append(r)
+    merged = reservoirs[0]
+    for r in reservoirs[1:]:          # 3 hops
+        merged = merged.merge(r)
+    assert merged.n_seen == sum(sizes)
+    exact_mean = float(np.concatenate(parts).mean())
+    sample = merged.sample()
+    assert len(sample) > 256          # the cap must not collapse the sample
+    # se ~ spread/sqrt(len(sample)) ~ 0.1; 0.5 is a 5-sigma-ish bound
+    assert float(sample.mean()) == pytest.approx(exact_mean, abs=0.5)
+
+
+def test_multireservoir_rows_and_determinism(rng):
+    from repro.data import MultiReservoir
+
+    rows = rng.normal(0, 1, (20000, 2)).astype(np.float32)
+    rows[:, 1] = rows[:, 0] * 2.0      # exact functional correlation
+    r1 = MultiReservoir(("a", "b"), capacity=512, seed=7)
+    r2 = MultiReservoir(("a", "b"), capacity=512, seed=7)
+    r1.add(rows)
+    r2.add(rows)
+    np.testing.assert_array_equal(r1.sample(), r2.sample())
+    s = r1.sample()
+    assert s.shape == (512, 2)
+    # row sampling preserves the cross-column relation exactly
+    np.testing.assert_allclose(s[:, 1], 2.0 * s[:, 0], rtol=1e-6)
+    with pytest.raises(ValueError, match="shape"):
+        r1.add(rng.normal(0, 1, (10, 3)).astype(np.float32))
+
+
+def test_multireservoir_weighted_merge(rng):
+    from repro.data import MultiReservoir
+
+    r1 = MultiReservoir(("a", "b"), capacity=512, seed=0)
+    r2 = MultiReservoir(("a", "b"), capacity=512, seed=1)
+    r1.add(rng.normal(0, 1, (9000, 2)).astype(np.float32))
+    r2.add(rng.normal(5, 1, (1000, 2)).astype(np.float32))
+    m = r1.merge(r2)
+    assert m.n_seen == 10_000
+    s = m.sample()
+    assert s.shape[1] == 2 and np.isfinite(s).all()
+    # ~10% of the stream came from the mean-5 side
+    frac_high = float((s[:, 0] > 2.5).mean())
+    assert frac_high == pytest.approx(0.1, abs=0.06)
+    r3 = MultiReservoir(("a", "c"), capacity=512, seed=2)
+    with pytest.raises(ValueError, match="different"):
+        r1.merge(r3)
+
+
+def test_cache_byte_bound_eviction():
+    import jax.numpy as jnp
+
+    from repro.core import KDESynopsis
+
+    def syn_of(n):
+        return KDESynopsis(x=jnp.zeros((n,), jnp.float32),
+                           h=jnp.float32(1.0), n_source=n)
+
+    payload = 1024 * 4 + 4                   # x nbytes + h nbytes
+    cache = SynopsisCache(max_entries=16, max_bytes=int(2.5 * payload))
+    cache.put("a", "plugin", 1, syn_of(1024))
+    cache.put("b", "plugin", 1, syn_of(1024))
+    assert cache.stats()["evictions"] == 0
+    cache.put("c", "plugin", 1, syn_of(1024))    # 3 * payload > bound
+    st = cache.stats()
+    assert st["evictions"] == 1
+    assert st["bytes"] <= 2.5 * payload
+    assert cache.get("a", "plugin", 1) is None   # oldest evicted
+    assert cache.get("b", "plugin", 1) is not None
+
+    # an entry that can never fit is refused, NOT admitted-then-thrashed:
+    # the resident entries survive and the refusal is counted separately
+    cache.put("big", "plugin", 1, syn_of(4096))
+    st = cache.stats()
+    assert st["oversize"] == 1 and st["evictions"] == 1
+    assert cache.get("big", "plugin", 1) is None
+    assert cache.get("b", "plugin", 1) is not None
+
+
+def test_cache_lru_recency_not_fifo():
+    cache = SynopsisCache(max_entries=2)
+    cache.put("a", "plugin", 1, "syn_a")
+    cache.put("b", "plugin", 1, "syn_b")
+    assert cache.get("a", "plugin", 1) == "syn_a"   # refreshes 'a'
+    cache.put("c", "plugin", 1, "syn_c")            # evicts 'b', not 'a'
+    assert cache.get("a", "plugin", 1) == "syn_a"
+    assert cache.get("b", "plugin", 1) is None
+
+
+def test_store_joint_tracking_and_box_queries(rng):
+    from repro.core import BoxQuery
+
+    n = 30_000
+    a = rng.normal(0, 1, n).astype(np.float32)
+    b = (0.8 * a + 0.6 * rng.normal(0, 1, n)).astype(np.float32)
+    store = TelemetryStore(capacity=2048, seed=0)
+    store.track_joint(("a", "b"))
+    store.add_batch({"a": a, "b": b})
+
+    queries = [BoxQuery("count", (-1, -1), (1, 1), columns=("a", "b")),
+               BoxQuery("avg", (-1, -1), (1, 1), columns=("a", "b"),
+                        target="b")]
+    ans = store.query_box_batch(queries)
+    sel = (np.abs(a) <= 1) & (np.abs(b) <= 1)
+    assert ans[0] == pytest.approx(float(sel.sum()), rel=0.10)
+    assert ans[1] == pytest.approx(float(b[sel].mean()), abs=0.05)
+
+    # joint synopsis is cached under the column *tuple* (no collision with
+    # per-column entries) and served from cache on the second batch
+    misses0 = store.cache.stats()["misses"]
+    store.query_box_batch(queries)
+    assert store.cache.stats()["misses"] == misses0
+
+    st = store.stats()
+    assert st["cache"]["hits"] >= 1
+    assert st["joints"][("a", "b")] == n
+    assert st["columns"]["a"] == n
+
+    with pytest.raises(KeyError, match="track_joint"):
+        store.joint_synopsis(("a", "missing"))
+
+
+def test_store_merge_carries_joints(rng):
+    s1 = TelemetryStore(capacity=512, seed=0)
+    s2 = TelemetryStore(capacity=512, seed=1)
+    for st in (s1, s2):
+        st.track_joint(("x", "y"))
+    s1.add_batch({"x": rng.normal(0, 1, 3000).astype(np.float32),
+                  "y": rng.normal(0, 1, 3000).astype(np.float32)})
+    s2.add_batch({"x": rng.normal(2, 1, 1000).astype(np.float32),
+                  "y": rng.normal(2, 1, 1000).astype(np.float32)})
+    m = s1.merge(s2)
+    assert m.joints[("x", "y")].n_seen == 4000
+    syn = m.joint_synopsis(("x", "y"), selector="silverman")
+    assert syn.x.shape[1] == 2 and syn.n_source == 4000
+
+
+def test_add_batch_ragged_joint_fails_before_mutation(rng):
+    """A ragged batch for a tracked joint must fail atomically: no reservoir
+    (per-column or joint) may have accepted anything."""
+    store = TelemetryStore(capacity=64, seed=0)
+    store.track_joint(("a", "b"))
+    store.add_batch({"a": rng.normal(0, 1, 10).astype(np.float32),
+                     "b": rng.normal(0, 1, 10).astype(np.float32)})
+    with pytest.raises(ValueError, match="row-aligned"):
+        store.add_batch({"a": rng.normal(0, 1, 5).astype(np.float32),
+                         "b": rng.normal(0, 1, 3).astype(np.float32)})
+    assert store.columns["a"].n_seen == 10
+    assert store.columns["b"].n_seen == 10
+    assert store.joints[("a", "b")].n_seen == 10

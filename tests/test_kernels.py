@@ -106,6 +106,61 @@ def test_aqp_batch_sums(rng, n, q):
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("n,q,d", [(17, 3, 2), (64, 16, 3), (500, 130, 4)])
+def test_aqp_box_sums(rng, n, q, d):
+    x = jnp.asarray(rng.normal(0, 1.5, (n, d)).astype(np.float32))
+    h = jnp.asarray(rng.uniform(0.2, 0.8, d).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(-3, 1, (q, d)).astype(np.float32))
+    hi = lo + jnp.asarray(rng.uniform(0.2, 3, (q, d)).astype(np.float32))
+    tgt = jnp.asarray(rng.integers(0, d, q), jnp.int32)
+    c1, s1 = ops.aqp_box_sums(x, h, lo, hi, tgt, tile=64, q_tile=16)
+    c2, s2 = ref.aqp_box_sums(x, h, lo, hi, tgt)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+def test_aqp_box_sums_tile_boundaries(rng):
+    """n == tile, n == tile+1, q == q_tile, q == q_tile+1 edge shapes."""
+    d = 2
+    h = jnp.asarray([0.4, 0.6], jnp.float32)
+    for n, q in [(64, 16), (65, 17), (127, 15), (128, 16)]:
+        x = jnp.asarray(rng.normal(0, 1, (n, d)).astype(np.float32))
+        lo = jnp.asarray(rng.uniform(-2, 0, (q, d)).astype(np.float32))
+        hi = lo + 1.5
+        tgt = jnp.asarray(rng.integers(0, d, q), jnp.int32)
+        c1, s1 = ops.aqp_box_sums(x, h, lo, hi, tgt, tile=64, q_tile=16)
+        c2, s2 = ref.aqp_box_sums(x, h, lo, hi, tgt)
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+
+
+def test_aqp_box_sums_empty_sample():
+    """Zero grid iterations must not expose uninitialized output memory."""
+    x = jnp.zeros((0, 3), jnp.float32)
+    lo = jnp.zeros((2, 3), jnp.float32)
+    hi = jnp.ones((2, 3), jnp.float32)
+    tgt = jnp.zeros((2,), jnp.int32)
+    c, s = ops.aqp_box_sums(x, jnp.ones((3,), jnp.float32), lo, hi, tgt)
+    np.testing.assert_array_equal(np.asarray(c), 0.0)
+    np.testing.assert_array_equal(np.asarray(s), 0.0)
+
+
+def test_env_tile_override(monkeypatch):
+    """TILE/Q_TILE defaults resolve through env vars (real-TPU tuning)."""
+    from repro.kernels.tuning import env_int
+
+    monkeypatch.setenv("REPRO_TEST_TILE", "512")
+    assert env_int("REPRO_TEST_TILE", 128) == 512
+    monkeypatch.delenv("REPRO_TEST_TILE")
+    assert env_int("REPRO_TEST_TILE", 128) == 128
+    monkeypatch.setenv("REPRO_TEST_TILE", "not-a-number")
+    with pytest.raises(ValueError, match="positive integer"):
+        env_int("REPRO_TEST_TILE", 128)
+    monkeypatch.setenv("REPRO_TEST_TILE", "-4")
+    with pytest.raises(ValueError, match="positive integer"):
+        env_int("REPRO_TEST_TILE", 128)
+
+
 def test_aqp_batch_sums_empty_sample():
     """Zero grid iterations must not expose uninitialized output memory."""
     x = jnp.zeros((0,), jnp.float32)

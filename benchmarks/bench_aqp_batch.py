@@ -22,7 +22,7 @@ SAMPLE = 2048
 def _setup(n_queries: int, seed: int = 0):
     import jax.numpy as jnp
 
-    from repro.core import KDESynopsis, QueryBatch
+    from repro.core import KDESynopsis
     from repro.launch.serve import make_query_mix
 
     rng = np.random.default_rng(seed)
@@ -30,25 +30,28 @@ def _setup(n_queries: int, seed: int = 0):
     syn = KDESynopsis.fit(jnp.asarray(data), selector="plugin", max_sample=SAMPLE)
     queries = make_query_mix(n_queries, {None: (float(data.min()), float(data.max()))},
                              seed=seed)
-    return syn, QueryBatch(queries)
+    return syn, queries
 
 
-def _loop_answers(syn, batch) -> np.ndarray:
+def _loop_answers(syn, queries) -> np.ndarray:
     fns = {"count": syn.count, "sum": syn.sum, "avg": syn.avg}
-    return np.asarray([float(fns[q.op](q.a, q.b)) for q in batch.queries])
+    return np.asarray([float(fns[q.op](q.a, q.b)) for q in queries])
 
 
 def run() -> dict:
+    from repro.core.aqp import run_legacy_queries
+
     out = {}
     for nq in Q_SIZES:
-        syn, batch = _setup(nq)
+        syn, queries = _setup(nq)
 
-        want = _loop_answers(syn, batch)
-        got = batch.run(syn)
+        want = _loop_answers(syn, queries)
+        got = run_legacy_queries(queries, syn)
         np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
 
-        t_loop = time_call(_loop_answers, syn, batch, repeats=3, warmup=1)
-        t_batch = time_call(batch.run, syn, repeats=5, warmup=2)
+        t_loop = time_call(_loop_answers, syn, queries, repeats=3, warmup=1)
+        t_batch = time_call(run_legacy_queries, queries, syn,
+                            repeats=5, warmup=2)
         speedup = t_loop / t_batch
         emit(f"aqp_loop_q{nq}", t_loop, f"{nq / (t_loop * 1e-6):,.0f} q/s")
         emit(f"aqp_batch_q{nq}", t_batch,
@@ -58,9 +61,10 @@ def run() -> dict:
         # Pallas tile kernel path: correctness always, timing as reported.
         # Wider tolerance than the jnp pass: per-tile fp32 accumulation noise
         # is amplified by the sample->relation scale (~1e2 here).
-        got_pl = batch.run(syn, backend="pallas")
+        got_pl = run_legacy_queries(queries, syn, backend="pallas")
         np.testing.assert_allclose(got_pl, want, rtol=5e-4, atol=1e-2)
-        t_pl = time_call(lambda: batch.run(syn, backend="pallas"),
+        t_pl = time_call(lambda: run_legacy_queries(queries, syn,
+                                                    backend="pallas"),
                          repeats=3, warmup=1)
         emit(f"aqp_pallas_q{nq}", t_pl, f"{nq / (t_pl * 1e-6):,.0f} q/s "
              "(interpret mode on CPU)")

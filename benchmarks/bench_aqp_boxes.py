@@ -33,7 +33,6 @@ def _setup(n_queries: int, d: int, seed: int = 0):
     import jax.numpy as jnp
 
     from repro.core import KDESynopsis
-    from repro.core.aqp_multid import BoxQueryBatch
     from repro.launch.serve import make_box_query_mix
 
     rng = np.random.default_rng(seed)
@@ -53,12 +52,12 @@ def _setup(n_queries: int, d: int, seed: int = 0):
     from repro.core import BoxQuery
     bare = [BoxQuery(q.op, q.lo, q.hi, target=q.target_index())
             for q in queries]
-    return syn, BoxQueryBatch(bare)
+    return syn, bare
 
 
-def _loop_answers(syn, batch) -> np.ndarray:
-    out = np.empty((len(batch.queries),), np.float64)
-    for i, q in enumerate(batch.queries):
+def _loop_answers(syn, queries) -> np.ndarray:
+    out = np.empty((len(queries),), np.float64)
+    for i, q in enumerate(queries):
         t = q.target_index()
         if q.op == "count":
             out[i] = float(syn.count_box(q.lo, q.hi))
@@ -70,19 +69,23 @@ def _loop_answers(syn, batch) -> np.ndarray:
 
 
 def run() -> dict:
+    from repro.core.aqp_multid import run_legacy_boxes
+
     out = {}
     q_sizes = Q_SIZES if not _quick() else (32,)
     dims = DIMS if not _quick() else (2,)
     for d in dims:
         for nq in q_sizes:
-            syn, batch = _setup(nq, d)
+            syn, queries = _setup(nq, d)
 
-            want = _loop_answers(syn, batch)
-            got = batch.run(syn)
+            want = _loop_answers(syn, queries)
+            got = run_legacy_boxes(queries, syn)
             np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
 
-            t_loop = time_call(_loop_answers, syn, batch, repeats=3, warmup=1)
-            t_batch = time_call(batch.run, syn, repeats=5, warmup=2)
+            t_loop = time_call(_loop_answers, syn, queries, repeats=3,
+                               warmup=1)
+            t_batch = time_call(run_legacy_boxes, queries, syn,
+                                repeats=5, warmup=2)
             speedup = t_loop / t_batch
             emit(f"aqp_boxes_loop_d{d}_q{nq}", t_loop,
                  f"{nq / (t_loop * 1e-6):,.0f} q/s")
@@ -93,9 +96,10 @@ def run() -> dict:
             # Pallas tile kernel path: correctness always, timing as reported.
             # Wider tolerance than the jnp pass: per-tile fp32 accumulation
             # noise is amplified by the sample->relation scale (~1e2 here).
-            got_pl = batch.run(syn, backend="pallas")
+            got_pl = run_legacy_boxes(queries, syn, backend="pallas")
             np.testing.assert_allclose(got_pl, want, rtol=5e-4, atol=5e-2)
-            t_pl = time_call(lambda: batch.run(syn, backend="pallas"),
+            t_pl = time_call(lambda: run_legacy_boxes(queries, syn,
+                                                      backend="pallas"),
                              repeats=3, warmup=1)
             emit(f"aqp_boxes_pallas_d{d}_q{nq}", t_pl,
                  f"{nq / (t_pl * 1e-6):,.0f} q/s (interpret mode on CPU, "

@@ -1,0 +1,199 @@
+"""Unified AQP engine (core/aqp_query.py): mixed-batch throughput and the
+batched quasi-MC fallback.
+
+Two comparisons:
+
+  engine    — ONE QueryEngine.execute call over a heterogeneous batch
+              (1-D ranges + eq. 11 boxes + categorical Eq terms)
+  two-stack — the same workload split across the legacy CALL PATTERN: a
+              store.query_batch call (ranges + Eq compiled to ranges) plus a
+              store.query_box_batch call (boxes), then re-interleaved.  Both
+              entry points now execute on the unified engine, so this leg
+              measures the planning/dispatch overhead of splitting the batch
+              into per-kind calls — not the pre-PR code, which is gone.
+
+  qmc batch — full-H group answered by the shared-Halton-node batched pass
+              (one KDE evaluation per group)
+  qmc loop  — a faithful replica of the pre-batching fallback: one Halton
+              node set + one KDE evaluation per query (`box_qmc_terms` loop)
+
+The acceptance bar for this PR is the batched QMC fallback >= 5x over the
+per-query loop on CPU (asserted outside quick mode); the engine-vs-two-stack
+numbers document that the single mixed entry point costs no more than the
+split dispatch it replaces.
+
+Set REPRO_BENCH_QUICK=1 (or `python -m benchmarks.run --quick`) for the CI
+smoke configuration.
+"""
+from __future__ import annotations
+
+import os
+import warnings
+
+import numpy as np
+
+from .common import emit, time_call
+
+N_MIXED = 768
+N_QMC_QUERIES = 64
+QMC_SAMPLE = 512
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def _setup_store(seed: int = 0):
+    from repro.data import TelemetryStore
+
+    rng = np.random.default_rng(seed)
+    n = 100_000
+    data = {
+        "loss": rng.gamma(3.0, 0.7, n).astype(np.float32),
+        "latency_ms": np.where(rng.random(n) < 0.8, rng.normal(40, 8, n),
+                               rng.normal(160, 30, n)).astype(np.float32),
+        "code": rng.integers(0, 4, n).astype(np.float32),
+    }
+    store = TelemetryStore(capacity=2048 if not _quick() else 512, seed=0)
+    store.track_joint(("loss", "latency_ms"))
+    store.add_batch(data)
+    ranges = {c: (float(v.min()), float(v.max()))
+              for c, v in data.items() if c != "code"}
+    return store, ranges
+
+
+def _legacy_split(specs):
+    """Compile the mixed AqpQuery batch back onto the two legacy stacks:
+    ranges and Eq terms become `Query` rows, boxes become `BoxQuery` rows."""
+    from repro.core import BoxQuery, Query
+    from repro.core.aqp_query import Box, Eq, Range
+
+    range_qs, box_qs, order = [], [], []
+    for q in specs:
+        p = q.predicates[0]
+        if isinstance(p, Box):
+            order.append(("box", len(box_qs)))
+            tgt = None if q.aggregate == "count" else q.target
+            box_qs.append(BoxQuery(q.aggregate, p.lo, p.hi,
+                                   columns=p.columns, target=tgt))
+        elif isinstance(p, Eq):
+            order.append(("range", len(range_qs)))
+            range_qs.append(Query(q.aggregate, p.value - p.halfwidth,
+                                  p.value + p.halfwidth, column=p.column))
+        else:
+            assert isinstance(p, Range)
+            order.append(("range", len(range_qs)))
+            range_qs.append(Query(q.aggregate, p.a, p.b, column=p.column))
+    return range_qs, box_qs, order
+
+
+def _two_stack_answers(store, range_qs, box_qs, order) -> np.ndarray:
+    r = store.query_batch(range_qs)
+    b = store.query_box_batch(box_qs) if box_qs else np.empty((0,))
+    parts = {"range": r, "box": b}
+    return np.asarray([parts[kind][i] for kind, i in order])
+
+
+def _setup_qmc(n_queries: int, seed: int = 0):
+    """A full-H joint synopsis (H from the sample covariance — no LSCV cost)
+    plus a mixed box batch against it."""
+    import jax.numpy as jnp
+
+    from repro.core import BoxQuery, KDESynopsis
+
+    rng = np.random.default_rng(seed)
+    n = QMC_SAMPLE if not _quick() else 256
+    latent = rng.normal(0, 1, n)
+    x = np.stack([latent + rng.normal(0, 0.6, n),
+                  latent + rng.normal(0, 0.8, n)], axis=1).astype(np.float32)
+    H = (np.cov(x.T) * n ** (-1 / 3)).astype(np.float32)
+    syn = KDESynopsis(x=jnp.asarray(x), H=jnp.asarray(H), n_source=250_000)
+    ops = ["count", "sum", "avg"]
+    queries = []
+    for i in range(n_queries):
+        lo = rng.uniform(-2.0, 0.0, 2)
+        hi = lo + rng.uniform(1.0, 3.0, 2)
+        queries.append(BoxQuery(ops[i % 3], tuple(lo), tuple(hi),
+                                target=int(rng.integers(2))))
+    return syn, queries
+
+
+def _qmc_loop_answers(syn, queries) -> np.ndarray:
+    """The pre-batching fallback: one Halton node set + one KDE evaluation
+    per query (what `_qmc_box_answers` did before this PR)."""
+    import jax.numpy as jnp
+
+    from repro.core.aqp import box_qmc_terms
+    from repro.core.aqp_multid import _avg_or_zero
+
+    x = syn.x
+    scale = syn.n_source / x.shape[0]
+    out = np.empty((len(queries),), np.float64)
+    for i, q in enumerate(queries):
+        cnt, sm = box_qmc_terms(x, syn.H, jnp.asarray(q.lo, jnp.float32),
+                                jnp.asarray(q.hi, jnp.float32),
+                                target=q.target_index())
+        cnt, sm = scale * cnt, scale * sm
+        if q.op == "count":
+            out[i] = float(cnt)
+        else:
+            out[i] = float(sm if q.op == "sum" else _avg_or_zero(cnt, sm))
+    return out
+
+
+def run() -> dict:
+    from repro.core.aqp_multid import _qmc_box_answers
+    from repro.launch.serve import make_mixed_aqp_queries
+
+    out = {}
+
+    # --- mixed batch: one engine call vs the old two-stack dispatch --------
+    n_mixed = N_MIXED if not _quick() else 96
+    store, ranges = _setup_store()
+    specs = make_mixed_aqp_queries(n_mixed, ranges, ("loss", "latency_ms"),
+                                   "code", (0.0, 1.0, 2.0, 3.0), seed=1)
+    engine = store.engine()
+    range_qs, box_qs, order = _legacy_split(specs)
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        want = _two_stack_answers(store, range_qs, box_qs, order)
+        got = engine.answers(specs)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+        t_engine = time_call(engine.answers, specs, repeats=5, warmup=2)
+        t_two = time_call(_two_stack_answers, store, range_qs, box_qs, order,
+                          repeats=5, warmup=2)
+    emit(f"aqp_engine_mixed_q{n_mixed}", t_engine,
+         f"{n_mixed / (t_engine * 1e-6):,.0f} q/s, one execute() call")
+    emit(f"aqp_engine_twostack_q{n_mixed}", t_two,
+         f"{n_mixed / (t_two * 1e-6):,.0f} q/s split into per-kind calls, "
+         f"{t_two / t_engine:.2f}x the unified call")
+    out["mixed_vs_twostack"] = t_two / t_engine
+
+    # --- batched QMC fallback vs the per-query loop ------------------------
+    n_q = N_QMC_QUERIES if not _quick() else 24
+    syn, queries = _setup_qmc(n_q)
+    want = _qmc_loop_answers(syn, queries)
+    got = _qmc_box_answers(syn, queries)
+    # both are ~1e-2-accurate QMC integrators on different node sets
+    np.testing.assert_allclose(got, want, rtol=0.1,
+                               atol=0.02 * np.abs(want).max())
+
+    t_loop = time_call(_qmc_loop_answers, syn, queries, repeats=3, warmup=1)
+    t_batch = time_call(_qmc_box_answers, syn, queries, repeats=3, warmup=1)
+    speedup = t_loop / t_batch
+    emit(f"aqp_qmc_loop_q{n_q}", t_loop, f"{n_q / (t_loop * 1e-6):,.0f} q/s")
+    emit(f"aqp_qmc_batch_q{n_q}", t_batch,
+         f"{n_q / (t_batch * 1e-6):,.0f} q/s, {speedup:.1f}x over loop "
+         "(shared Halton nodes, one KDE pass)")
+    out["qmc_speedup"] = speedup
+    if not _quick():
+        assert speedup >= 5.0, (
+            f"batched QMC fallback must be >= 5x over the per-query loop, "
+            f"got {speedup:.1f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,8 +1,9 @@
 """Database scenario (paper §4.3): a multi-column fact table served by KDE
-synopses — per-column 1-D aggregates, multi-column box predicates answered
-from a joint synopsis (eq. 11 product kernel, BoxQueryBatch), a 2-D box
-COUNT with a full LSCV_H bandwidth matrix, and cross-host synopsis merging
-(the fleet-scale story).
+synopses through the unified declarative API — one `AqpQuery` spec for 1-D
+ranges, multi-column boxes (eq. 11 product kernel), categorical equality on
+a dictionary column, and GROUP BY, all answered by a single
+`QueryEngine.execute` call; plus a 2-D box COUNT with a full LSCV_H
+bandwidth matrix and cross-host synopsis merging (the fleet-scale story).
 
     PYTHONPATH=src python examples/aqp_database.py
 """
@@ -13,7 +14,8 @@ sys.path.insert(0, "src")
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import BoxQuery, KDESynopsis  # noqa: E402
+from repro.core import (AqpQuery, Box, Eq, KDESynopsis,  # noqa: E402
+                        Range)
 from repro.data import TelemetryStore  # noqa: E402
 
 
@@ -48,38 +50,57 @@ def main():
     inbox = ((joint >= lo) & (joint <= hi)).all(axis=1).sum()
     print(f"COUNT(box) ~ {float(syn2.count_box(lo, hi)):,.0f} exact {inbox:,}")
 
-    print("\n== batched query engine: 1000 mixed queries, one pass/column ==")
+    print("\n== unified engine: one mixed batch, one execute call ==")
     import time
-    from repro.launch.serve import make_query_mix
+    from repro.launch.serve import make_mixed_aqp_queries
     store = TelemetryStore(capacity=2048, seed=0)
     store.track_joint(("amount", "latency"))   # rows sampled from registration on
-    store.add_batch({"amount": amount, "latency": latency})
-    queries = make_query_mix(1000, {"amount": (50.0, 1000.0),
-                                    "latency": (20.0, 250.0)}, seed=11)
-    store.query_batch(queries)                # warm-up: fit synopses + compile
+    # region is dictionary-coded (0=na, 1=emea, 2=apac): Eq/GROUP BY territory
+    region = rng.integers(0, 3, n).astype(np.float32)
+    store.add_batch({"amount": amount, "latency": latency, "region": region})
+    # registered AFTER add_batch: the joint reservoir is backfilled from the
+    # per-column reservoirs (marginals right away; correlations stream in)
+    store.track_joint(("region", "amount"))
+    queries = make_mixed_aqp_queries(
+        1000, {"amount": (50.0, 1000.0), "latency": (20.0, 250.0)},
+        ("amount", "latency"), "region", (0.0, 1.0, 2.0), seed=11)
+    engine = store.engine()
+    engine.execute(queries)                   # warm-up: fit synopses + compile
     t0 = time.perf_counter()
-    answers = store.query_batch(queries)
+    results = engine.execute(queries)
     dt = time.perf_counter() - t0
-    print(f"answered {len(queries)} queries in {dt * 1e3:.1f} ms "
-          f"({len(queries) / dt:,.0f} queries/s)")
-    for q, ans in list(zip(queries, answers))[:3]:
-        print(f"  {q.op.upper():5s}({q.column}) [{q.a:7.1f}, {q.b:7.1f}] ~= {ans:,.1f}")
+    from collections import Counter
+    paths = Counter(r.path for r in results)
+    print(f"answered {len(results)} mixed queries in {dt * 1e3:.1f} ms "
+          f"({len(results) / dt:,.0f} queries/s) -- paths: {dict(paths)}")
 
-    print("\n== multi-column predicates from the joint synopsis (eq. 11) ==")
+    print("\n== declarative specs: box, Eq, GROUP BY in the same batch ==")
     # SQL:  SELECT COUNT(*), SUM(amount), AVG(latency) FROM facts
-    #       WHERE 50 <= amount <= 300 AND 20 <= latency <= 60
-    cols = ("amount", "latency")
-    box = dict(lo=(50.0, 20.0), hi=(300.0, 60.0))
-    box_queries = [
-        BoxQuery("count", columns=cols, **box),
-        BoxQuery("sum", columns=cols, target="amount", **box),
-        BoxQuery("avg", columns=cols, target="latency", **box),
+    #       WHERE 50 <= amount <= 300 AND 20 <= latency <= 60;
+    #       SELECT COUNT(*) FROM facts WHERE region = 2;
+    #       SELECT region, COUNT(*) FROM facts
+    #         WHERE 50 <= amount <= 300 GROUP BY region;
+    box = Box(("amount", "latency"), lo=(50.0, 20.0), hi=(300.0, 60.0))
+    specs = [
+        AqpQuery("count", (box,)),
+        AqpQuery("sum", (box,), target="amount"),
+        AqpQuery("avg", (box,), target="latency"),
+        AqpQuery("count", (Eq("region", 2),)),
+        AqpQuery("count", (Range("amount", 50.0, 300.0),), group_by="region"),
     ]
-    box_answers = store.query_box_batch(box_queries)
+    res = engine.execute(specs)
     sel2 = (amount >= 50) & (amount <= 300) & (latency >= 20) & (latency <= 60)
-    print(f"COUNT(*)     ~ {box_answers[0]:12,.0f}  exact {sel2.sum():12,}")
-    print(f"SUM(amount)  ~ {box_answers[1]:12,.0f}  exact {amount[sel2].sum():12,.0f}")
-    print(f"AVG(latency) ~ {box_answers[2]:12,.2f}  exact {latency[sel2].mean():12,.2f}")
+    print(f"COUNT(*)        ~ {res[0].estimate:12,.0f}  exact {sel2.sum():12,}")
+    print(f"SUM(amount)     ~ {res[1].estimate:12,.0f}  "
+          f"exact {amount[sel2].sum():12,.0f}")
+    print(f"AVG(latency)    ~ {res[2].estimate:12,.2f}  "
+          f"exact {latency[sel2].mean():12,.2f}")
+    print(f"COUNT(region=2) ~ {res[3].estimate:12,.0f}  "
+          f"exact {(region == 2).sum():12,}")
+    for r in res[4:]:
+        ex = ((amount >= 50) & (amount <= 300) & (region == r.group)).sum()
+        print(f"  region={r.group:.0f}: COUNT ~ {r.estimate:10,.0f}  "
+              f"exact {ex:10,}  [{r.path}]")
 
     print("\n== mergeable synopses across 4 'hosts' ==")
     stores = []

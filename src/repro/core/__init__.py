@@ -4,7 +4,10 @@ Public API:
   plugin_bandwidth, lscv_h, lscv_H, g_of_H       — bandwidth selectors (§4.4)
   kde_eval, kde_eval_H, silverman_h              — density estimation (§4.2)
   KDESynopsis, count_1d, sum_1d                  — AQP on KDE synopses (§4.3)
-  BoxQuery, BoxQueryBatch                        — multi-d box AQP (eq. 11)
+  AqpQuery, QueryEngine, AqpResult               — unified declarative AQP API
+  Range, Box, Eq, GroupBy                        — AqpQuery predicate terms
+  Query/QueryBatch, BoxQuery/BoxQueryBatch       — legacy stacks (deprecated
+                                                   shims over aqp_query)
   reductions.*                                   — parallel primitives (§5)
   distributed.*                                  — multi-chip selectors (beyond paper)
   binned.*                                       — binned/FFT variants (§2.2)
@@ -12,14 +15,18 @@ Public API:
 from .aqp import (KDESynopsis, Query, QueryBatch, batch_query_1d, count_1d,
                   count_1d_numeric, count_box_H, count_box_diag, sum_1d,
                   sum_1d_numeric, sum_box_H, sum_box_diag)
-from .aqp_multid import BoxQuery, BoxQueryBatch, batch_query_box
+from .aqp_multid import (BoxQuery, BoxQueryBatch, batch_query_box,
+                         batch_query_qmc)
+from .aqp_query import (AqpQuery, AqpResult, Box, Eq, GroupBy, QueryEngine,
+                        Range)
 from .kde import kde_eval, kde_eval_H, silverman_h
 from .lscv import LSCVHResult, LSCVhResult, g_of_H, lscv_H, lscv_h
 from .plugin import PluginResult, plugin_bandwidth, plugin_bandwidth_sequential
 
 __all__ = [
     "KDESynopsis", "Query", "QueryBatch", "BoxQuery", "BoxQueryBatch",
-    "batch_query_1d", "batch_query_box",
+    "AqpQuery", "AqpResult", "QueryEngine", "Range", "Box", "Eq", "GroupBy",
+    "batch_query_1d", "batch_query_box", "batch_query_qmc",
     "count_1d", "count_1d_numeric", "count_box_H", "count_box_diag",
     "sum_1d", "sum_1d_numeric", "sum_box_H", "sum_box_diag",
     "kde_eval", "kde_eval_H", "silverman_h", "LSCVHResult",

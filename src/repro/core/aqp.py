@@ -36,6 +36,22 @@ from .plugin import plugin_bandwidth
 SQRT1_2 = 1.0 / math.sqrt(2.0)
 
 
+def canonical_selector(selector: str) -> str:
+    """Case-normalized bandwidth-selector name, used for cache keys and
+    engine group keys.
+
+    "Plugin"/"PLUGIN"/"plugin" must resolve to ONE selector (two live cache
+    copies of the same synopsis waste the byte budget and can serve a stale
+    copy after the other refits).  The one legitimate case pair is the
+    paper's scalar vs full-matrix LSCV — "lscv_h" and "lscv_H" are
+    *different* selectors and stay distinct.
+    """
+    low = selector.lower()
+    if low == "lscv_h" and selector.endswith("H"):
+        return "lscv_H"
+    return low
+
+
 def _Phi(z):
     return 0.5 * (1.0 + jax.scipy.special.erf(z * SQRT1_2))
 
@@ -273,12 +289,15 @@ class KDESynopsis:
 
     def query_batch(self, queries: Sequence["Query"], backend: str = "jnp") -> np.ndarray:
         """Answer N COUNT/SUM/AVG range queries in one jitted pass."""
-        return QueryBatch(queries).run(self, backend=backend)
+        queries = [q if isinstance(q, Query) else Query(*q) for q in queries]
+        return run_legacy_queries(queries, self, backend=backend)
 
     def query_box_batch(self, queries, backend: str = "jnp") -> np.ndarray:
         """Answer N COUNT/SUM/AVG box queries (eq. 11) in one jitted pass."""
-        from .aqp_multid import BoxQueryBatch
-        return BoxQueryBatch(queries).run(self, backend=backend)
+        from .aqp_multid import BoxQuery, run_legacy_boxes
+        queries = [q if isinstance(q, BoxQuery) else BoxQuery(*q)
+                   for q in queries]
+        return run_legacy_boxes(queries, self, backend=backend)
 
 
 # --- batched query engine -------------------------------------------------
@@ -288,6 +307,11 @@ class KDESynopsis:
 # forms of eqs. 9-10 share all their per-sample work — Phi/phi differences —
 # so a whole heterogeneous batch against one synopsis reduces to ONE
 # (queries x sample) two-channel reduction, then a per-query select.
+#
+# `Query`/`QueryBatch` are the legacy 1-D surface: `QueryBatch.run` is a
+# deprecated shim over the unified declarative engine in aqp_query.py
+# (`AqpQuery` + `QueryEngine`), which also routes boxes, categorical Eq
+# terms, GROUP BY, and the full-H quasi-MC fallback.
 
 OP_COUNT, OP_SUM, OP_AVG = 0, 1, 2
 OP_CODES = {"count": OP_COUNT, "sum": OP_SUM, "avg": OP_AVG}
@@ -386,45 +410,23 @@ class QueryBatch:
 
     def run(self, synopses: Union[KDESynopsis, Mapping[str, KDESynopsis]],
             backend: str = "jnp") -> np.ndarray:
-        """Answer every query; returns answers in submission order."""
-        out = np.empty((len(self.queries),), np.float64)
-        for column in self._groups:
-            if isinstance(synopses, KDESynopsis):
-                if column is not None:
-                    raise ValueError("queries name columns but a single synopsis "
-                                     "was given; pass a {column: synopsis} mapping")
-                syn = synopses
-            else:
-                if column is None:
-                    raise ValueError("queries must name a column when running "
-                                     "against a synopsis mapping")
-                if column not in synopses:
-                    raise KeyError(f"no synopsis for column {column!r}; "
-                                   f"have {sorted(synopses)}")
-                syn = synopses[column]
-            if syn.x.ndim == 1 and syn.h is not None:
-                idx, a, b, ops_arr = self.plan(column)
-                scale = jnp.float32(syn.n_source / syn.x.shape[0])
-                ans = batch_query_1d(syn.x, syn.h, a, b, ops_arr, scale,
-                                     backend=backend)
-            elif syn.x.ndim == 1 and syn.H is not None:
-                # Graceful routing: a full-H 1-D synopsis (LSCV_H) has no
-                # scalar-h closed form, so its group falls back to the
-                # deterministic quasi-MC box path instead of failing the batch.
-                idx = self._groups[column]
-                ans = _qmc_range_answers(syn, [self.queries[i] for i in idx])
-            else:
-                raise ValueError("multi-dimensional synopses answer box "
-                                 "predicates, not scalar ranges; use "
-                                 "BoxQueryBatch (repro.core.aqp_multid)")
-            out[np.asarray(idx)] = np.asarray(ans, np.float64)
-        return out
+        """Deprecated shim: compiles to `AqpQuery` specs and executes through
+        the unified engine (repro.core.aqp_query); answers in submission
+        order, bit-for-bit identical to `QueryEngine.execute`."""
+        import warnings
+
+        warnings.warn(
+            "QueryBatch.run is deprecated; build AqpQuery specs and execute "
+            "them through repro.core.aqp_query.QueryEngine (or "
+            "TelemetryStore.query)", DeprecationWarning, stacklevel=2)
+        return run_legacy_queries(self.queries, synopses, backend=backend)
 
 
-def _qmc_range_answers(syn: KDESynopsis, qs: Sequence[Query]) -> np.ndarray:
-    """Per-query quasi-MC fallback for full-H synopses: each [a, b] range is
-    a 1-D box handed to the multi-d fallback.  O(n_qmc * sample) per query —
-    correct but slow; the planner only routes here when the closed forms
-    don't apply."""
-    from .aqp_multid import BoxQuery, _qmc_box_answers
-    return _qmc_box_answers(syn, [BoxQuery(q.op, (q.a,), (q.b,)) for q in qs])
+def run_legacy_queries(queries: Sequence[Query], synopses,
+                       backend: str = "jnp") -> np.ndarray:
+    """Execute legacy 1-D `Query` objects through the unified engine —
+    the shim body, shared with `KDESynopsis.query_batch` (which keeps its
+    non-deprecated convenience signature)."""
+    from .aqp_query import execute_specs, from_query
+    return execute_specs([from_query(q) for q in queries], synopses,
+                         backend=backend)

@@ -14,21 +14,25 @@ A heterogeneous batch against one joint synopsis therefore reduces to ONE
 (queries x samples x dims) Phi-product reduction — evaluated either by a
 jitted vmapped pass here or by the kernels/aqp_boxes.py Pallas tile kernel.
 Full-H synopses (LSCV_H) don't factorise; their groups fall back to the
-deterministic quasi-MC path (count_box_H / sum_box_H), never failing the
-batch.
+batched deterministic quasi-MC path (`batch_query_qmc`: shared Halton nodes,
+one KDE evaluation per group), never failing the batch.
+
+The planner classes here are legacy: `BoxQueryBatch.run` is a deprecated
+shim over the unified engine in aqp_query.py.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from functools import partial
+from functools import lru_cache, partial
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .aqp import (OP_CODES, OP_COUNT, OP_SUM, KDESynopsis, _avg_or_zero, _Phi,
-                  _phi, box_qmc_terms)
+from .aqp import (OP_CODES, OP_COUNT, OP_SUM, KDESynopsis, _avg_or_zero,
+                  _halton, _Phi, _phi)
+from .kde import kde_eval_H
 
 ColumnsKey = Optional[Tuple[str, ...]]
 
@@ -198,39 +202,126 @@ class BoxQueryBatch:
 
     def run(self, synopses: Union[KDESynopsis, Mapping[Tuple[str, ...], KDESynopsis]],
             backend: str = "jnp") -> np.ndarray:
-        """Answer every query; returns answers in submission order."""
-        out = np.empty((len(self.queries),), np.float64)
-        for columns in self._groups:
-            syn = self._resolve(synopses, columns)
-            idx, lo, hi, tgt, ops_arr = self.plan(columns)
-            x = syn.x[:, None] if syn.x.ndim == 1 else syn.x
-            if x.shape[1] != lo.shape[1]:
-                raise ValueError(f"synopsis for {columns} is {x.shape[1]}-d "
-                                 f"but its queries are {lo.shape[1]}-d boxes")
-            if syn.H is not None:
-                ans = _qmc_box_answers(syn, [self.queries[i] for i in idx])
-            else:
-                scale = jnp.float32(syn.n_source / x.shape[0])
-                ans = batch_query_box(x, syn.h_diag(), lo, hi, tgt, ops_arr,
-                                      scale, backend=backend)
-            out[np.asarray(idx)] = np.asarray(ans, np.float64)
-        return out
+        """Deprecated shim: compiles to `AqpQuery` specs and executes through
+        the unified engine (repro.core.aqp_query); answers in submission
+        order, bit-for-bit identical to `QueryEngine.execute`."""
+        import warnings
+
+        warnings.warn(
+            "BoxQueryBatch.run is deprecated; build AqpQuery specs and "
+            "execute them through repro.core.aqp_query.QueryEngine (or "
+            "TelemetryStore.query)", DeprecationWarning, stacklevel=2)
+        return run_legacy_boxes(self.queries, synopses, backend=backend)
 
 
-def _qmc_box_answers(syn: KDESynopsis, qs: Sequence[BoxQuery]) -> np.ndarray:
-    """Full-H fallback: eq. 11 has no product form under a full bandwidth
-    matrix, so each box is integrated by deterministic quasi-MC — one
-    node-set + density evaluation per query, shared between COUNT and SUM."""
+def run_legacy_boxes(queries: Sequence[BoxQuery], synopses,
+                     backend: str = "jnp") -> np.ndarray:
+    """Execute legacy `BoxQuery` objects through the unified engine — the
+    shim body, shared with `KDESynopsis.query_box_batch` (which keeps its
+    non-deprecated convenience signature)."""
+    from .aqp_query import execute_specs, from_box_query
+    return execute_specs([from_box_query(q) for q in queries], synopses,
+                         backend=backend)
+
+
+# --- batched quasi-MC fallback (full-H groups) ------------------------------
+#
+# eq. 11 has no product form under a full bandwidth matrix.  The old fallback
+# ran one Halton node-set + density evaluation per query (a Python loop); the
+# batched form evaluates the KDE ONCE on a shared node set spanning the
+# queries' bounding box and reduces every box in a single vmapped indicator
+# pass — the whole group costs one O(nodes x sample) evaluation.
+
+MAX_QMC_NODES = 32_768
+
+
+@lru_cache(maxsize=16)
+def _halton_unit(n_nodes: int, d: int) -> jax.Array:
+    """Shared unit-cube Halton nodes; cached so repeated batches reuse them."""
+    return _halton(n_nodes, d)
+
+
+@partial(jax.jit, static_argnames=())
+def _qmc_shared_terms(x: jax.Array, H: jax.Array, glo: jax.Array,
+                      ghi: jax.Array, lo: jax.Array, hi: jax.Array,
+                      tgt: jax.Array, unit: jax.Array):
+    """Per-query unscaled (count_raw, sum_raw) from ONE density evaluation.
+
+    Nodes cover the group's bounding box [glo, ghi]; each box q reduces the
+    shared f values under its indicator:  count_q = n vol(G) mean(f 1_q).
+    """
+    n = x.shape[0]
+    nodes = glo[None, :] + unit * (ghi - glo)[None, :]        # (m, d)
+    f = kde_eval_H(nodes, x, H)                                # (m,)
+    vol_g = jnp.prod(ghi - glo)
+
+    def one(loq, hiq, t):
+        inside = jnp.all((nodes >= loq[None, :]) & (nodes <= hiq[None, :]),
+                         axis=1)
+        w = f * inside
+        cnt = n * vol_g * jnp.mean(w)
+        sm = n * vol_g * jnp.mean(jnp.take(nodes, t, axis=1) * w)
+        return cnt, sm
+
+    return jax.vmap(one)(lo, hi, tgt)
+
+
+def batch_query_qmc(x: jax.Array, H: jax.Array, lo: np.ndarray, hi: np.ndarray,
+                    tgt: np.ndarray, ops: np.ndarray, scale: float,
+                    n_qmc: int = 4096) -> jax.Array:
+    """Answer a mixed box batch against one full-H synopsis in one KDE pass.
+
+    lo/hi: (q, d) host arrays (the bounding box and node budget are planned on
+    the host).  Axes wider than the synopsis support are clipped to
+    support +- 6 per-axis sigma ("unconstrained" axes from SUM/AVG targets);
+    essentially all Gaussian mass lies inside, and it keeps the shared node
+    set finite.  Small boxes inside a large bounding box see fewer effective
+    nodes, so the node budget grows (up to MAX_QMC_NODES) when the narrowest
+    box covers a small fraction of the group hull.
+    """
+    lo = np.asarray(lo, np.float64).reshape(lo.shape[0], -1)
+    hi = np.asarray(hi, np.float64).reshape(hi.shape[0], -1)
+    d = x.shape[1]
+    sig = np.sqrt(np.diag(np.asarray(H, np.float64)))
+    x_host = np.asarray(x, np.float64)
+    slo = x_host.min(axis=0) - 6.0 * sig
+    shi = x_host.max(axis=0) + 6.0 * sig
+    clo = np.clip(lo, slo[None, :], shi[None, :])
+    chi = np.clip(hi, slo[None, :], shi[None, :])
+    glo = clo.min(axis=0)
+    ghi = chi.max(axis=0)
+    vol_g = float(np.prod(ghi - glo))
+    if vol_g <= 0.0:                       # every box is zero-measure
+        return jnp.zeros((lo.shape[0],), jnp.float32)
+    ratios = np.prod(chi - clo, axis=1) / vol_g
+    ratios = ratios[ratios > 0]
+    min_ratio = float(ratios.min()) if ratios.size else 1.0
+    n_nodes = int(min(MAX_QMC_NODES, n_qmc / max(min_ratio, n_qmc / MAX_QMC_NODES)))
+    # Quantize the budget to the next power of two: a continuous function of
+    # box geometry would give almost every batch its own node-set shape,
+    # retracing _qmc_shared_terms and churning the Halton cache on each call.
+    n_nodes = 1 << max(int(np.ceil(np.log2(max(n_nodes, 1)))),
+                       int(np.ceil(np.log2(n_qmc))))
+
+    cnt_raw, sum_raw = _qmc_shared_terms(
+        x, H, jnp.asarray(glo, jnp.float32), jnp.asarray(ghi, jnp.float32),
+        jnp.asarray(clo, jnp.float32), jnp.asarray(chi, jnp.float32),
+        jnp.asarray(tgt, jnp.int32), _halton_unit(n_nodes, d))
+    counts = scale * cnt_raw
+    sums = scale * sum_raw
+    return jnp.select([np.asarray(ops) == OP_COUNT, np.asarray(ops) == OP_SUM],
+                      [counts, sums], _avg_or_zero(counts, sums))
+
+
+def _qmc_box_answers(syn: KDESynopsis, qs: Sequence[BoxQuery],
+                     n_qmc: int = 4096) -> np.ndarray:
+    """Full-H fallback for a group of BoxQuery objects, batched (ROADMAP
+    follow-up: the per-query Python loop of `box_qmc_terms` calls is gone)."""
     x = syn.x[:, None] if syn.x.ndim == 1 else syn.x
-    scale = syn.n_source / x.shape[0]
-    out = np.empty((len(qs),), np.float64)
-    for i, q in enumerate(qs):
-        lo = jnp.asarray(q.lo, jnp.float32)
-        hi = jnp.asarray(q.hi, jnp.float32)
-        cnt, sm = box_qmc_terms(x, syn.H, lo, hi, target=q.target_index())
-        cnt, sm = scale * cnt, scale * sm
-        if q.op == "count":
-            out[i] = float(cnt)
-        else:
-            out[i] = float(sm if q.op == "sum" else _avg_or_zero(cnt, sm))
-    return out
+    scale = jnp.float32(syn.n_source / x.shape[0])
+    lo = np.asarray([q.lo for q in qs], np.float64)
+    hi = np.asarray([q.hi for q in qs], np.float64)
+    tgt = np.asarray([q.target_index() for q in qs], np.int32)
+    ops = np.asarray([OP_CODES[q.op] for q in qs], np.int32)
+    ans = batch_query_qmc(x, syn.H, lo, hi, tgt, ops, scale, n_qmc=n_qmc)
+    return np.asarray(ans, np.float64)

@@ -1,0 +1,551 @@
+"""Unified declarative AQP query API — one spec, one engine, many paths.
+
+After the 1-D (`Query`/`QueryBatch`) and multi-d (`BoxQuery`/`BoxQueryBatch`)
+stacks, this module makes the *query surface* the product (cf. VerdictDB's
+single logical query interface over many execution backends, and DEANN's
+estimator-contract / acceleration-backend split):
+
+  `AqpQuery`   — a declarative aggregate: COUNT/SUM/AVG under a conjunction of
+                 predicate terms, optionally grouped by a dictionary column.
+      Range(column, a, b)   a <= column <= b        (eqs. 9-10 closed forms)
+      Box(columns, lo, hi)  axis-aligned box        (eq. 11 product kernel)
+      Eq(column, value)     dictionary/categorical equality (code +- 1/2)
+  `QueryEngine` — the facade over a `TelemetryStore`: normalizes/validates a
+                 heterogeneous batch, groups it by (column tuple, selector),
+                 and routes each group to the cheapest applicable path:
+
+      path      synopsis                 kernel
+      -------   ----------------------   -----------------------------------
+      range1d   1-D sample, scalar h     closed forms (`batch_query_1d`, or
+                                         the Pallas `aqp_batch` tile kernel)
+      box       rows, diagonal h         eq. 11 product kernel
+                                         (`batch_query_box` / Pallas
+                                         `aqp_boxes` tiles)
+      qmc       full bandwidth matrix H  batched quasi-MC: shared Halton
+                                         nodes, ONE KDE pass per group
+                                         (`batch_query_qmc`)
+
+  `AqpResult`  — estimate + the chosen path, a relative-width accuracy proxy,
+                 and the synopsis version that answered the query.
+
+The legacy stacks survive as deprecated shims: `QueryBatch.run` /
+`BoxQueryBatch.run` compile their queries to `AqpQuery` specs and execute
+through this module, bit-for-bit identical to `QueryEngine.execute`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from .aqp import OP_CODES, KDESynopsis, batch_query_1d, canonical_selector
+from .aqp_multid import batch_query_box, batch_query_qmc
+
+ColumnKey = Union[None, str, Tuple[str, ...]]
+
+EQ_HALFWIDTH = 0.5   # dictionary codes are unit-spaced: `== v` is v +- 1/2
+WIDE = 1e30          # "unconstrained axis": Phi saturates to {0,1}, phi to 0
+
+
+# --- predicate terms --------------------------------------------------------
+
+@dataclass(frozen=True)
+class Range:
+    """a <= column <= b.  `column=None` addresses a bare (unnamed) synopsis."""
+    column: Optional[str]
+    a: float
+    b: float
+
+    def __post_init__(self):
+        object.__setattr__(self, "a", float(self.a))
+        object.__setattr__(self, "b", float(self.b))
+
+
+@dataclass(frozen=True)
+class Eq:
+    """Dictionary/categorical equality: column == value.
+
+    Dictionary-coded columns hold unit-spaced numeric codes, so equality is
+    the range [value - halfwidth, value + halfwidth] over the code axis — the
+    KDE mass the synopsis assigns to that code's bucket.
+    """
+    column: Optional[str]
+    value: float
+    halfwidth: float = EQ_HALFWIDTH
+
+    def __post_init__(self):
+        object.__setattr__(self, "value", float(self.value))
+        object.__setattr__(self, "halfwidth", float(self.halfwidth))
+        if self.halfwidth <= 0:
+            raise ValueError(f"Eq halfwidth must be positive, got {self.halfwidth}")
+
+
+@dataclass(frozen=True)
+class Box:
+    """Axis-aligned box: lo_j <= columns_j <= hi_j.  `columns=None` addresses
+    the positional axes of a bare (unnamed) multi-d synopsis."""
+    columns: Optional[Tuple[str, ...]]
+    lo: Tuple[float, ...]
+    hi: Tuple[float, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "lo", tuple(float(v) for v in np.ravel(self.lo)))
+        object.__setattr__(self, "hi", tuple(float(v) for v in np.ravel(self.hi)))
+        if len(self.lo) != len(self.hi):
+            raise ValueError(f"lo/hi dimensionality mismatch: "
+                             f"{len(self.lo)} vs {len(self.hi)}")
+        if self.columns is not None:
+            object.__setattr__(self, "columns", tuple(self.columns))
+            if len(self.columns) != len(self.lo):
+                raise ValueError(f"box has {len(self.lo)} axes but names "
+                                 f"{len(self.columns)} columns")
+
+
+Predicate = Union[Range, Box, Eq]
+
+
+@dataclass(frozen=True)
+class GroupBy:
+    """GROUP BY over a dictionary column.  `values=None` discovers the code
+    set from the store's reservoir sample at execution time."""
+    column: str
+    values: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.values is not None:
+            object.__setattr__(self, "values",
+                               tuple(float(v) for v in self.values))
+
+
+@dataclass(frozen=True)
+class AqpQuery:
+    """One declarative aggregate: COUNT/SUM/AVG of `target` under the
+    conjunction of `predicates`, optionally per `group_by` category.
+
+    `selector` overrides the engine's bandwidth selector for this query only
+    (e.g. one `lscv_H` query inside a `plugin` batch routes to the quasi-MC
+    path while the rest stay on the closed forms).
+    """
+    aggregate: str                               # "count" | "sum" | "avg"
+    predicates: Tuple[Predicate, ...] = ()
+    target: Optional[Union[str, int]] = None     # SUM/AVG column (or axis)
+    group_by: Optional[Union[str, "GroupBy"]] = None
+    selector: Optional[str] = None               # per-query selector override
+
+    def __post_init__(self):
+        agg = str(self.aggregate).lower()
+        if agg not in OP_CODES:
+            raise ValueError(f"unknown aggregate {self.aggregate!r}; "
+                             f"expected one of {sorted(OP_CODES)}")
+        object.__setattr__(self, "aggregate", agg)
+        preds = self.predicates
+        if isinstance(preds, (Range, Box, Eq)):
+            preds = (preds,)
+        preds = tuple(preds)
+        for p in preds:
+            if not isinstance(p, (Range, Box, Eq)):
+                raise TypeError(f"predicate terms must be Range/Box/Eq, "
+                                f"got {type(p).__name__}")
+        object.__setattr__(self, "predicates", preds)
+        if isinstance(self.group_by, str):
+            object.__setattr__(self, "group_by", GroupBy(self.group_by))
+        if self.group_by is not None and not isinstance(self.group_by, GroupBy):
+            raise TypeError("group_by must be a column name or GroupBy")
+        if agg == "count":
+            if self.target is not None:
+                raise ValueError("COUNT takes no target column")
+            if not preds and self.group_by is None:
+                raise ValueError("COUNT needs at least one predicate term")
+        elif not preds and self.target is None:
+            raise ValueError("SUM/AVG needs a predicate term or a target column")
+
+
+@dataclass(frozen=True)
+class AqpResult:
+    """One answered aggregate.
+
+    estimate         — the approximate answer
+    path             — execution path: "range1d" | "box" | "qmc"
+                       (":pallas" suffix when the Pallas tile kernels ran)
+    rel_width        — accuracy proxy: the narrowest constrained axis measured
+                       in bandwidths, min_j (hi_j - lo_j) / h_j.  Small values
+                       (below ~2) mean the kernel smoothing dominates the mass
+                       in the box, so expect higher relative error; inf when
+                       no axis is constrained (whole-table SUM/AVG).
+    synopsis_version — reservoir version of the synopsis that answered it
+                       (0 when executed against bare synopses, not a store)
+    group            — group_by category code (None outside GROUP BY)
+    query            — the originating AqpQuery spec
+    """
+    estimate: float
+    path: str
+    rel_width: float
+    synopsis_version: int
+    group: Optional[float] = None
+    query: Optional[AqpQuery] = None
+
+    def __float__(self) -> float:
+        return self.estimate
+
+
+# --- normalization: AqpQuery -> one axis-aligned box per (sub-)query --------
+
+@dataclass
+class _Compiled:
+    """One execution unit: an axis-aligned box (possibly with wide, i.e.
+    unconstrained, axes) plus the aggregate opcode and target axis."""
+    slot: int                            # output row
+    query: AqpQuery
+    group: Optional[float]
+    cols: Optional[Tuple[str, ...]]      # None -> positional (bare synopsis)
+    lo: List[float]
+    hi: List[float]
+    constrained: List[bool]              # wide target fills are False
+    op: int
+    tgt: int
+    selector: Optional[str]
+
+
+def _compile(query: AqpQuery, slot: int,
+             group_value: Optional[float] = None) -> _Compiled:
+    """Normalize one query (plus its group term) to a canonical box: terms
+    merge per column by interval intersection, SUM/AVG targets outside the
+    predicate columns get a wide (unconstrained) axis."""
+    intervals: "Dict[Union[str, int], List]" = {}
+    named: Optional[bool] = None
+
+    def add(key, lo_v, hi_v, is_named):
+        nonlocal named
+        if named is None:
+            named = is_named
+        elif named != is_named:
+            raise ValueError("cannot mix named and positional (column=None) "
+                             "predicate terms in one AqpQuery")
+        ent = intervals.get(key)
+        if ent is None:
+            intervals[key] = [float(lo_v), float(hi_v), True]
+        else:
+            ent[0] = max(ent[0], float(lo_v))
+            ent[1] = min(ent[1], float(hi_v))
+            if ent[1] < ent[0]:           # empty conjunction -> zero measure
+                ent[1] = ent[0]
+
+    for p in query.predicates:
+        if isinstance(p, Range):
+            add(p.column if p.column is not None else 0, p.a, p.b,
+                p.column is not None)
+        elif isinstance(p, Eq):
+            add(p.column if p.column is not None else 0,
+                p.value - p.halfwidth, p.value + p.halfwidth,
+                p.column is not None)
+        else:
+            if p.columns is None:
+                for j, (lo_v, hi_v) in enumerate(zip(p.lo, p.hi)):
+                    add(j, lo_v, hi_v, False)
+            else:
+                for c, lo_v, hi_v in zip(p.columns, p.lo, p.hi):
+                    add(c, lo_v, hi_v, True)
+
+    # Implicit-target resolution runs BEFORE the group term is appended:
+    # "SUM(b) WHERE ... GROUP BY code" has one predicate column even though
+    # the executed box gains the code axis.
+    tgt = 0
+    if query.aggregate in ("sum", "avg"):
+        t = query.target
+        if t is None:
+            if len(intervals) != 1:
+                raise ValueError("SUM/AVG needs an explicit target unless "
+                                 "exactly one predicate column is given")
+        elif isinstance(t, bool):
+            raise TypeError("target must be a column name or axis index")
+        elif isinstance(t, (int, np.integer)):
+            if not 0 <= int(t) < len(intervals):
+                raise ValueError(f"target axis {t} out of range for "
+                                 f"d={len(intervals)}")
+            tgt = int(t)
+        else:
+            if named is False:
+                raise ValueError("a string target needs named predicate "
+                                 "columns")
+            if t not in intervals:
+                named = True
+                intervals[t] = [-WIDE, WIDE, False]
+            tgt = list(intervals).index(t)
+
+    if group_value is not None:
+        g = query.group_by
+        add(g.column, group_value - EQ_HALFWIDTH, group_value + EQ_HALFWIDTH,
+            True)
+
+    if named is False:
+        keys = sorted(intervals)
+        if keys != list(range(len(keys))):
+            raise ValueError(f"positional predicate axes must be contiguous "
+                             f"from 0, got {keys}")
+        items = [(k, intervals[k]) for k in keys]
+        cols = None
+    else:
+        items = list(intervals.items())
+        cols = tuple(k for k, _ in items)
+    return _Compiled(
+        slot=slot, query=query, group=group_value, cols=cols,
+        lo=[e[0] for _, e in items], hi=[e[1] for _, e in items],
+        constrained=[e[2] for _, e in items], op=OP_CODES[query.aggregate],
+        tgt=tgt, selector=query.selector)
+
+
+def _reorder(c: _Compiled, new_cols: Tuple[str, ...]) -> _Compiled:
+    """Permute a compiled box to a tracked joint's axis order."""
+    perm = [c.cols.index(col) for col in new_cols]
+    return _Compiled(
+        slot=c.slot, query=c.query, group=c.group, cols=new_cols,
+        lo=[c.lo[j] for j in perm], hi=[c.hi[j] for j in perm],
+        constrained=[c.constrained[j] for j in perm], op=c.op,
+        tgt=perm.index(c.tgt), selector=c.selector)
+
+
+# --- synopsis resolution ----------------------------------------------------
+
+class _StoreResolver:
+    """Maps a compiled query to a (group key, synopsis, version) against a
+    TelemetryStore: single columns use the per-column reservoirs, multi-column
+    boxes match a tracked joint (exact tuple first, then by column *set*,
+    reordering the box to the joint's axis order)."""
+
+    def __init__(self, store, selector: str):
+        self.store = store
+        self.selector = selector
+
+    def __call__(self, c: _Compiled):
+        # canonical: "Plugin" and "plugin" must land in ONE group (and one
+        # cache entry), not two duplicate jitted passes over the same data
+        sel = canonical_selector(c.selector or self.selector)
+        if c.cols is None:
+            raise ValueError("every query must name a column when running "
+                             "against a TelemetryStore")
+        if len(c.cols) == 1:
+            col = c.cols[0]
+            syn = self.store.synopsis(col, sel)
+            return (col, sel), c, syn, self.store.columns[col].version
+        cols = c.cols
+        joints = self.store.joints
+        if cols not in joints:
+            match = next((k for k in joints if set(k) == set(cols)), None)
+            if match is not None:
+                c = _reorder(c, match)
+                cols = match
+        syn = self.store.joint_synopsis(cols, sel)   # KeyError: track_joint
+        return (cols, sel), c, syn, joints[cols].version
+
+
+class _MappingResolver:
+    """Resolution against a bare synopsis or a {column(s): synopsis} mapping —
+    the legacy-shim execution context (no store, no versions)."""
+
+    def __init__(self, synopses):
+        self.synopses = synopses
+
+    def __call__(self, c: _Compiled):
+        d = len(c.lo)
+        if isinstance(self.synopses, KDESynopsis):
+            if c.cols is not None:
+                noun = "column" if d == 1 else "columns"
+                raise ValueError(f"queries name columns but a single synopsis "
+                                 f"was given; pass a {{{noun}: synopsis}} "
+                                 f"mapping")
+            return None, c, self.synopses, 0
+        if c.cols is None:
+            if d == 1:
+                raise ValueError("queries must name a column when running "
+                                 "against a synopsis mapping")
+            raise ValueError("queries must name their columns when running "
+                             "against a synopsis mapping")
+        key = c.cols[0] if len(c.cols) == 1 else c.cols
+        if key not in self.synopses:
+            # key=str for the listing: the unified mapping may mix plain
+            # column keys with column tuples, which don't sort against
+            # each other
+            have = sorted(self.synopses, key=str)
+            if len(c.cols) == 1:
+                raise KeyError(f"no synopsis for column {key!r}; have {have}")
+            raise KeyError(f"no joint synopsis for columns {key!r}; "
+                           f"have {have}")
+        return key, c, self.synopses[key], 0
+
+
+# --- execution --------------------------------------------------------------
+
+def _rel_width(c: _Compiled, h_axes: np.ndarray) -> float:
+    widths = [(hi - lo) / h for lo, hi, k, h
+              in zip(c.lo, c.hi, c.constrained, h_axes) if k]
+    return float(min(widths)) if widths else float("inf")
+
+
+def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
+             backend: str = "jnp", n_qmc: int = 4096) -> List[AqpResult]:
+    """Group compiled queries by resolved synopsis, answer each group in one
+    batched pass on its execution path, scatter back to submission order."""
+    groups: "Dict[object, dict]" = {}
+    for c in compiled:
+        key, c2, syn, version = resolver(c)
+        g = groups.setdefault(key, {"syn": syn, "version": version,
+                                    "entries": []})
+        g["entries"].append(c2)
+
+    results: List[Optional[AqpResult]] = [None] * n_out
+    for key, g in groups.items():
+        syn: KDESynopsis = g["syn"]
+        entries: List[_Compiled] = g["entries"]
+        x = syn.x[:, None] if syn.x.ndim == 1 else syn.x
+        d_syn = x.shape[1]
+        for c in entries:
+            if len(c.lo) != d_syn:
+                if len(c.lo) == 1:
+                    raise ValueError(
+                        "multi-dimensional synopses answer box predicates, "
+                        "not scalar ranges; add one term per axis (legacy: "
+                        "BoxQueryBatch, repro.core.aqp_multid)")
+                raise ValueError(f"synopsis for {key} is {d_syn}-d but its "
+                                 f"queries are {len(c.lo)}-d boxes")
+        scale = jnp.float32(syn.n_source / x.shape[0])
+        ops_np = np.asarray([c.op for c in entries], np.int32)
+        if syn.H is not None:
+            lo = np.asarray([c.lo for c in entries], np.float64)
+            hi = np.asarray([c.hi for c in entries], np.float64)
+            tgt = np.asarray([c.tgt for c in entries], np.int32)
+            ans = batch_query_qmc(x, syn.H, lo, hi, tgt, ops_np, scale,
+                                  n_qmc=n_qmc)
+            path = "qmc"
+            h_axes = np.sqrt(np.diag(np.asarray(syn.H, np.float64)))
+        elif syn.x.ndim == 1:
+            a = jnp.asarray([c.lo[0] for c in entries], jnp.float32)
+            b = jnp.asarray([c.hi[0] for c in entries], jnp.float32)
+            ans = batch_query_1d(syn.x, syn.h, a, b, jnp.asarray(ops_np),
+                                 scale, backend=backend)
+            path = "range1d" if backend == "jnp" else f"range1d:{backend}"
+            h_axes = np.asarray([float(syn.h)], np.float64)
+        else:
+            lo = jnp.asarray([c.lo for c in entries], jnp.float32)
+            hi = jnp.asarray([c.hi for c in entries], jnp.float32)
+            tgt = jnp.asarray([c.tgt for c in entries], jnp.int32)
+            ans = batch_query_box(x, syn.h_diag(), lo, hi, tgt,
+                                  jnp.asarray(ops_np), scale, backend=backend)
+            path = "box" if backend == "jnp" else f"box:{backend}"
+            h_axes = np.asarray(syn.h_diag(), np.float64)
+        ans_np = np.asarray(ans, np.float64)
+        for c, est in zip(entries, ans_np):
+            results[c.slot] = AqpResult(
+                estimate=float(est), path=path,
+                rel_width=_rel_width(c, h_axes),
+                synopsis_version=g["version"], group=c.group, query=c.query)
+    return results
+
+
+# --- the facade -------------------------------------------------------------
+
+class QueryEngine:
+    """Single entry point for AQP batches against a `TelemetryStore`.
+
+    A heterogeneous batch — 1-D ranges, multi-d boxes, categorical equality,
+    GROUP BY expansions, mixed selectors — is normalized, grouped by
+    (column tuple, selector), and each group is answered in one batched call
+    on its execution path (closed forms, eq. 11 product kernel, the Pallas
+    tile kernels, or the batched quasi-MC fallback for full-H synopses).
+
+        engine = QueryEngine(store)                # or store.engine()
+        results = engine.execute([
+            AqpQuery("count", (Range("loss", 1.0, 4.0),)),
+            AqpQuery("avg", (Box(("loss", "latency_ms"), (1, 20), (4, 60)),),
+                     target="latency_ms"),
+            AqpQuery("count", (Eq("model_id", 2),)),
+        ])
+    """
+
+    def __init__(self, store, selector: str = "plugin", backend: str = "jnp",
+                 n_qmc: int = 4096, max_groups: int = 64):
+        self.store = store
+        self.selector = selector
+        self.backend = backend
+        self.n_qmc = n_qmc
+        self.max_groups = max_groups
+
+    def execute(self, queries: Union[AqpQuery, Sequence[AqpQuery]],
+                selector: Optional[str] = None,
+                backend: Optional[str] = None) -> List[AqpResult]:
+        """Answer a batch of AqpQuery specs; one AqpResult per query (one per
+        group value for GROUP BY queries, in discovered/declared order)."""
+        if isinstance(queries, AqpQuery):
+            queries = [queries]
+        compiled: List[_Compiled] = []
+        for q in queries:
+            if not isinstance(q, AqpQuery):
+                raise TypeError(f"QueryEngine.execute takes AqpQuery specs, "
+                                f"got {type(q).__name__}")
+            for gv in self._group_values(q):
+                compiled.append(_compile(q, len(compiled), group_value=gv))
+        resolver = _StoreResolver(self.store, selector or self.selector)
+        return _execute(compiled, len(compiled), resolver,
+                        backend=backend or self.backend, n_qmc=self.n_qmc)
+
+    def answers(self, queries, **kw) -> np.ndarray:
+        """`execute`, reduced to the estimates (submission order)."""
+        return np.asarray([r.estimate for r in self.execute(queries, **kw)],
+                          np.float64)
+
+    def _group_values(self, q: AqpQuery) -> List[Optional[float]]:
+        if q.group_by is None:
+            return [None]
+        gb = q.group_by
+        if gb.values is not None:
+            return list(gb.values)
+        res = self.store.columns.get(gb.column)
+        if res is None:
+            raise KeyError(f"unknown group_by column {gb.column!r}; "
+                           f"have {sorted(self.store.columns)}")
+        codes = np.unique(np.round(res.sample().astype(np.float64)))
+        if codes.size == 0:
+            raise ValueError(f"group_by column {gb.column!r} has no data")
+        if codes.size > self.max_groups:
+            raise ValueError(
+                f"group_by {gb.column!r} has {codes.size} distinct codes "
+                f"(max_groups={self.max_groups}); pass "
+                f"GroupBy({gb.column!r}, values=...) to pin the categories")
+        return [float(v) for v in codes]
+
+
+# --- legacy bridges (QueryBatch / BoxQueryBatch shims) ----------------------
+
+def from_query(q) -> AqpQuery:
+    """Compile a legacy 1-D `Query` to an AqpQuery spec."""
+    return AqpQuery(q.op, (Range(q.column, q.a, q.b),))
+
+
+def from_box_query(q) -> AqpQuery:
+    """Compile a legacy `BoxQuery` to an AqpQuery spec."""
+    target = None if q.op == "count" else q.target_index()
+    return AqpQuery(q.op, (Box(q.columns, q.lo, q.hi),), target=target)
+
+
+def execute_specs(specs: Sequence[AqpQuery], synopses,
+                  backend: str = "jnp", n_qmc: int = 4096) -> np.ndarray:
+    """Execute AqpQuery specs against a bare synopsis or a mapping (the
+    legacy-shim context); returns estimates in submission order.
+
+    GROUP BY expansion and per-query selector overrides need a store (the
+    category discovery and the re-fit both live there), so specs carrying
+    them are rejected here rather than silently half-executed.
+    """
+    for q in specs:
+        if q.group_by is not None:
+            raise ValueError("group_by needs a store-backed QueryEngine; "
+                             "execute_specs runs against pre-fitted synopses")
+        if q.selector is not None:
+            raise ValueError("a per-query selector override needs a "
+                             "store-backed QueryEngine; execute_specs runs "
+                             "against pre-fitted synopses")
+    compiled = [_compile(q, i) for i, q in enumerate(specs)]
+    res = _execute(compiled, len(compiled), _MappingResolver(synopses),
+                   backend=backend, n_qmc=n_qmc)
+    return np.asarray([r.estimate for r in res], np.float64)

@@ -31,8 +31,8 @@ from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.aqp import KDESynopsis, Query, QueryBatch
-from repro.core.aqp_multid import BoxQuery, BoxQueryBatch
+from repro.core.aqp import KDESynopsis, Query, canonical_selector
+from repro.core.aqp_multid import BoxQuery
 
 ColumnKey = Union[str, Tuple[str, ...]]
 
@@ -138,6 +138,7 @@ class MultiReservoir(Reservoir):
         if len(self.columns) < 2:
             raise ValueError("MultiReservoir needs >= 2 columns; use Reservoir "
                              "for a single column")
+        self.backfilled = False   # seeded from per-column reservoirs (store)
         super().__init__(capacity, seed, _row_shape=(len(self.columns),))
 
     def _coerce(self, values: np.ndarray) -> np.ndarray:
@@ -155,7 +156,10 @@ class MultiReservoir(Reservoir):
             raise ValueError(f"cannot merge joint reservoirs over different "
                              f"columns: {self.columns} vs "
                              f"{getattr(other, 'columns', None)}")
-        return super().merge(other)
+        out = super().merge(other)
+        # pseudo-rows survive a merge: the flag is sticky across unions
+        out.backfilled = self.backfilled or other.backfilled
+        return out
 
 
 def _entry_nbytes(syn) -> int:
@@ -200,7 +204,9 @@ class SynopsisCache:
         return self._bytes
 
     def get(self, column: ColumnKey, selector: str, version: int) -> Optional[KDESynopsis]:
-        key = (column, selector)
+        # selector case-normalized: "Plugin" and "plugin" are the same
+        # synopsis and must share one entry, not collide as two live copies
+        key = (column, canonical_selector(selector))
         ent = self._entries.get(key)
         if ent is not None and ent[0] == version:
             self.hits += 1
@@ -210,7 +216,7 @@ class SynopsisCache:
         return None
 
     def put(self, column: ColumnKey, selector: str, version: int, syn: KDESynopsis) -> None:
-        key = (column, selector)
+        key = (column, canonical_selector(selector))
         nb = _entry_nbytes(syn)
         if self.max_bytes is not None and nb > self.max_bytes:
             # An entry that can never fit must not flush the whole cache on
@@ -258,14 +264,34 @@ class TelemetryStore:
         # process, which would make the reservoirs nondeterministic.
         return self.seed + zlib.crc32(name.encode()) % 1000
 
-    def track_joint(self, columns: Sequence[str]) -> None:
-        """Register a joint (row) reservoir over a column tuple.  Only rows
-        arriving *after* registration are sampled — per-column reservoirs
-        cannot reconstruct past rows — so call this before `add_batch`."""
+    def track_joint(self, columns: Sequence[str], backfill: bool = True) -> None:
+        """Register a joint (row) reservoir over a column tuple.
+
+        Only rows arriving *after* registration are sampled exactly.  When the
+        columns are already tracked per-column, the joint reservoir is seeded
+        by replaying the per-column reservoirs' current samples zip-aligned
+        (a window of pseudo-rows): the marginals are right immediately, but
+        cross-column correlation only accumulates as real rows stream in.
+        The seed is flagged as `backfilled` in `stats()`; pass
+        `backfill=False` to start empty instead.
+        """
         key = tuple(columns)
-        if key not in self.joints:
-            self.joints[key] = MultiReservoir(
-                key, self.capacity, seed=self._col_seed("|".join(key)))
+        if key in self.joints:
+            return
+        res = MultiReservoir(key, self.capacity,
+                             seed=self._col_seed("|".join(key)))
+        if backfill and all(c in self.columns and self.columns[c].n_filled > 0
+                            for c in key):
+            samples = [self.columns[c].sample() for c in key]
+            k = min(s.shape[0] for s in samples)     # zip-aligned window
+            res.add(np.stack([s[:k] for s in samples], axis=1))
+            # The window stands in for the paired stream the per-column
+            # reservoirs summarize, so the joint's stream size is theirs —
+            # not k.  Without this, sample->relation scaling (and weighted
+            # merges) would treat the backfill as a k-row relation.
+            res.n_seen = min(self.columns[c].n_seen for c in key)
+            res.backfilled = True
+        self.joints[key] = res
 
     def add_batch(self, stats: Dict[str, np.ndarray]) -> None:
         # Build joint rows BEFORE mutating any reservoir: a ragged batch must
@@ -309,6 +335,7 @@ class TelemetryStore:
         return self._fit_cached(key, res, selector)
 
     def _fit_cached(self, key: ColumnKey, res: Reservoir, selector: str) -> KDESynopsis:
+        selector = canonical_selector(selector)
         syn = self.cache.get(key, selector, res.version)
         if syn is None:
             syn = KDESynopsis.fit(res.sample(), selector=selector,
@@ -318,6 +345,25 @@ class TelemetryStore:
         return syn
 
     # -- queries ------------------------------------------------------------
+    #
+    # `query` is the one entry point: a mixed batch of declarative AqpQuery
+    # specs (1-D ranges, multi-d boxes, categorical Eq terms, GROUP BY) is
+    # planned and executed by the QueryEngine facade.  `query_batch` /
+    # `query_box_batch` are retained conveniences for the legacy Query /
+    # BoxQuery types; they compile to the same engine.
+
+    def engine(self, **kwargs) -> "QueryEngine":
+        """A QueryEngine facade over this store (see repro.core.aqp_query)."""
+        from repro.core.aqp_query import QueryEngine
+        return QueryEngine(self, **kwargs)
+
+    def query(self, queries, selector: str = "plugin",
+              backend: str = "jnp") -> List["AqpResult"]:
+        """Answer a mixed batch of AqpQuery specs in one engine call; returns
+        AqpResult rows (estimate + execution path + accuracy proxy +
+        synopsis version) in submission order."""
+        return self.engine(selector=selector, backend=backend).execute(queries)
+
     def count(self, column: str, a: float, b: float, selector: str = "plugin") -> float:
         return float(self.synopsis(column, selector).count(a, b))
 
@@ -330,35 +376,38 @@ class TelemetryStore:
 
     def query_batch(self, queries: Sequence[Query], selector: str = "plugin",
                     backend: str = "jnp") -> np.ndarray:
-        """Answer N heterogeneous queries (mixed ops/ranges/columns) with one
-        jitted pass per distinct column; synopses come from the cache."""
-        batch = QueryBatch(queries)
-        if None in batch.columns:
-            raise ValueError("every query must name a column when running "
-                             "against a TelemetryStore")
-        synopses = {col: self.synopsis(col, selector) for col in batch.columns}
-        return batch.run(synopses, backend=backend)
+        """Answer N legacy 1-D range queries (mixed ops/ranges/columns)
+        through the unified engine; synopses come from the cache."""
+        from repro.core.aqp_query import QueryEngine, from_query
+
+        queries = [q if isinstance(q, Query) else Query(*q) for q in queries]
+        specs = [from_query(q) for q in queries]
+        return QueryEngine(self, selector=selector,
+                           backend=backend).answers(specs)
 
     def query_box_batch(self, queries: Sequence[BoxQuery],
                         selector: str = "plugin",
                         backend: str = "jnp") -> np.ndarray:
-        """Answer N multi-column box queries (eq. 11) with one jitted pass per
-        distinct column tuple; joint synopses come from the cache."""
-        batch = BoxQueryBatch(queries)
-        if None in batch.column_groups:
-            raise ValueError("every box query must name its columns when "
-                             "running against a TelemetryStore")
-        synopses = {cols: self.joint_synopsis(cols, selector)
-                    for cols in batch.column_groups}
-        return batch.run(synopses, backend=backend)
+        """Answer N legacy multi-column box queries (eq. 11) through the
+        unified engine; joint synopses come from the cache."""
+        from repro.core.aqp_query import QueryEngine, from_box_query
+
+        queries = [q if isinstance(q, BoxQuery) else BoxQuery(*q)
+                   for q in queries]
+        specs = [from_box_query(q) for q in queries]
+        return QueryEngine(self, selector=selector,
+                           backend=backend).answers(specs)
 
     def stats(self) -> Dict[str, object]:
-        """Store-level observability: cache hit/miss/eviction counters plus
-        per-reservoir stream sizes (ROADMAP follow-up)."""
+        """Store-level observability: cache hit/miss/eviction counters,
+        per-reservoir stream sizes, and which joints were seeded by the
+        per-column backfill (pseudo-rows, see `track_joint`)."""
         return {
             "cache": self.cache.stats(),
             "columns": {name: res.n_seen for name, res in self.columns.items()},
             "joints": {key: res.n_seen for key, res in self.joints.items()},
+            "backfilled": {key: res.backfilled
+                           for key, res in self.joints.items()},
         }
 
     def merge(self, other: "TelemetryStore") -> "TelemetryStore":

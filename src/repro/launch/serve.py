@@ -6,13 +6,13 @@ LM mode (default): prefill + greedy decode on a smoke config.
         --batch 4 --prompt-len 16 --max-new 16
 
 AQP mode: stand up a TelemetryStore over synthetic telemetry columns and
-serve a mixed COUNT/SUM/AVG query batch through the batched engine
-(core/aqp.py QueryBatch) — one jitted pass per column, synopses cached.
-A joint (loss, latency_ms) reservoir additionally serves multi-column box
-predicates (eq. 11) through BoxQueryBatch — one jitted pass per column tuple.
+serve ONE mixed batch — 1-D ranges, multi-column box predicates (eq. 11),
+categorical equality on a dictionary column, and a GROUP BY — through the
+unified QueryEngine (core/aqp_query.py): one `execute` call, one jitted pass
+per (column tuple, selector) group, synopses cached.
 
     PYTHONPATH=src python -m repro.launch.serve --mode aqp \
-        --rows 200000 --queries 2000 --box-queries 256 --selector plugin
+        --rows 200000 --queries 2000 --box-queries 512 --selector plugin
 """
 from __future__ import annotations
 
@@ -92,9 +92,56 @@ def make_box_query_mix(n_queries: int, columns, ranges, seed: int = 0):
     return queries
 
 
-def run_aqp(args) -> None:
+def make_mixed_aqp_queries(n_queries: int, ranges, joint_cols, cat_col,
+                           cat_values, n_boxes: int = None, seed: int = 0):
+    """Deterministic heterogeneous AqpQuery batch: 1-D ranges over every
+    numeric column, eq. 11 boxes over `joint_cols`, and categorical Eq terms
+    on `cat_col`.  Shared by the serving mode and bench_aqp_engine."""
     import numpy as np
 
+    from repro.core import AqpQuery, Box, Eq, Range
+
+    rng = np.random.default_rng(seed)
+    columns = [c for c in ranges if c not in (cat_col,)]
+    ops = ["count", "sum", "avg"]
+    if n_boxes is None:
+        n_boxes = n_queries // 4
+    n_eq = n_queries // 8 if cat_col is not None else 0
+    queries = []
+    for i in range(n_queries):
+        op = ops[int(rng.integers(3))]
+        if i % 4 == 1 and n_boxes > 0:
+            n_boxes -= 1
+            lo, hi = [], []
+            for col in joint_cols:
+                c_lo, c_hi = ranges[col]
+                a = float(rng.uniform(c_lo, c_hi))
+                lo.append(a)
+                hi.append(float(rng.uniform(a, c_hi)))
+            tgt = joint_cols[int(rng.integers(len(joint_cols)))]
+            queries.append(AqpQuery(
+                op, (Box(tuple(joint_cols), tuple(lo), tuple(hi)),),
+                target=None if op == "count" else tgt))
+        elif i % 8 == 3 and n_eq > 0:
+            n_eq -= 1
+            queries.append(AqpQuery(
+                "count", (Eq(cat_col, float(rng.choice(cat_values))),)))
+        else:
+            col = columns[i % len(columns)]
+            lo, hi = ranges[col]
+            a = float(rng.uniform(lo, hi))
+            queries.append(AqpQuery(
+                op, (Range(col, a, float(rng.uniform(a, hi)))),
+                target=None if op == "count" else col))
+    return queries
+
+
+def run_aqp(args) -> None:
+    from collections import Counter
+
+    import numpy as np
+
+    from repro.core import AqpQuery, Range
     from repro.data import TelemetryStore
 
     rng = np.random.default_rng(0)
@@ -104,53 +151,62 @@ def run_aqp(args) -> None:
         "latency_ms": np.where(rng.random(n) < 0.8, rng.normal(40, 8, n),
                                rng.normal(160, 30, n)).astype(np.float32),
         "seq_len": rng.integers(16, 2048, n).astype(np.float32),
+        # dictionary-coded categorical column (e.g. which model variant
+        # served the request): unit-spaced codes, served by Eq terms
+        "model_id": rng.integers(0, 4, n).astype(np.float32),
     }
     joint_cols = ("loss", "latency_ms")
     store = TelemetryStore(capacity=args.capacity, seed=0)
     store.track_joint(joint_cols)          # before add_batch: joints sample rows
     store.add_batch(telemetry)
+    # registering after add_batch backfills from the per-column reservoirs
+    store.track_joint(("model_id", "latency_ms"))
 
-    columns = list(telemetry)
-    ranges = {c: (float(v.min()), float(v.max())) for c, v in telemetry.items()}
-    queries = make_query_mix(args.queries, ranges, seed=1)
+    numeric = [c for c in telemetry if c != "model_id"]
+    ranges = {c: (float(telemetry[c].min()), float(telemetry[c].max()))
+              for c in numeric}
+    queries = make_mixed_aqp_queries(
+        args.queries, ranges, joint_cols, "model_id", (0.0, 1.0, 2.0, 3.0),
+        n_boxes=args.box_queries, seed=1)
+    engine = store.engine(selector=args.selector, backend=args.backend)
 
-    # Warm-up fits the synopses (cache miss) and compiles the batched pass
+    # Warm-up fits the synopses (cache miss) and compiles the batched passes
     # at the serving batch shape, so the timed run measures steady state.
-    store.query_batch(queries, selector=args.selector, backend=args.backend)
+    engine.execute(queries)
     t0 = time.perf_counter()
-    answers = store.query_batch(queries, selector=args.selector,
-                                backend=args.backend)
+    results = engine.execute(queries)
     dt = time.perf_counter() - t0
 
-    qps = len(queries) / dt
+    qps = len(results) / dt
     cs = store.cache.stats()
-    print(f"[serve:aqp] {len(queries)} queries over {len(columns)} columns "
-          f"({n:,} rows each) in {dt * 1e3:.1f} ms -> {qps:,.0f} queries/s "
-          f"[{args.backend}]")
+    paths = Counter(r.path for r in results)
+    print(f"[serve:aqp] {len(results)} mixed queries (ONE engine call) over "
+          f"{len(telemetry)} columns ({n:,} rows each) in {dt * 1e3:.1f} ms "
+          f"-> {qps:,.0f} queries/s [{args.backend}]")
+    print(f"[serve:aqp] execution paths: "
+          + ", ".join(f"{p}={c}" for p, c in sorted(paths.items())))
     print(f"[serve:aqp] synopsis cache: {cs['hits']} hits / {cs['misses']} misses "
           f"({cs['entries']} entries, {cs['bytes']:,} bytes, "
           f"{cs['evictions']} evictions)")
-    for q, ans in list(zip(queries, answers))[:6]:
-        print(f"  {q.op.upper():5s}({q.column}) in [{q.a:9.2f}, {q.b:9.2f}] "
-              f"~= {ans:,.2f}")
+    bf = store.stats()["backfilled"]
+    print(f"[serve:aqp] joints: " + ", ".join(
+        f"{k} ({'backfilled' if v else 'streamed'})" for k, v in bf.items()))
+    for r in results[:6]:
+        q = r.query
+        terms = " & ".join(
+            f"{t.column}={t.value:.0f}" if hasattr(t, "value")
+            else (f"[{t.a:.1f},{t.b:.1f}] {t.column}" if hasattr(t, "a")
+                  else " & ".join(f"{a:.1f}<={c}<={b:.1f}"
+                                  for c, a, b in zip(t.columns, t.lo, t.hi)))
+            for t in q.predicates)
+        print(f"  {q.aggregate.upper():5s} WHERE {terms} ~= {r.estimate:,.2f} "
+              f"[{r.path}, rel_width {r.rel_width:.1f}]")
 
-    if args.box_queries > 0:
-        box_queries = make_box_query_mix(args.box_queries, joint_cols,
-                                         ranges, seed=2)
-        store.query_box_batch(box_queries, selector=args.selector,
-                              backend=args.backend)           # warm-up
-        t0 = time.perf_counter()
-        box_answers = store.query_box_batch(box_queries, selector=args.selector,
-                                            backend=args.backend)
-        dt = time.perf_counter() - t0
-        print(f"[serve:aqp] {len(box_queries)} box queries over joint "
-              f"{joint_cols} in {dt * 1e3:.1f} ms -> "
-              f"{len(box_queries) / dt:,.0f} queries/s [{args.backend}]")
-        for q, ans in list(zip(box_queries, box_answers))[:4]:
-            box = " & ".join(f"{a:.1f}<={c}<={b:.1f}"
-                             for c, a, b in zip(q.columns, q.lo, q.hi))
-            tgt = f"({q.target})" if q.op != "count" else ""
-            print(f"  {q.op.upper():5s}{tgt} WHERE {box} ~= {ans:,.2f}")
+    # GROUP BY over the dictionary column: one spec, one result per category
+    gb = engine.execute(AqpQuery("avg", (Range("latency_ms", 0.0, 500.0),),
+                                 target="latency_ms", group_by="model_id"))
+    print(f"[serve:aqp] AVG(latency_ms) GROUP BY model_id: "
+          + ", ".join(f"{r.group:.0f}: {r.estimate:.1f}" for r in gb))
 
 
 def main() -> None:
@@ -166,8 +222,8 @@ def main() -> None:
     ap.add_argument("--rows", type=int, default=200_000)
     ap.add_argument("--queries", type=int, default=2000)
     ap.add_argument("--box-queries", type=int, default=256,
-                    help="multi-column box predicates served from the joint "
-                         "synopsis (0 disables)")
+                    help="multi-column box predicates mixed into the engine "
+                         "batch (0 disables boxes)")
     ap.add_argument("--capacity", type=int, default=2048)
     ap.add_argument("--selector", default="plugin",
                     choices=["plugin", "silverman", "lscv_h"])

@@ -1,0 +1,398 @@
+"""Unified declarative AQP API (core/aqp_query.py): AqpQuery normalization,
+QueryEngine routing across execution paths, parity with the legacy stacks
+(deprecation shims bit-for-bit), categorical Eq terms, GROUP BY, the batched
+QMC fallback, and AqpResult metadata."""
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AqpQuery, Box, BoxQuery, BoxQueryBatch, Eq, GroupBy,
+                        KDESynopsis, Query, QueryBatch, QueryEngine, Range)
+from repro.core.aqp import batch_query_1d
+from repro.core.aqp_multid import batch_query_box
+from repro.core.aqp_query import from_box_query, from_query
+from repro.data import TelemetryStore
+
+
+def _store(rng, n=40_000, capacity=1024):
+    a = rng.normal(0, 1, n).astype(np.float32)
+    b = (0.8 * a + 0.6 * rng.normal(0, 1, n)).astype(np.float32)
+    code = rng.integers(0, 4, n).astype(np.float32)
+    store = TelemetryStore(capacity=capacity, seed=0)
+    store.track_joint(("a", "b"))
+    store.add_batch({"a": a, "b": b, "code": code})
+    return store, a, b, code
+
+
+# --- acceptance: one execute() call, every path, parity 1e-5 ----------------
+
+def test_single_execute_answers_every_path(rng):
+    """One QueryEngine.execute call answers a mixed batch of 1-D ranges,
+    multi-d boxes, categorical equality, and full-H-fallback queries, and
+    each answer agrees with the corresponding direct batched pass to 1e-5."""
+    store, a, b, code = _store(rng)
+    specs = [
+        AqpQuery("count", (Range("a", -1.0, 1.0),)),
+        AqpQuery("sum", (Range("b", -0.5, 2.0),), target="b"),
+        AqpQuery("avg", (Box(("a", "b"), (-1.0, -1.0), (1.0, 1.0)),),
+                 target="b"),
+        AqpQuery("count", (Eq("code", 2.0),)),
+        AqpQuery("count", (Range("a", -1.0, 1.0),), selector="lscv_H"),
+    ]
+    results = store.query(specs)
+    assert [r.path for r in results] == ["range1d", "range1d", "box",
+                                         "range1d", "qmc"]
+
+    # direct closed-form passes against the same cached synopses
+    syn_a = store.synopsis("a")
+    got0 = float(batch_query_1d(
+        syn_a.x, syn_a.h, jnp.asarray([-1.0], jnp.float32),
+        jnp.asarray([1.0], jnp.float32), jnp.asarray([0], jnp.int32),
+        jnp.float32(syn_a.n_source / syn_a.x.shape[0]))[0])
+    assert results[0].estimate == pytest.approx(got0, rel=1e-5)
+
+    syn_ab = store.joint_synopsis(("a", "b"))
+    got2 = float(batch_query_box(
+        syn_ab.x, syn_ab.h_diag(), jnp.asarray([[-1.0, -1.0]], jnp.float32),
+        jnp.asarray([[1.0, 1.0]], jnp.float32), jnp.asarray([1], jnp.int32),
+        jnp.asarray([2], jnp.int32),
+        jnp.float32(syn_ab.n_source / syn_ab.x.shape[0]))[0])
+    assert results[2].estimate == pytest.approx(got2, rel=1e-5)
+
+    syn_code = store.synopsis("code")
+    got3 = float(batch_query_1d(
+        syn_code.x, syn_code.h, jnp.asarray([1.5], jnp.float32),
+        jnp.asarray([2.5], jnp.float32), jnp.asarray([0], jnp.int32),
+        jnp.float32(syn_code.n_source / syn_code.x.shape[0]))[0])
+    assert results[3].estimate == pytest.approx(got3, rel=1e-5)
+
+    # sanity vs exact answers (QMC and closed forms are both ~% accurate)
+    exact = float(((a >= -1) & (a <= 1)).sum())
+    assert results[0].estimate == pytest.approx(exact, rel=0.1)
+    assert results[4].estimate == pytest.approx(exact, rel=0.15)
+    assert results[3].estimate == pytest.approx(float((code == 2).sum()),
+                                                rel=0.2)
+
+
+def test_engine_matches_legacy_stacks_rtol(rng):
+    """Mixed batch parity with the pre-refactor dispatch: compiled legacy
+    Query/BoxQuery twins answer within 1e-5 relative error."""
+    store, a, b, code = _store(rng)
+    n_q = 64
+    specs, legacy_r, legacy_b, order = [], [], [], []
+    ops = ["count", "sum", "avg"]
+    for i in range(n_q):
+        op = ops[i % 3]
+        if i % 3 == 2:
+            lo = tuple(rng.uniform(-2.0, 0.0, 2))
+            hi = tuple(np.asarray(lo) + rng.uniform(0.5, 3.0, 2))
+            specs.append(AqpQuery(op, (Box(("a", "b"), lo, hi),), target="a"))
+            legacy_b.append(BoxQuery(op, lo, hi, columns=("a", "b"),
+                                     target="a"))
+            order.append(("b", len(legacy_b) - 1))
+        else:
+            col = "a" if i % 2 else "b"
+            lo = float(rng.uniform(-2.0, 1.0))
+            hi = lo + float(rng.uniform(0.1, 2.0))
+            specs.append(AqpQuery(op, (Range(col, lo, hi),),
+                                  target=None if op == "count" else col))
+            legacy_r.append(Query(op, lo, hi, column=col))
+            order.append(("r", len(legacy_r) - 1))
+    got = store.engine().answers(specs)
+    want_r = store.query_batch(legacy_r)
+    want_b = store.query_box_batch(legacy_b)
+    want = np.asarray([{"r": want_r, "b": want_b}[k][i] for k, i in order])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# --- deprecation shims ------------------------------------------------------
+
+def test_querybatch_shim_bitwise_and_warns(rng):
+    store, *_ = _store(rng, n=8000, capacity=512)
+    qs = [Query("count", -1.0, 1.0, column="a"),
+          Query("sum", -0.5, 2.0, column="b"),
+          Query("avg", 0.0, 1.5, column="a")]
+    synopses = {c: store.synopsis(c) for c in ("a", "b")}
+    with pytest.warns(DeprecationWarning, match="QueryBatch.run"):
+        legacy = QueryBatch(qs).run(synopses)
+    engine = QueryEngine(store).answers([from_query(q) for q in qs])
+    np.testing.assert_array_equal(legacy, engine)
+
+
+def test_boxquerybatch_shim_bitwise_and_warns(rng):
+    store, *_ = _store(rng, n=8000, capacity=512)
+    qs = [BoxQuery("count", (-1, -1), (1, 1), columns=("a", "b")),
+          BoxQuery("sum", (-2, -1), (0, 2), columns=("a", "b"), target="b"),
+          BoxQuery("avg", (-1, 0), (1, 2), columns=("a", "b"), target="a")]
+    synopses = {("a", "b"): store.joint_synopsis(("a", "b"))}
+    with pytest.warns(DeprecationWarning, match="BoxQueryBatch.run"):
+        legacy = BoxQueryBatch(qs).run(synopses)
+    engine = QueryEngine(store).answers([from_box_query(q) for q in qs])
+    np.testing.assert_array_equal(legacy, engine)
+
+
+# --- categorical Eq and GROUP BY --------------------------------------------
+
+def test_eq_counts_dictionary_codes(rng):
+    n = 30_000
+    code = rng.choice([0, 1, 2, 3], size=n,
+                      p=[0.4, 0.3, 0.2, 0.1]).astype(np.float32)
+    store = TelemetryStore(capacity=2048, seed=0)
+    store.add_batch({"code": code})
+    res = store.query([AqpQuery("count", (Eq("code", v),))
+                       for v in (0.0, 1.0, 2.0, 3.0)],
+                      selector="silverman")
+    for v, r in zip((0, 1, 2, 3), res):
+        assert r.estimate == pytest.approx(float((code == v).sum()), rel=0.2)
+    # the code buckets partition the range: totals agree much tighter
+    total = sum(r.estimate for r in res)
+    assert total == pytest.approx(n, rel=0.05)
+
+
+def test_group_by_discovers_codes_and_matches_eq(rng):
+    store, a, b, code = _store(rng)
+    store.track_joint(("code", "b"))          # backfilled joint for the demo
+    store.add_batch({"a": a, "b": b, "code": code})   # stream real rows too
+    grouped = store.engine().execute(
+        AqpQuery("count", (Range("b", -1.0, 1.0),), group_by="code"))
+    assert [r.group for r in grouped] == [0.0, 1.0, 2.0, 3.0]
+    # each group row equals the equivalent explicit Eq conjunction
+    explicit = store.engine().answers(
+        [AqpQuery("count", (Range("b", -1.0, 1.0), Eq("code", v)))
+         for v in (0.0, 1.0, 2.0, 3.0)])
+    np.testing.assert_array_equal([r.estimate for r in grouped], explicit)
+    sel = (b >= -1) & (b <= 1)
+    for r in grouped:
+        # the joint stream is the backfill window plus one real pass over the
+        # data, so the relation it represents is the data twice
+        exact = 2.0 * float((sel & (code == r.group)).sum())
+        assert r.estimate == pytest.approx(exact, rel=0.35, abs=400)
+
+    pinned = store.engine().execute(
+        AqpQuery("count", (Range("b", -1.0, 1.0),),
+                 group_by=GroupBy("code", values=(2.0, 0.0))))
+    assert [r.group for r in pinned] == [2.0, 0.0]
+
+
+def test_group_by_with_implicit_target(rng):
+    """SUM/AVG over one predicate column may leave the target implicit even
+    under GROUP BY — the group term must not count as a predicate column."""
+    n = 20_000
+    code = rng.integers(0, 3, n).astype(np.float32)
+    b = (code + rng.normal(0, 0.3, n)).astype(np.float32)
+    store = TelemetryStore(capacity=1024, seed=0)
+    store.track_joint(("code", "b"))
+    store.add_batch({"code": code, "b": b})
+    implicit = store.engine().execute(
+        AqpQuery("avg", (Range("b", -2.0, 5.0),), group_by="code"))
+    explicit = store.engine().execute(
+        AqpQuery("avg", (Range("b", -2.0, 5.0),), target="b",
+                 group_by="code"))
+    np.testing.assert_array_equal([r.estimate for r in implicit],
+                                  [r.estimate for r in explicit])
+    for r in implicit:
+        assert r.estimate == pytest.approx(float(r.group), abs=0.3)
+
+
+def test_execute_specs_rejects_store_only_features(rng):
+    from repro.core.aqp_query import execute_specs
+
+    syn = KDESynopsis.fit(
+        jnp.asarray(rng.normal(0, 1, 1000).astype(np.float32)),
+        max_sample=256)
+    with pytest.raises(ValueError, match="group_by needs a store"):
+        execute_specs([AqpQuery("count", (Range(None, 0, 1),),
+                                group_by="code")], syn)
+    with pytest.raises(ValueError, match="selector override needs"):
+        execute_specs([AqpQuery("count", (Range(None, 0, 1),),
+                                selector="lscv_H")], syn)
+
+
+def test_group_by_guards(rng):
+    store, *_ = _store(rng, n=2000, capacity=256)
+    with pytest.raises(KeyError, match="group_by column"):
+        store.engine().execute(AqpQuery("count", (Range("a", 0, 1),),
+                                        group_by="missing"))
+    many = rng.normal(0, 100, 2000).astype(np.float32)
+    store.add_batch({"many": many})
+    with pytest.raises(ValueError, match="max_groups"):
+        store.engine().execute(AqpQuery("count", (Range("a", 0, 1),),
+                                        group_by="many"))
+
+
+# --- normalization / validation ---------------------------------------------
+
+def test_aqp_query_validation():
+    with pytest.raises(ValueError, match="unknown aggregate"):
+        AqpQuery("median", (Range("a", 0, 1),))
+    with pytest.raises(ValueError, match="no target"):
+        AqpQuery("count", (Range("a", 0, 1),), target="a")
+    with pytest.raises(ValueError, match="at least one predicate"):
+        AqpQuery("count", ())
+    with pytest.raises(ValueError, match="predicate term or a target"):
+        AqpQuery("sum", ())
+    with pytest.raises(TypeError, match="Range/Box/Eq"):
+        AqpQuery("count", ("a",))
+    with pytest.raises(ValueError, match="mismatch"):
+        Box(("a", "b"), (0, 0), (1, 1, 1))
+    with pytest.raises(ValueError, match="names"):
+        Box(("a",), (0, 0), (1, 1))
+    with pytest.raises(ValueError, match="halfwidth"):
+        Eq("a", 1.0, halfwidth=0.0)
+    # case-insensitive aggregate spelling is normalized
+    assert AqpQuery("COUNT", (Range("a", 0, 1),)).aggregate == "count"
+
+
+def test_engine_compile_errors(rng):
+    store, *_ = _store(rng, n=2000, capacity=256)
+    eng = store.engine()
+    with pytest.raises(ValueError, match="mix named and positional"):
+        eng.execute(AqpQuery("count", (Range("a", 0, 1), Range(None, 0, 1))))
+    with pytest.raises(ValueError, match="explicit target"):
+        eng.execute(AqpQuery("sum", (Range("a", 0, 1), Range("b", 0, 1))))
+    with pytest.raises(ValueError, match="name a column"):
+        eng.execute(AqpQuery("count", (Range(None, 0, 1),)))
+    with pytest.raises(KeyError, match="track_joint"):
+        eng.execute(AqpQuery("count", (Range("a", 0, 1), Range("code", 0, 1))))
+    with pytest.raises(TypeError, match="AqpQuery"):
+        eng.execute([Query("count", 0, 1, column="a")])
+
+
+def test_mapping_miss_lists_mixed_keys(rng):
+    """A unified mapping may mix plain column keys with column tuples; the
+    missing-key diagnostic must not crash sorting them against each other."""
+    from repro.core.aqp_query import execute_specs
+
+    data = rng.normal(0, 1, (1000, 2)).astype(np.float32)
+    syn1 = KDESynopsis.fit(jnp.asarray(data[:, 0]), max_sample=256)
+    syn2 = KDESynopsis.fit(jnp.asarray(data), max_sample=256)
+    mixed = {"a": syn1, ("a", "b"): syn2}
+    with pytest.raises(KeyError, match="no synopsis for column 'c'"):
+        execute_specs([AqpQuery("count", (Range("c", -1, 1),))], mixed)
+    with pytest.raises(KeyError, match="no joint synopsis"):
+        execute_specs([AqpQuery("count", (Range("a", -1, 1),
+                                          Range("c", -1, 1)))], mixed)
+
+
+def test_conjunction_intersects_repeated_columns(rng):
+    """Two Range terms on the same column intersect; an empty intersection
+    collapses to a zero-measure box (COUNT ~ 0, AVG exactly 0)."""
+    store, a, *_ = _store(rng)
+    eng = store.engine()
+    both = eng.answers([
+        AqpQuery("count", (Range("a", -1.0, 2.0), Range("a", 0.0, 5.0))),
+        AqpQuery("count", (Range("a", 0.0, 2.0),)),
+    ])
+    assert both[0] == pytest.approx(both[1], rel=1e-6)
+    empty = eng.execute([
+        AqpQuery("count", (Range("a", -2.0, -1.0), Range("a", 1.0, 2.0))),
+        AqpQuery("avg", (Range("a", -2.0, -1.0), Range("a", 1.0, 2.0)),
+                 target="a"),
+    ])
+    assert empty[0].estimate == pytest.approx(0.0, abs=1e-3)
+    assert empty[1].estimate == 0.0
+
+
+def test_target_outside_predicates_uses_wide_axis(rng):
+    """SUM/AVG of a column not mentioned in the predicates adds an
+    unconstrained axis: AVG(b) WHERE code == v through the (code, b) joint."""
+    n = 30_000
+    code = rng.integers(0, 3, n).astype(np.float32)
+    b = (code * 2.0 + rng.normal(0, 0.5, n)).astype(np.float32)
+    store = TelemetryStore(capacity=2048, seed=0)
+    store.track_joint(("code", "b"))
+    store.add_batch({"code": code, "b": b})
+    res = store.engine().execute(
+        [AqpQuery("avg", (Eq("code", v),), target="b") for v in (0.0, 2.0)])
+    for r, v in zip(res, (0.0, 2.0)):
+        assert r.estimate == pytest.approx(float(b[code == v].mean()),
+                                           abs=0.15)
+        assert r.rel_width < np.inf           # the code axis is constrained
+    whole = store.engine().execute(AqpQuery("sum", (), target="b"))[0]
+    assert whole.rel_width == np.inf          # no constrained axis at all
+    assert whole.estimate == pytest.approx(float(b.sum()), rel=0.1)
+
+
+def test_set_matching_reorders_to_tracked_joint(rng):
+    """Predicate column order need not match the tracked joint tuple."""
+    store, a, b, _ = _store(rng)
+    fwd = store.engine().answers(
+        [AqpQuery("count", (Range("a", -1, 1), Range("b", -1, 1)))])
+    rev = store.engine().answers(
+        [AqpQuery("count", (Range("b", -1, 1), Range("a", -1, 1)))])
+    np.testing.assert_array_equal(fwd, rev)
+    sel = (np.abs(a) <= 1) & (np.abs(b) <= 1)
+    assert fwd[0] == pytest.approx(float(sel.sum()), rel=0.1)
+
+
+def test_result_metadata(rng):
+    store, *_ = _store(rng)
+    narrow, wide = store.engine().execute([
+        AqpQuery("count", (Range("a", 0.0, 0.2),)),
+        AqpQuery("count", (Range("a", -2.0, 2.0),)),
+    ])
+    assert narrow.rel_width < wide.rel_width
+    assert narrow.synopsis_version == store.columns["a"].version
+    assert float(narrow) == narrow.estimate
+    assert narrow.query.aggregate == "count"
+    store.add_batch({"a": np.ones(10, np.float32)})
+    bumped = store.engine().execute(
+        AqpQuery("count", (Range("a", 0.0, 0.2),)))[0]
+    assert bumped.synopsis_version == narrow.synopsis_version + 1
+
+
+@pytest.mark.parametrize("backend", ["pallas"])
+def test_engine_pallas_backend_paths(rng, backend):
+    store, *_ = _store(rng, n=8000, capacity=512)
+    specs = [AqpQuery("count", (Range("a", -1, 1),)),
+             AqpQuery("count", (Box(("a", "b"), (-1, -1), (1, 1)),))]
+    res = store.engine(backend=backend).execute(specs)
+    assert [r.path for r in res] == ["range1d:pallas", "box:pallas"]
+    want = store.engine().answers(specs)
+    got = np.asarray([r.estimate for r in res])
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-2)
+
+
+# --- batched QMC fallback ----------------------------------------------------
+
+def test_batched_qmc_matches_per_query_loop(rng):
+    """The shared-node batched fallback agrees with the old per-query loop;
+    identical boxes share the exact node set, so agreement is tight there."""
+    from repro.core.aqp import box_qmc_terms
+    from repro.core.aqp_multid import _qmc_box_answers
+
+    x = jnp.asarray(rng.normal(0, 1, (384, 2)).astype(np.float32))
+    H = jnp.asarray([[0.16, 0.05], [0.05, 0.2]], jnp.float32)
+    syn = KDESynopsis(x=x, H=H, n_source=384)
+    same = [BoxQuery(op, (-1.0, -1.2), (1.2, 1.0), target=t)
+            for op, t in (("count", 0), ("sum", 1), ("avg", 0))]
+    got = _qmc_box_answers(syn, same)
+    for q, g in zip(same, got):
+        cnt, sm = box_qmc_terms(x, H, jnp.asarray(q.lo), jnp.asarray(q.hi),
+                                target=q.target_index())
+        want = {"count": float(cnt), "sum": float(sm),
+                "avg": float(sm) / float(cnt)}[q.op]
+        assert g == pytest.approx(want, rel=1e-4)
+
+    mixed = [BoxQuery("count", tuple(lo), tuple(lo + rng.uniform(1.0, 2.5, 2)))
+             for lo in [rng.uniform(-2.0, 0.0, 2) for _ in range(6)]]
+    got = _qmc_box_answers(syn, mixed)
+    for q, g in zip(mixed, got):
+        cnt, _ = box_qmc_terms(x, H, jnp.asarray(q.lo), jnp.asarray(q.hi))
+        assert g == pytest.approx(float(cnt), rel=0.08, abs=2.0)
+
+
+def test_full_h_group_in_engine_close_to_closed_form(rng):
+    """A full-H selector routes to the qmc path and lands near the
+    diagonal-bandwidth closed-form answer for the same box."""
+    x = rng.normal(0, 1, (512, 2)).astype(np.float32)
+    store = TelemetryStore(capacity=512, seed=0)
+    store.track_joint(("u", "v"))
+    store.add_batch({"u": x[:, 0], "v": x[:, 1]})
+    spec = AqpQuery("count", (Box(("u", "v"), (-1.5, -1.0), (1.0, 1.5)),))
+    diag = store.engine().execute(spec, selector="plugin")[0]
+    full = store.engine().execute(spec, selector="lscv_H")[0]
+    assert diag.path == "box" and full.path == "qmc"
+    assert full.estimate == pytest.approx(diag.estimate, rel=0.1)

@@ -254,6 +254,35 @@ def test_cache_byte_bound_eviction():
     assert cache.get("b", "plugin", 1) is not None
 
 
+def test_cache_selector_case_insensitive():
+    """Satellite: selector strings differing only by case are ONE entry —
+    "Plugin" and "plugin" must not coexist as two live copies.  The paper's
+    scalar/full-matrix LSCV pair legitimately differs only by case and stays
+    distinct."""
+    cache = SynopsisCache(max_entries=8)
+    cache.put("a", "Plugin", 1, "syn_a")
+    assert cache.get("a", "plugin", 1) == "syn_a"
+    assert cache.get("a", "PLUGIN", 1) == "syn_a"
+    cache.put("a", "plugin", 1, "syn_a2")          # same entry, replaced
+    assert len(cache) == 1
+    assert cache.get("a", "Plugin", 1) == "syn_a2"
+    # lscv_h (scalar) vs lscv_H (full matrix) are different selectors
+    cache.put("a", "lscv_h", 1, "syn_scalar")
+    cache.put("a", "lscv_H", 1, "syn_full")
+    assert cache.get("a", "lscv_h", 1) == "syn_scalar"
+    assert cache.get("a", "lscv_H", 1) == "syn_full"
+    assert len(cache) == 3
+
+
+def test_store_selector_case_shares_cache_entry(rng):
+    store = TelemetryStore(capacity=256, seed=0)
+    store.add_batch({"x": rng.normal(0, 1, 2000).astype(np.float32)})
+    s1 = store.synopsis("x", selector="silverman")
+    s2 = store.synopsis("x", selector="SILVERMAN")
+    assert s2 is s1                                # one entry, served cached
+    assert store.cache.stats()["entries"] == 1
+
+
 def test_cache_lru_recency_not_fifo():
     cache = SynopsisCache(max_entries=2)
     cache.put("a", "plugin", 1, "syn_a")
@@ -295,6 +324,44 @@ def test_store_joint_tracking_and_box_queries(rng):
 
     with pytest.raises(KeyError, match="track_joint"):
         store.joint_synopsis(("a", "missing"))
+
+
+def test_track_joint_backfills_from_per_column_reservoirs(rng):
+    """Satellite: registering a joint over already-tracked columns seeds the
+    MultiReservoir from the per-column samples (zip-aligned window) instead
+    of starting empty, flags it in stats(), and scales to the stream size."""
+    n = 20_000
+    a = rng.normal(0, 1, n).astype(np.float32)
+    b = rng.normal(5, 2, n).astype(np.float32)
+    store = TelemetryStore(capacity=512, seed=0)
+    store.add_batch({"a": a, "b": b})
+
+    store.track_joint(("a", "b"))                 # AFTER the data arrived
+    res = store.joints[("a", "b")]
+    assert res.backfilled and res.n_filled == 512
+    assert res.n_seen == n                        # window represents the stream
+    assert store.stats()["backfilled"][("a", "b")] is True
+
+    # marginals are usable immediately: box count over (almost) everything
+    from repro.core import BoxQuery
+    ans = store.query_box_batch(
+        [BoxQuery("count", (-10.0, -10.0), (10.0, 20.0), columns=("a", "b"))])
+    assert ans[0] == pytest.approx(n, rel=0.15)
+
+    # real rows keep streaming in afterwards
+    store.add_batch({"a": a[:1000], "b": b[:1000]})
+    assert store.joints[("a", "b")].n_seen == n + 1000
+
+    # opt-out and the cold-start path stay empty / unflagged
+    store2 = TelemetryStore(capacity=512, seed=0)
+    store2.add_batch({"a": a})                    # only one of the columns
+    store2.track_joint(("a", "b"))
+    assert not store2.joints[("a", "b")].backfilled
+    assert store2.joints[("a", "b")].n_filled == 0
+    store3 = TelemetryStore(capacity=512, seed=0)
+    store3.add_batch({"a": a, "b": b})
+    store3.track_joint(("a", "b"), backfill=False)
+    assert not store3.joints[("a", "b")].backfilled
 
 
 def test_store_merge_carries_joints(rng):

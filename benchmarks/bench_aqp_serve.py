@@ -1,0 +1,181 @@
+"""Admission micro-batching (core/aqp_admission.py): throughput and latency
+versus per-call `QueryEngine.execute` under concurrent clients.
+
+Two legs over the same workload, the same store, and the same N closed-loop
+clients (one outstanding query each):
+
+  per-call   — every client answers each query with its own
+               `engine.execute([q])` call: per-query planning + dispatch,
+               nothing shared across callers (the pre-admission pattern in
+               `serve --mode aqp`)
+  admission  — every client submits to one shared `AqpSession`
+               (watermark = client count): pending specs coalesce across
+               clients into micro-batches keyed by (column tuple, selector,
+               synopsis version) and flush through one batched pass
+
+The acceptance bar for this PR: admission >= 3x per-call throughput at batch
+depth >= 16 (asserted outside quick mode), with *bit-identical* answers to
+the synchronous path (asserted always — same specs, same synopses, same
+compiled execution core).
+
+Set REPRO_BENCH_QUICK=1 (or `python -m benchmarks.run --quick`) for the CI
+smoke configuration.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+from .common import emit
+
+N_CLIENTS = 16
+PER_CLIENT = 48
+ROWS = 100_000
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def _setup(seed: int = 0):
+    from repro.data import TelemetryStore
+
+    rng = np.random.default_rng(seed)
+    n = ROWS if not _quick() else 20_000
+    data = {
+        "loss": rng.gamma(3.0, 0.7, n).astype(np.float32),
+        "latency_ms": np.where(rng.random(n) < 0.8, rng.normal(40, 8, n),
+                               rng.normal(160, 30, n)).astype(np.float32),
+    }
+    store = TelemetryStore(capacity=2048 if not _quick() else 512, seed=0)
+    store.add_batch(data)
+    ranges = {c: (float(v.min()), float(v.max())) for c, v in data.items()}
+    return store, ranges
+
+
+def _client_specs(n_clients: int, per_client: int, ranges):
+    """Mixed COUNT/SUM/AVG ranges over ONE column: a single (column,
+    selector) bucket, so the micro-batch depth equals the number of
+    concurrent clients (the acceptance bar is pinned at depth >= 16).
+    Heterogeneous multi-bucket traffic is covered by `serve --mode aqp`
+    and the admission tests."""
+    from repro.core import AqpQuery, Range
+
+    ops = ["count", "sum", "avg"]
+    col = sorted(ranges)[0]
+    lo, hi = ranges[col]
+    per = []
+    for ci in range(n_clients):
+        rng = np.random.default_rng(1000 + ci)
+        specs = []
+        for _ in range(per_client):
+            a = float(rng.uniform(lo, hi))
+            op = ops[int(rng.integers(3))]
+            specs.append(AqpQuery(op, (Range(col, a, float(rng.uniform(a, hi)))),
+                                  target=None if op == "count" else col))
+        per.append(specs)
+    return per
+
+
+def _run_clients(n_clients, work):
+    """Run one callable per client on its own thread; wall time in seconds."""
+    threads = [threading.Thread(target=work, args=(ci,))
+               for ci in range(n_clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def run() -> dict:
+    quick = _quick()
+    n_clients = N_CLIENTS if not quick else 8
+    per_client = PER_CLIENT if not quick else 12
+    n_total = n_clients * per_client
+
+    store, ranges = _setup()
+    engine = store.engine()
+    per = _client_specs(n_clients, per_client, ranges)
+    flat = [q for specs in per for q in specs]
+
+    # ground truth + warm-up: fits synopses and compiles every shape the
+    # timed legs hit — single-query per-call batches pad to 8, admission
+    # flushes pad near the watermark, and the parity pass pads to the full
+    # batch — so neither leg pays a jit compile inside its timed region
+    sync_rows = engine.execute(flat)
+    want = {}
+    k = 0
+    for ci, specs in enumerate(per):
+        for qi in range(len(specs)):
+            want[(ci, qi)] = sync_rows[k]
+            k += 1
+    engine.execute(flat[: n_clients])
+    engine.execute([flat[0]])
+
+    # --- leg 1: per-call execute(), one call per query per client ----------
+    def percall_worker(ci):
+        for q in per[ci]:
+            engine.execute([q])
+    t_percall = _run_clients(n_clients, percall_worker)
+
+    # --- leg 2: shared admission session ------------------------------------
+    session = engine.session(watermark=n_clients, max_delay=0.002)
+    got = {}
+    got_lock = threading.Lock()
+    latencies = []
+
+    def admission_worker(ci):
+        mine = []
+        lats = []
+        for qi, q in enumerate(per[ci]):
+            t0 = time.perf_counter()
+            r = session.submit(q).result()
+            lats.append(time.perf_counter() - t0)
+            mine.append((qi, r))
+        with got_lock:
+            got.update({(ci, qi): r for qi, r in mine})
+            latencies.extend(lats)
+    t_admission = _run_clients(n_clients, admission_worker)
+    st = session.stats()
+    session.close()
+
+    # bit-identical to the synchronous path: same estimate, path, version
+    assert len(got) == n_total
+    for key, r in got.items():
+        w = want[key]
+        assert r.estimate == w.estimate and r.path == w.path, (key, r, w)
+
+    qps_percall = n_total / t_percall
+    qps_admission = n_total / t_admission
+    speedup = t_percall / t_admission
+    lat = np.sort(np.asarray(latencies))
+    p50 = lat[len(lat) // 2] * 1e3
+    p95 = lat[int(len(lat) * 0.95)] * 1e3
+
+    emit(f"aqp_serve_percall_c{n_clients}_q{n_total}",
+         t_percall * 1e6 / n_total,
+         f"{qps_percall:,.0f} q/s, one execute() per query")
+    emit(f"aqp_serve_admission_c{n_clients}_q{n_total}",
+         t_admission * 1e6 / n_total,
+         f"{qps_admission:,.0f} q/s, {speedup:.1f}x over per-call; "
+         f"mean batch {st['mean_batch']:.1f}, {st['flushes']} flushes, "
+         f"p50 {p50:.2f} ms, p95 {p95:.2f} ms")
+
+    out = {"speedup": speedup, "mean_batch": st["mean_batch"]}
+    if not quick:
+        assert st["mean_batch"] >= 8.0, (
+            f"admission should coalesce across clients, mean batch "
+            f"{st['mean_batch']:.1f}")
+        assert speedup >= 3.0, (
+            f"micro-batched admission must be >= 3x per-call execute at "
+            f"batch depth >= 16, got {speedup:.1f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

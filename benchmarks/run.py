@@ -3,8 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run [--only NAME] [--quick]
 
 Prints ``name,us_per_call,derived`` CSV lines.  --quick sets
-REPRO_BENCH_QUICK=1, which suites honouring it (aqp_boxes, aqp_engine) read
-at run() time to shrink to a CI-smoke configuration.
+REPRO_BENCH_QUICK=1, which suites honouring it (aqp_boxes, aqp_engine,
+aqp_serve) read at run() time to shrink to a CI-smoke configuration.
 """
 from __future__ import annotations
 
@@ -14,8 +14,8 @@ import sys
 import time
 
 SUITES = ("paper_validation", "plugin", "lscv_h", "lscv_H", "table3",
-          "kernels", "aqp_batch", "aqp_boxes", "aqp_engine", "roofline",
-          "serving")
+          "kernels", "aqp_batch", "aqp_boxes", "aqp_engine", "aqp_serve",
+          "roofline", "serving")
 
 
 def main() -> None:

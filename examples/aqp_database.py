@@ -57,6 +57,9 @@ def main():
     store.track_joint(("amount", "latency"))   # rows sampled from registration on
     # region is dictionary-coded (0=na, 1=emea, 2=apac): Eq/GROUP BY territory
     region = rng.integers(0, 3, n).astype(np.float32)
+    # registered before data: Eq terms on region answer EXACTLY from the
+    # per-code frequency sketch instead of the KDE code window
+    store.track_categorical("region")
     store.add_batch({"amount": amount, "latency": latency, "region": region})
     # registered AFTER add_batch: the joint reservoir is backfilled from the
     # per-column reservoirs (marginals right away; correlations stream in)
@@ -101,6 +104,20 @@ def main():
         ex = ((amount >= 50) & (amount <= 300) & (region == r.group)).sum()
         print(f"  region={r.group:.0f}: COUNT ~ {r.estimate:10,.0f}  "
               f"exact {ex:10,}  [{r.path}]")
+
+    print("\n== streaming admission: futures + cross-caller micro-batches ==")
+    # Many logical clients submit independently; the session coalesces their
+    # specs into micro-batches and flushes on watermark/deadline — answers
+    # are bit-identical to engine.execute for the same specs.
+    with store.session(watermark=8, max_delay=0.005) as session:
+        futures = [session.submit(q) for q in specs[:4]]
+        answers = [f.result() for f in futures]
+    st = session.stats()
+    for r, label in zip(answers, ("COUNT(box)", "SUM(amount)",
+                                  "AVG(latency)", "COUNT(region=2)")):
+        print(f"  {label:16s} ~ {r.estimate:12,.2f}  [{r.path}]")
+    print(f"  {st['flushes']} flushes ({st['mean_batch']:.1f} mean batch), "
+          f"reasons {st['flush_reasons']}")
 
     print("\n== mergeable synopses across 4 'hosts' ==")
     stores = []

@@ -6,6 +6,8 @@ Public API:
   KDESynopsis, count_1d, sum_1d                  — AQP on KDE synopses (§4.3)
   AqpQuery, QueryEngine, AqpResult               — unified declarative AQP API
   Range, Box, Eq, GroupBy                        — AqpQuery predicate terms
+  AqpSession, AdmissionQueue                     — async admission / micro-batch
+                                                   scheduling over QueryEngine
   Query/QueryBatch, BoxQuery/BoxQueryBatch       — legacy stacks (deprecated
                                                    shims over aqp_query)
   reductions.*                                   — parallel primitives (§5)
@@ -15,10 +17,11 @@ Public API:
 from .aqp import (KDESynopsis, Query, QueryBatch, batch_query_1d, count_1d,
                   count_1d_numeric, count_box_H, count_box_diag, sum_1d,
                   sum_1d_numeric, sum_box_H, sum_box_diag)
+from .aqp_admission import AdmissionQueue, AqpSession
 from .aqp_multid import (BoxQuery, BoxQueryBatch, batch_query_box,
-                         batch_query_qmc)
-from .aqp_query import (AqpQuery, AqpResult, Box, Eq, GroupBy, QueryEngine,
-                        Range)
+                         batch_query_box_grouped, batch_query_qmc)
+from .aqp_query import (AqpQuery, AqpResult, Box, Eq, GroupBy, PlanCache,
+                        QueryEngine, Range)
 from .kde import kde_eval, kde_eval_H, silverman_h
 from .lscv import LSCVHResult, LSCVhResult, g_of_H, lscv_H, lscv_h
 from .plugin import PluginResult, plugin_bandwidth, plugin_bandwidth_sequential
@@ -26,7 +29,9 @@ from .plugin import PluginResult, plugin_bandwidth, plugin_bandwidth_sequential
 __all__ = [
     "KDESynopsis", "Query", "QueryBatch", "BoxQuery", "BoxQueryBatch",
     "AqpQuery", "AqpResult", "QueryEngine", "Range", "Box", "Eq", "GroupBy",
-    "batch_query_1d", "batch_query_box", "batch_query_qmc",
+    "AqpSession", "AdmissionQueue", "PlanCache",
+    "batch_query_1d", "batch_query_box", "batch_query_box_grouped",
+    "batch_query_qmc",
     "count_1d", "count_1d_numeric", "count_box_H", "count_box_diag",
     "sum_1d", "sum_1d_numeric", "sum_box_H", "sum_box_diag",
     "kde_eval", "kde_eval_H", "silverman_h", "LSCVHResult",

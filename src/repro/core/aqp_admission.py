@@ -1,0 +1,417 @@
+"""Async admission & micro-batch scheduling for the AQP QueryEngine.
+
+The paper's economics only work when the expensive density work is amortized
+across many cheap queries (DEANN makes the same argument for KDE-ANN): one
+jitted pass answers a thousand range queries for barely more than one.  The
+synchronous `QueryEngine.execute` amortizes *within* one call, but concurrent
+callers each pay their own planning, dispatch, and Phi pass.  This module
+adds the layer the ROADMAP names: callers submit `AqpQuery` specs and get
+futures back, while the session coalesces pending specs *across callers* into
+micro-batches and flushes them through the engine's planning/execution core.
+
+  `AdmissionQueue` — pure bookkeeping: pending entries bucketed by
+                     (column tuple, selector, synopsis version), per-bucket
+                     oldest-submit timestamps, queue-depth accounting.  No
+                     locking, no execution — the session owns both.
+  `AqpSession`     — the long-lived, thread-safe admission surface:
+
+      session = store.session(watermark=32, max_delay=0.005)
+      fut = session.submit(AqpQuery("count", (Range("loss", 1, 4),)))
+      fut.result()          # AqpResult (list of them for GROUP BY specs)
+
+A bucket flushes when it reaches `watermark` pending queries (inline, on the
+submitting thread), when its oldest entry ages past `max_delay` (a background
+flusher thread, or an explicit `poll()` for single-threaded drivers), on
+`flush()` (reason "manual"), and on `close()` (reason "close").  Flushes
+execute through `QueryEngine.run_compiled` — the same compile/_execute
+machinery as the synchronous path, so admission answers are bit-identical to
+`execute()` for the same specs (test-enforced).
+
+Version invalidation: the session subscribes to the store's version-change
+notifications; when `add_batch` bumps a reservoir, pending buckets keyed to
+the stale version are re-keyed to the new one (counted in
+`stats()["invalidations"]`), so a flush never mixes synopsis versions and
+results always carry the version that actually answered them.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import weakref
+from collections import OrderedDict
+from concurrent.futures import Future
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from .aqp_query import AqpQuery, AqpResult, QueryEngine, _Compiled
+
+FLUSH_WATERMARK = "watermark"
+FLUSH_DEADLINE = "deadline"
+FLUSH_MANUAL = "manual"
+FLUSH_CLOSE = "close"
+
+
+class _Ticket:
+    """One submission: a future plus the scatter state for its compiled parts
+    (GROUP BY specs expand to one part per category)."""
+
+    __slots__ = ("future", "parts", "remaining", "single", "failed")
+
+    def __init__(self, n_parts: int, single: bool):
+        self.future: Future = Future()
+        self.parts: List[Optional[AqpResult]] = [None] * n_parts
+        self.remaining = n_parts
+        self.single = single
+        self.failed = False
+
+
+class _Pending:
+    """One compiled execution unit awaiting flush."""
+
+    __slots__ = ("compiled", "ticket", "part", "submitted_at")
+
+    def __init__(self, compiled: _Compiled, ticket: _Ticket, part: int,
+                 submitted_at: float):
+        self.compiled = compiled
+        self.ticket = ticket
+        self.part = part
+        self.submitted_at = submitted_at
+
+
+BucketKey = Tuple[object, str, int]     # (column-or-tuple, selector, version)
+
+
+class AdmissionQueue:
+    """Pending micro-batches keyed by (column tuple, selector, synopsis
+    version).  Pure data structure — the owning session serializes access."""
+
+    def __init__(self):
+        self.buckets: "OrderedDict[BucketKey, List[_Pending]]" = OrderedDict()
+        self.depth = 0
+
+    def add(self, key: BucketKey, pending: _Pending) -> int:
+        bucket = self.buckets.setdefault(key, [])
+        bucket.append(pending)
+        self.depth += 1
+        return len(bucket)
+
+    def pop(self, key: BucketKey) -> List[_Pending]:
+        bucket = self.buckets.pop(key, [])
+        self.depth -= len(bucket)
+        return bucket
+
+    def pop_all(self) -> List[Tuple[BucketKey, List[_Pending]]]:
+        out = list(self.buckets.items())
+        self.buckets.clear()
+        self.depth = 0
+        return out
+
+    def oldest(self, key: BucketKey) -> float:
+        return self.buckets[key][0].submitted_at
+
+    def first_due(self, now: float, max_delay: float) -> Optional[BucketKey]:
+        """The longest-waiting bucket whose deadline has passed, if any."""
+        best = None
+        best_ts = None
+        for key, bucket in self.buckets.items():
+            ts = bucket[0].submitted_at
+            if now - ts >= max_delay and (best_ts is None or ts < best_ts):
+                best, best_ts = key, ts
+        return best
+
+    def next_deadline(self, max_delay: float) -> Optional[float]:
+        if not self.buckets:
+            return None
+        return min(b[0].submitted_at for b in self.buckets.values()) + max_delay
+
+    def rekey(self, stale: BucketKey, fresh: BucketKey) -> int:
+        """Move a stale-version bucket under the bumped version's key; the
+        merged bucket keeps the earliest submit time first so deadlines hold."""
+        moved = self.buckets.pop(stale, [])
+        if not moved:
+            return 0
+        bucket = self.buckets.setdefault(fresh, [])
+        bucket.extend(moved)
+        bucket.sort(key=lambda p: p.submitted_at)
+        return len(moved)
+
+
+class AqpSession:
+    """Streaming admission over a `QueryEngine` (see module docstring).
+
+    watermark  — flush a bucket as soon as it holds this many pending queries
+                 (None disables size-triggered flushes)
+    max_delay  — seconds a pending query may wait before its bucket flushes
+                 (None disables deadline flushes; with both disabled only
+                 `flush()`/`close()` drain the queue)
+    auto_flush — run the deadline flusher on a daemon thread; pass False for
+                 single-threaded drivers and tests, and pump via `poll()`
+    time_fn    — injectable clock (tests drive deadlines deterministically)
+    """
+
+    def __init__(self, engine: QueryEngine, watermark: Optional[int] = 32,
+                 max_delay: Optional[float] = 0.005, auto_flush: bool = True,
+                 selector: Optional[str] = None, backend: Optional[str] = None,
+                 time_fn: Callable[[], float] = time.monotonic):
+        if watermark is not None and watermark < 1:
+            raise ValueError(f"watermark must be >= 1, got {watermark}")
+        if max_delay is not None and max_delay < 0:
+            raise ValueError(f"max_delay must be >= 0, got {max_delay}")
+        self.engine = engine
+        self.watermark = watermark
+        self.max_delay = max_delay
+        self.selector = selector or engine.selector
+        self.backend = backend or engine.backend
+        self.time_fn = time_fn
+        self._auto_flush = auto_flush
+        self._lock = threading.RLock()
+        self._wakeup = threading.Condition(self._lock)
+        self._queue = AdmissionQueue()
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+        # counters (all mutated under the lock)
+        self.submitted = 0            # queries accepted by submit()
+        self.executed = 0             # compiled units flushed
+        self.flushes = 0
+        self.coalesced = 0            # units flushed in a batch of size > 1
+        self.invalidations = 0        # units re-keyed by a version bump
+        self.max_depth = 0
+        self.flush_reasons: Dict[str, int] = {}
+        self._batch_total = 0
+        store = engine.store
+        unsub = getattr(store, "subscribe", None)
+        self._unsubscribe = None
+        if unsub is not None:
+            # subscribe through a weakref: a store outlives its sessions, and
+            # a strong listener would pin every un-close()d session (and its
+            # flusher thread) for the store's lifetime
+            ref = weakref.ref(self)
+
+            def _notify(bumped):
+                session = ref()
+                if session is None:
+                    unsubscribe()          # self-clean once collected
+                else:
+                    session._on_versions(bumped)
+            unsubscribe = unsub(_notify)
+            self._unsubscribe = unsubscribe
+        register = getattr(store, "_register_session", None)
+        if register is not None:
+            register(self)
+
+    # -- client surface ------------------------------------------------------
+
+    def submit(self, query: AqpQuery) -> Future:
+        """Admit one spec; returns a future resolving to its `AqpResult`
+        (a list of them for GROUP BY specs, in category order).  Compilation
+        and synopsis-key resolution run synchronously, so malformed specs and
+        unknown columns raise here, not inside the future."""
+        parts = self.engine.compile(query)
+        resolver = self.engine.resolver(self.selector)
+        keyed = []
+        for c in parts:
+            (colkey, sel), c2, version = resolver.key_for(c)
+            keyed.append(((colkey, sel, version), c2))
+        ticket = _Ticket(len(parts), single=query.group_by is None)
+        due: List[BucketKey] = []
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("cannot submit to a closed AqpSession")
+            now = self.time_fn()
+            for part, (key, c) in enumerate(keyed):
+                size = self._queue.add(key, _Pending(c, ticket, part, now))
+                if self.watermark is not None and size >= self.watermark:
+                    due.append(key)
+            self.submitted += 1
+            self.max_depth = max(self.max_depth, self._queue.depth)
+            if self._auto_flush and self.max_delay is not None \
+                    and self._thread is None:
+                self._start_flusher()
+            self._wakeup.notify_all()
+        for key in due:
+            self._flush_key(key, FLUSH_WATERMARK)
+        return ticket.future
+
+    def submit_many(self, queries: Sequence[AqpQuery]) -> List[Future]:
+        return [self.submit(q) for q in queries]
+
+    def execute(self, queries: Union[AqpQuery, Sequence[AqpQuery]]):
+        """Submit-and-wait convenience: admit the specs, flush anything still
+        pending from them, and return results like `QueryEngine.execute`
+        (GROUP BY rows flattened in place)."""
+        single = isinstance(queries, AqpQuery)
+        futs = self.submit_many([queries] if single else list(queries))
+        self.flush()
+        out: List[AqpResult] = []
+        for fut in futs:
+            res = fut.result()
+            out.extend(res if isinstance(res, list) else [res])
+        return out
+
+    def poll(self, now: Optional[float] = None) -> int:
+        """Flush every bucket whose max-delay deadline has passed; returns the
+        number of buckets flushed.  The manual pump for auto_flush=False."""
+        if self.max_delay is None:
+            return 0
+        flushed = 0
+        while True:
+            with self._lock:
+                key = self._queue.first_due(
+                    self.time_fn() if now is None else now, self.max_delay)
+            if key is None:
+                return flushed
+            flushed += self._flush_key(key, FLUSH_DEADLINE)
+
+    def flush(self) -> int:
+        """Flush every pending bucket now; returns queries flushed."""
+        return self._flush_all(FLUSH_MANUAL)
+
+    def close(self) -> None:
+        """Stop the flusher, flush everything still pending (reason "close"),
+        and detach from the store.  Idempotent; submit() afterwards raises."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._wakeup.notify_all()
+            thread = self._thread
+        if thread is not None and thread is not threading.current_thread():
+            thread.join(timeout=5.0)
+        self._flush_all(FLUSH_CLOSE)
+        if self._unsubscribe is not None:
+            self._unsubscribe()
+            self._unsubscribe = None
+
+    def __enter__(self) -> "AqpSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return self._queue.depth
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            mean_batch = (self._batch_total / self.flushes
+                          if self.flushes else 0.0)
+            return {
+                "submitted": self.submitted,
+                "executed": self.executed,
+                "pending": self._queue.depth,
+                "flushes": self.flushes,
+                "coalesced": self.coalesced,
+                "mean_batch": mean_batch,
+                "flush_reasons": dict(self.flush_reasons),
+                "invalidations": self.invalidations,
+                "max_depth": self.max_depth,
+                "plan_cache": self.engine.plans.stats(),
+            }
+
+    # -- internals -----------------------------------------------------------
+
+    # Idle flusher threads re-check liveness at this cadence; it bounds both
+    # how long an abandoned (never close()d) session stays pinned by its own
+    # thread and the latency of noticing closure without a wakeup.
+    _FLUSHER_TICK = 0.5
+
+    def _start_flusher(self) -> None:
+        self._thread = threading.Thread(
+            target=AqpSession._flusher_main, args=(weakref.ref(self),),
+            name="aqp-admission-flusher", daemon=True)
+        self._thread.start()
+
+    @staticmethod
+    def _flusher_main(ref: "weakref.ref") -> None:
+        # Holds the session only via weakref between iterations (and for at
+        # most _FLUSHER_TICK inside one): when the last external reference
+        # drops without close(), the thread notices and exits so the session
+        # can be collected.
+        while True:
+            session = ref()
+            if session is None or session._closed:
+                return
+            with session._wakeup:
+                deadline = session._queue.next_deadline(session.max_delay)
+                tick = AqpSession._FLUSHER_TICK
+                if deadline is None:
+                    timeout = tick
+                else:
+                    timeout = min(max(deadline - session.time_fn(), 0.0), tick)
+                if timeout > 0:
+                    session._wakeup.wait(timeout=timeout)
+                if session._closed:
+                    return
+            session.poll()
+            session = None          # drop the strong ref before sleeping again
+
+    def _on_versions(self, bumped: Dict[object, int]) -> None:
+        """Store notification: add_batch bumped these reservoir versions.
+        Re-key affected pending buckets so the flush executes (and reports)
+        against the fresh synopsis version."""
+        with self._lock:
+            for key in list(self._queue.buckets):
+                colkey, sel, version = key
+                fresh = bumped.get(colkey)
+                if fresh is not None and fresh != version:
+                    self.invalidations += self._queue.rekey(
+                        key, (colkey, sel, fresh))
+
+    def _flush_key(self, key: BucketKey, reason: str) -> int:
+        with self._lock:
+            pendings = self._queue.pop(key)
+        if not pendings:
+            return 0
+        self._run_flush(pendings, reason)
+        return 1
+
+    def _flush_all(self, reason: str) -> int:
+        with self._lock:
+            batches = self._queue.pop_all()
+        total = 0
+        for _, pendings in batches:
+            self._run_flush(pendings, reason)
+            total += len(pendings)
+        return total
+
+    def _run_flush(self, pendings: List[_Pending], reason: str) -> None:
+        """Execute one micro-batch through the engine core and scatter the
+        results (or the failure) onto the waiting tickets."""
+        compiled = []
+        for i, p in enumerate(pendings):
+            p.compiled.slot = i
+            compiled.append(p.compiled)
+        error: Optional[BaseException] = None
+        results: List[AqpResult] = []
+        try:
+            results = self.engine.run_compiled(compiled, selector=self.selector,
+                                               backend=self.backend)
+        except BaseException as exc:            # surface through the futures
+            error = exc
+        done: List[_Ticket] = []
+        with self._lock:
+            self.flushes += 1
+            self.flush_reasons[reason] = self.flush_reasons.get(reason, 0) + 1
+            self._batch_total += len(pendings)
+            self.executed += len(pendings)
+            if len(pendings) > 1:
+                self.coalesced += len(pendings)
+            for p in pendings:
+                t = p.ticket
+                if error is not None:
+                    t.failed = True
+                else:
+                    t.parts[p.part] = results[p.compiled.slot]
+                t.remaining -= 1
+                if t.remaining == 0:
+                    done.append(t)
+        # futures resolve outside the lock: done-callbacks may re-enter the
+        # session (e.g. a client submitting its next query inline)
+        for t in done:
+            if t.failed:
+                t.future.set_exception(
+                    error if error is not None
+                    else RuntimeError("admission flush failed"))
+            else:
+                t.future.set_result(t.parts[0] if t.single else list(t.parts))

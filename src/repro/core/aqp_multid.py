@@ -224,6 +224,71 @@ def run_legacy_boxes(queries: Sequence[BoxQuery], synopses,
                          backend=backend)
 
 
+# --- grouped GROUP BY evaluation (shared box terms factored out) ------------
+#
+# A GROUP BY over a dictionary column expands to one box per category that
+# differs from its siblings on exactly ONE axis (the group column's code
+# window).  Fanning those out through the generic batched pass recomputes the
+# shared axes' Phi factors once per category: O(n * d * G).  The grouped form
+# computes the shared product once and only the group axis per category:
+# O(n * d + n * G).
+
+
+@partial(jax.jit, static_argnames=("g_axis", "tgt_is_group"))
+def _grouped_box_terms(x: jax.Array, h_diag: jax.Array, lo: jax.Array,
+                       hi: jax.Array, glo: jax.Array, ghi: jax.Array,
+                       tgt: jax.Array, g_axis: int, tgt_is_group: bool):
+    """Unscaled (count_raw, sum_raw), one entry per category.
+
+    x: (n,d); lo/hi: (d,) the shared box (the group axis' entries are
+    ignored); glo/ghi: (G,) per-category interval on axis `g_axis`; tgt:
+    scalar target axis.  `tgt_is_group` statically selects whether the
+    first-moment factor lives on the shared axes or the group axis.
+    """
+    za = (lo[None, :] - x) / h_diag[None, :]
+    zb = (hi[None, :] - x) / h_diag[None, :]
+    d_Phi = _Phi(zb) - _Phi(za)                               # (n, d)
+    axis = jnp.arange(x.shape[1])
+    keep = axis != g_axis
+    shared_cnt = jnp.prod(jnp.where(keep[None, :], d_Phi, 1.0), axis=1)
+
+    xg = x[:, g_axis]
+    hg = h_diag[g_axis]
+    gza = (glo[None, :] - xg[:, None]) / hg                   # (n, G)
+    gzb = (ghi[None, :] - xg[:, None]) / hg
+    g_Phi = _Phi(gzb) - _Phi(gza)
+    cnt = jnp.sum(shared_cnt[:, None] * g_Phi, axis=0)        # (G,)
+
+    if tgt_is_group:
+        g_moment = xg[:, None] * g_Phi - hg * (_phi(gzb) - _phi(gza))
+        sm = jnp.sum(shared_cnt[:, None] * g_moment, axis=0)
+    else:
+        moment = x * d_Phi - h_diag[None, :] * (_phi(zb) - _phi(za))
+        factors = jnp.where(axis[None, :] == tgt, moment, d_Phi)
+        shared_sm = jnp.prod(jnp.where(keep[None, :], factors, 1.0), axis=1)
+        sm = jnp.sum(shared_sm[:, None] * g_Phi, axis=0)
+    return cnt, sm
+
+
+def batch_query_box_grouped(x: jax.Array, h_diag: jax.Array, lo, hi,
+                            glo, ghi, g_axis: int, tgt: int, op: int,
+                            scale) -> jax.Array:
+    """Answer one GROUP BY family — a shared box crossed with G per-category
+    windows on axis `g_axis` — in a single factored pass (one answer per
+    category, the family shares one aggregate op)."""
+    cnt_raw, sum_raw = _grouped_box_terms(
+        x, h_diag, jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
+        jnp.asarray(glo, jnp.float32), jnp.asarray(ghi, jnp.float32),
+        jnp.int32(tgt), int(g_axis), bool(tgt == g_axis))
+    counts = scale * cnt_raw
+    sums = scale * sum_raw
+    if op == OP_COUNT:
+        return counts
+    if op == OP_SUM:
+        return sums
+    return _avg_or_zero(counts, sums)
+
+
 # --- batched quasi-MC fallback (full-H groups) ------------------------------
 #
 # eq. 11 has no product form under a full bandwidth matrix.  The old fallback

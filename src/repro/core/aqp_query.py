@@ -35,13 +35,15 @@ through this module, bit-for-bit identical to `QueryEngine.execute`.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
 
-from .aqp import OP_CODES, KDESynopsis, batch_query_1d, canonical_selector
-from .aqp_multid import batch_query_box, batch_query_qmc
+from .aqp import (OP_CODES, OP_COUNT, OP_SUM, KDESynopsis,
+                  batch_query_1d, canonical_selector)
+from .aqp_multid import (batch_query_box, batch_query_box_grouped,
+                         batch_query_qmc)
 
 ColumnKey = Union[None, str, Tuple[str, ...]]
 
@@ -167,13 +169,17 @@ class AqpResult:
     """One answered aggregate.
 
     estimate         — the approximate answer
-    path             — execution path: "range1d" | "box" | "qmc"
-                       (":pallas" suffix when the Pallas tile kernels ran)
+    path             — execution path: "range1d" | "box" | "qmc" | "exact"
+                       (":pallas" suffix when the Pallas tile kernels ran;
+                       "box:grouped" for GROUP BY families answered by the
+                       factored grouped kernel; "exact" answers come from a
+                       CategoricalSketch, not the KDE)
     rel_width        — accuracy proxy: the narrowest constrained axis measured
                        in bandwidths, min_j (hi_j - lo_j) / h_j.  Small values
                        (below ~2) mean the kernel smoothing dominates the mass
                        in the box, so expect higher relative error; inf when
-                       no axis is constrained (whole-table SUM/AVG).
+                       no axis is constrained (whole-table SUM/AVG) and for
+                       "exact" answers (no smoothing at all).
     synopsis_version — reservoir version of the synopsis that answered it
                        (0 when executed against bare synopses, not a store)
     group            — group_by category code (None outside GROUP BY)
@@ -206,6 +212,8 @@ class _Compiled:
     op: int
     tgt: int
     selector: Optional[str]
+    all_eq: bool = False                 # every interval is a code window
+    group_axis: Optional[int] = None     # axis of the group_by column
 
 
 def _compile(query: AqpQuery, slot: int,
@@ -214,15 +222,17 @@ def _compile(query: AqpQuery, slot: int,
     merge per column by interval intersection, SUM/AVG targets outside the
     predicate columns get a wide (unconstrained) axis."""
     intervals: "Dict[Union[str, int], List]" = {}
+    eq_only: "Dict[Union[str, int], bool]" = {}
     named: Optional[bool] = None
 
-    def add(key, lo_v, hi_v, is_named):
+    def add(key, lo_v, hi_v, is_named, is_eq=False):
         nonlocal named
         if named is None:
             named = is_named
         elif named != is_named:
             raise ValueError("cannot mix named and positional (column=None) "
                              "predicate terms in one AqpQuery")
+        eq_only[key] = eq_only.get(key, True) and is_eq
         ent = intervals.get(key)
         if ent is None:
             intervals[key] = [float(lo_v), float(hi_v), True]
@@ -239,7 +249,7 @@ def _compile(query: AqpQuery, slot: int,
         elif isinstance(p, Eq):
             add(p.column if p.column is not None else 0,
                 p.value - p.halfwidth, p.value + p.halfwidth,
-                p.column is not None)
+                p.column is not None, is_eq=True)
         else:
             if p.columns is None:
                 for j, (lo_v, hi_v) in enumerate(zip(p.lo, p.hi)):
@@ -272,12 +282,14 @@ def _compile(query: AqpQuery, slot: int,
             if t not in intervals:
                 named = True
                 intervals[t] = [-WIDE, WIDE, False]
+                eq_only[t] = False
             tgt = list(intervals).index(t)
 
     if group_value is not None:
         g = query.group_by
+        # the group term is a dictionary-code window, i.e. an Eq term
         add(g.column, group_value - EQ_HALFWIDTH, group_value + EQ_HALFWIDTH,
-            True)
+            True, is_eq=True)
 
     if named is False:
         keys = sorted(intervals)
@@ -289,11 +301,15 @@ def _compile(query: AqpQuery, slot: int,
     else:
         items = list(intervals.items())
         cols = tuple(k for k, _ in items)
+    group_axis = None
+    if group_value is not None and cols is not None:
+        group_axis = cols.index(query.group_by.column)
     return _Compiled(
         slot=slot, query=query, group=group_value, cols=cols,
         lo=[e[0] for _, e in items], hi=[e[1] for _, e in items],
         constrained=[e[2] for _, e in items], op=OP_CODES[query.aggregate],
-        tgt=tgt, selector=query.selector)
+        tgt=tgt, selector=query.selector,
+        all_eq=all(eq_only[k] for k, _ in items), group_axis=group_axis)
 
 
 def _reorder(c: _Compiled, new_cols: Tuple[str, ...]) -> _Compiled:
@@ -303,22 +319,89 @@ def _reorder(c: _Compiled, new_cols: Tuple[str, ...]) -> _Compiled:
         slot=c.slot, query=c.query, group=c.group, cols=new_cols,
         lo=[c.lo[j] for j in perm], hi=[c.hi[j] for j in perm],
         constrained=[c.constrained[j] for j in perm], op=c.op,
-        tgt=perm.index(c.tgt), selector=c.selector)
+        tgt=perm.index(c.tgt), selector=c.selector, all_eq=c.all_eq,
+        group_axis=None if c.group_axis is None else perm.index(c.group_axis))
 
 
-# --- synopsis resolution ----------------------------------------------------
+# --- group plans and synopsis resolution ------------------------------------
+
+@dataclass
+class _GroupPlan:
+    """Execution plan for one (column tuple, selector) group: the resolved
+    synopsis plus everything derivable from it alone — the execution path,
+    per-axis bandwidths for the accuracy proxy, and the sample->relation
+    scale.  Cached by the engine keyed on the synopsis version so repeated
+    flushes against an unchanged reservoir skip re-resolution."""
+    syn: KDESynopsis
+    kind: str                 # "range1d" | "box" | "qmc"
+    h_axes: np.ndarray
+    scale: float
+
+    @property
+    def x_rows(self) -> jnp.ndarray:
+        return self.syn.x[:, None] if self.syn.x.ndim == 1 else self.syn.x
+
+
+def _make_plan(syn: KDESynopsis) -> _GroupPlan:
+    x = syn.x[:, None] if syn.x.ndim == 1 else syn.x
+    if syn.H is not None:
+        kind = "qmc"
+        h_axes = np.sqrt(np.diag(np.asarray(syn.H, np.float64)))
+    elif syn.x.ndim == 1:
+        kind = "range1d"
+        h_axes = np.asarray([float(syn.h)], np.float64)
+    else:
+        kind = "box"
+        h_axes = np.asarray(syn.h_diag(), np.float64)
+    return _GroupPlan(syn=syn, kind=kind, h_axes=h_axes,
+                      scale=syn.n_source / x.shape[0])
+
+
+class PlanCache:
+    """Version-keyed memo of `_GroupPlan`s, owned by a QueryEngine.  An entry
+    whose stored version differs from the reservoir's current version misses
+    (add_batch therefore invalidates implicitly, same contract as the
+    SynopsisCache underneath)."""
+
+    def __init__(self):
+        self._entries: Dict[object, Tuple[int, _GroupPlan]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key, version: int) -> Optional[_GroupPlan]:
+        ent = self._entries.get(key)
+        if ent is not None and ent[0] == version:
+            self.hits += 1
+            return ent[1]
+        self.misses += 1
+        return None
+
+    def put(self, key, version: int, plan: _GroupPlan) -> None:
+        self._entries[key] = (version, plan)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._entries)}
+
 
 class _StoreResolver:
-    """Maps a compiled query to a (group key, synopsis, version) against a
+    """Maps a compiled query to a (group key, plan, version) against a
     TelemetryStore: single columns use the per-column reservoirs, multi-column
     boxes match a tracked joint (exact tuple first, then by column *set*,
-    reordering the box to the joint's axis order)."""
+    reordering the box to the joint's axis order).
 
-    def __init__(self, store, selector: str):
+    `key_for` is the cheap half (no synopsis fit) — the admission layer uses
+    it to bucket pending queries without forcing a fit at submit time.
+    """
+
+    def __init__(self, store, selector: str,
+                 plans: Optional[PlanCache] = None):
         self.store = store
         self.selector = selector
+        self.plans = plans
 
-    def __call__(self, c: _Compiled):
+    def key_for(self, c: _Compiled):
+        """(group key, reordered compiled, reservoir version) — no fitting."""
         # canonical: "Plugin" and "plugin" must land in ONE group (and one
         # cache entry), not two duplicate jitted passes over the same data
         sel = canonical_selector(c.selector or self.selector)
@@ -327,8 +410,11 @@ class _StoreResolver:
                              "against a TelemetryStore")
         if len(c.cols) == 1:
             col = c.cols[0]
-            syn = self.store.synopsis(col, sel)
-            return (col, sel), c, syn, self.store.columns[col].version
+            res = self.store.columns.get(col)
+            if res is None:
+                raise KeyError(f"unknown column {col!r}; "
+                               f"have {sorted(self.store.columns)}")
+            return (col, sel), c, res.version
         cols = c.cols
         joints = self.store.joints
         if cols not in joints:
@@ -336,8 +422,51 @@ class _StoreResolver:
             if match is not None:
                 c = _reorder(c, match)
                 cols = match
-        syn = self.store.joint_synopsis(cols, sel)   # KeyError: track_joint
-        return (cols, sel), c, syn, joints[cols].version
+            else:
+                raise KeyError(f"no joint reservoir for columns {cols!r}; "
+                               f"call track_joint({cols!r}) before add_batch "
+                               f"(have {sorted(joints)})")
+        return (cols, sel), c, joints[cols].version
+
+    def plan_for(self, key, version: int) -> _GroupPlan:
+        """Fit-or-fetch the group's plan for the given reservoir version."""
+        if self.plans is not None:
+            plan = self.plans.get(key, version)
+            if plan is not None:
+                return plan
+        col, sel = key
+        if isinstance(col, tuple):
+            syn = self.store.joint_synopsis(col, sel)
+        else:
+            syn = self.store.synopsis(col, sel)
+        plan = _make_plan(syn)
+        if self.plans is not None:
+            self.plans.put(key, version, plan)
+        return plan
+
+    def __call__(self, c: _Compiled):
+        key, c2, version = self.key_for(c)
+        return key, c2, self.plan_for(key, version), version
+
+    def try_exact(self, c: _Compiled):
+        """Exact categorical answer for an all-Eq single-column query, when
+        the column carries a `CategoricalSketch` covering its whole stream;
+        returns (estimate, version) or None (KDE fallback)."""
+        if not c.all_eq or c.cols is None or len(c.cols) != 1:
+            return None
+        col = c.cols[0]
+        sketch = getattr(self.store, "categoricals", {}).get(col)
+        res = self.store.columns.get(col)
+        if sketch is None or res is None or not sketch.exact_for(res.n_seen):
+            return None
+        cnt, sm = sketch.range_terms(c.lo[0], c.hi[0])
+        if c.op == OP_COUNT:
+            est = float(cnt)
+        elif c.op == OP_SUM:
+            est = float(sm)
+        else:
+            est = float(sm / cnt) if cnt > 0 else 0.0
+        return est, res.version
 
 
 class _MappingResolver:
@@ -346,6 +475,13 @@ class _MappingResolver:
 
     def __init__(self, synopses):
         self.synopses = synopses
+        self._plans: Dict[int, _GroupPlan] = {}   # keyed on synopsis identity
+
+    def _plan(self, syn: KDESynopsis) -> _GroupPlan:
+        plan = self._plans.get(id(syn))
+        if plan is None:
+            plan = self._plans[id(syn)] = _make_plan(syn)
+        return plan
 
     def __call__(self, c: _Compiled):
         d = len(c.lo)
@@ -355,7 +491,7 @@ class _MappingResolver:
                 raise ValueError(f"queries name columns but a single synopsis "
                                  f"was given; pass a {{{noun}: synopsis}} "
                                  f"mapping")
-            return None, c, self.synopses, 0
+            return None, c, self._plan(self.synopses), 0
         if c.cols is None:
             if d == 1:
                 raise ValueError("queries must name a column when running "
@@ -372,7 +508,7 @@ class _MappingResolver:
                 raise KeyError(f"no synopsis for column {key!r}; have {have}")
             raise KeyError(f"no joint synopsis for columns {key!r}; "
                            f"have {have}")
-        return key, c, self.synopses[key], 0
+        return key, c, self._plan(self.synopses[key]), 0
 
 
 # --- execution --------------------------------------------------------------
@@ -383,62 +519,149 @@ def _rel_width(c: _Compiled, h_axes: np.ndarray) -> float:
     return float(min(widths)) if widths else float("inf")
 
 
-def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
-             backend: str = "jnp", n_qmc: int = 4096) -> List[AqpResult]:
-    """Group compiled queries by resolved synopsis, answer each group in one
-    batched pass on its execution path, scatter back to submission order."""
-    groups: "Dict[object, dict]" = {}
-    for c in compiled:
-        key, c2, syn, version = resolver(c)
-        g = groups.setdefault(key, {"syn": syn, "version": version,
-                                    "entries": []})
-        g["entries"].append(c2)
+# Batch shapes are quantized so a stream of variable-size micro-batch flushes
+# reuses a handful of jitted executables instead of compiling per size: small
+# batches round up to the next power of two (floor 8), larger ones to the next
+# multiple of 64 (<= 63 padded rows, each a copy of the last real row, sliced
+# off after the pass — per-row vmapped results are unaffected).
+_PAD_STEP = 64
 
-    results: List[Optional[AqpResult]] = [None] * n_out
-    for key, g in groups.items():
-        syn: KDESynopsis = g["syn"]
-        entries: List[_Compiled] = g["entries"]
-        x = syn.x[:, None] if syn.x.ndim == 1 else syn.x
-        d_syn = x.shape[1]
+
+def _pad_count(n: int) -> int:
+    if n >= _PAD_STEP:
+        return -(-n // _PAD_STEP) * _PAD_STEP
+    return max(8, 1 << max(n - 1, 0).bit_length())
+
+
+def _pad_rows(arr: np.ndarray, m: int) -> np.ndarray:
+    pad = m - arr.shape[0]
+    if pad <= 0:
+        return arr
+    return np.concatenate([arr, np.repeat(arr[-1:], pad, axis=0)])
+
+
+def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
+               backend: str, n_qmc: int) -> List[Tuple[float, str]]:
+    """Answer one resolved group in batched passes; returns one
+    (estimate, path label) per entry, in entry order.
+
+    GROUP BY families — entries expanded from one query that differ only on
+    the group column's code window — are peeled off onto the factored grouped
+    kernel (shared box terms evaluated once per flush) when the group runs the
+    diagonal-bandwidth box path.
+    """
+    syn = plan.syn
+    x = plan.x_rows
+    d_syn = x.shape[1]
+    for c in entries:
+        if len(c.lo) != d_syn:
+            if len(c.lo) == 1:
+                raise ValueError(
+                    "multi-dimensional synopses answer box predicates, "
+                    "not scalar ranges; add one term per axis (legacy: "
+                    "BoxQueryBatch, repro.core.aqp_multid)")
+            raise ValueError(f"synopsis for {key} is {d_syn}-d but its "
+                             f"queries are {len(c.lo)}-d boxes")
+    scale = jnp.float32(plan.scale)
+
+    families: List[List[_Compiled]] = []
+    rest: List[_Compiled] = []
+    if plan.kind == "box" and backend == "jnp":
+        by_query: Dict[int, List[_Compiled]] = {}
         for c in entries:
-            if len(c.lo) != d_syn:
-                if len(c.lo) == 1:
-                    raise ValueError(
-                        "multi-dimensional synopses answer box predicates, "
-                        "not scalar ranges; add one term per axis (legacy: "
-                        "BoxQueryBatch, repro.core.aqp_multid)")
-                raise ValueError(f"synopsis for {key} is {d_syn}-d but its "
-                                 f"queries are {len(c.lo)}-d boxes")
-        scale = jnp.float32(syn.n_source / x.shape[0])
-        ops_np = np.asarray([c.op for c in entries], np.int32)
-        if syn.H is not None:
-            lo = np.asarray([c.lo for c in entries], np.float64)
-            hi = np.asarray([c.hi for c in entries], np.float64)
-            tgt = np.asarray([c.tgt for c in entries], np.int32)
+            if (c.group is not None and c.group_axis is not None):
+                by_query.setdefault(id(c.query), []).append(c)
+            else:
+                rest.append(c)
+        for fam in by_query.values():
+            if len(fam) >= 2:
+                families.append(fam)
+            else:
+                rest.extend(fam)
+    else:
+        rest = list(entries)
+
+    out: Dict[int, Tuple[float, str]] = {}
+    if rest:
+        n = len(rest)
+        m = _pad_count(n)
+        ops_np = _pad_rows(np.asarray([c.op for c in rest], np.int32), m)
+        if plan.kind == "qmc":
+            lo = _pad_rows(np.asarray([c.lo for c in rest], np.float64), m)
+            hi = _pad_rows(np.asarray([c.hi for c in rest], np.float64), m)
+            tgt = _pad_rows(np.asarray([c.tgt for c in rest], np.int32), m)
             ans = batch_query_qmc(x, syn.H, lo, hi, tgt, ops_np, scale,
                                   n_qmc=n_qmc)
             path = "qmc"
-            h_axes = np.sqrt(np.diag(np.asarray(syn.H, np.float64)))
-        elif syn.x.ndim == 1:
-            a = jnp.asarray([c.lo[0] for c in entries], jnp.float32)
-            b = jnp.asarray([c.hi[0] for c in entries], jnp.float32)
-            ans = batch_query_1d(syn.x, syn.h, a, b, jnp.asarray(ops_np),
-                                 scale, backend=backend)
+        elif plan.kind == "range1d":
+            a = _pad_rows(np.asarray([c.lo[0] for c in rest], np.float32), m)
+            b = _pad_rows(np.asarray([c.hi[0] for c in rest], np.float32), m)
+            ans = batch_query_1d(syn.x, syn.h, jnp.asarray(a), jnp.asarray(b),
+                                 jnp.asarray(ops_np), scale, backend=backend)
             path = "range1d" if backend == "jnp" else f"range1d:{backend}"
-            h_axes = np.asarray([float(syn.h)], np.float64)
         else:
-            lo = jnp.asarray([c.lo for c in entries], jnp.float32)
-            hi = jnp.asarray([c.hi for c in entries], jnp.float32)
-            tgt = jnp.asarray([c.tgt for c in entries], jnp.int32)
-            ans = batch_query_box(x, syn.h_diag(), lo, hi, tgt,
+            lo = _pad_rows(np.asarray([c.lo for c in rest], np.float32), m)
+            hi = _pad_rows(np.asarray([c.hi for c in rest], np.float32), m)
+            tgt = _pad_rows(np.asarray([c.tgt for c in rest], np.int32), m)
+            ans = batch_query_box(x, syn.h_diag(), jnp.asarray(lo),
+                                  jnp.asarray(hi), jnp.asarray(tgt),
                                   jnp.asarray(ops_np), scale, backend=backend)
             path = "box" if backend == "jnp" else f"box:{backend}"
-            h_axes = np.asarray(syn.h_diag(), np.float64)
-        ans_np = np.asarray(ans, np.float64)
-        for c, est in zip(entries, ans_np):
+        ans_np = np.asarray(ans, np.float64)[:n]
+        for c, est in zip(rest, ans_np):
+            out[id(c)] = (float(est), path)
+
+    for fam in families:
+        g_axis = fam[0].group_axis
+        gm = _pad_count(len(fam))
+        glo = _pad_rows(np.asarray([c.lo[g_axis] for c in fam], np.float32),
+                        gm)
+        ghi = _pad_rows(np.asarray([c.hi[g_axis] for c in fam], np.float32),
+                        gm)
+        ans = batch_query_box_grouped(
+            x, syn.h_diag(), fam[0].lo, fam[0].hi, glo, ghi,
+            g_axis=g_axis, tgt=fam[0].tgt, op=fam[0].op, scale=scale)
+        ans_np = np.asarray(ans, np.float64)[:len(fam)]
+        for c, est in zip(fam, ans_np):
+            out[id(c)] = (float(est), "box:grouped")
+
+    return [out[id(c)] for c in entries]
+
+
+def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
+             backend: str = "jnp", n_qmc: int = 4096) -> List[AqpResult]:
+    """Answer compiled queries: exact categorical sketches first (when the
+    resolver offers them), then group the rest by resolved synopsis, answer
+    each group in batched passes on its execution path, and scatter back to
+    submission order."""
+    results: List[Optional[AqpResult]] = [None] * n_out
+    try_exact = getattr(resolver, "try_exact", None)
+    remaining: List[_Compiled] = []
+    for c in compiled:
+        hit = try_exact(c) if try_exact is not None else None
+        if hit is not None:
+            est, version = hit
             results[c.slot] = AqpResult(
-                estimate=float(est), path=path,
-                rel_width=_rel_width(c, h_axes),
+                estimate=est, path="exact", rel_width=float("inf"),
+                synopsis_version=version, group=c.group, query=c.query)
+        else:
+            remaining.append(c)
+
+    groups: "Dict[object, dict]" = {}
+    for c in remaining:
+        key, c2, plan, version = resolver(c)
+        g = groups.setdefault(key, {"plan": plan, "version": version,
+                                    "entries": []})
+        g["entries"].append(c2)
+
+    for key, g in groups.items():
+        plan: _GroupPlan = g["plan"]
+        entries: List[_Compiled] = g["entries"]
+        answered = _run_group(key, plan, entries, backend, n_qmc)
+        for c, (est, path) in zip(entries, answered):
+            results[c.slot] = AqpResult(
+                estimate=est, path=path,
+                rel_width=_rel_width(c, plan.h_axes),
                 synopsis_version=g["version"], group=c.group, query=c.query)
     return results
 
@@ -470,12 +693,15 @@ class QueryEngine:
         self.backend = backend
         self.n_qmc = n_qmc
         self.max_groups = max_groups
+        self.plans = PlanCache()
 
-    def execute(self, queries: Union[AqpQuery, Sequence[AqpQuery]],
-                selector: Optional[str] = None,
-                backend: Optional[str] = None) -> List[AqpResult]:
-        """Answer a batch of AqpQuery specs; one AqpResult per query (one per
-        group value for GROUP BY queries, in discovered/declared order)."""
+    # -- planning core (shared by the synchronous path and the admission
+    #    layer in repro.core.aqp_admission) ----------------------------------
+
+    def compile(self, queries: Union[AqpQuery, Sequence[AqpQuery]]
+                ) -> List[_Compiled]:
+        """Normalize specs to execution units (one per GROUP BY category),
+        slotted in submission order."""
         if isinstance(queries, AqpQuery):
             queries = [queries]
         compiled: List[_Compiled] = []
@@ -485,14 +711,43 @@ class QueryEngine:
                                 f"got {type(q).__name__}")
             for gv in self._group_values(q):
                 compiled.append(_compile(q, len(compiled), group_value=gv))
-        resolver = _StoreResolver(self.store, selector or self.selector)
-        return _execute(compiled, len(compiled), resolver,
+        return compiled
+
+    def resolver(self, selector: Optional[str] = None) -> _StoreResolver:
+        """Store resolver wired to this engine's version-keyed plan cache."""
+        return _StoreResolver(self.store, selector or self.selector,
+                              plans=self.plans)
+
+    def run_compiled(self, compiled: Sequence[_Compiled],
+                     selector: Optional[str] = None,
+                     backend: Optional[str] = None) -> List[AqpResult]:
+        """Execute pre-compiled units (slots must be 0..n-1) — the admission
+        layer's flush entry point; identical execution to `execute`."""
+        return _execute(compiled, len(compiled), self.resolver(selector),
                         backend=backend or self.backend, n_qmc=self.n_qmc)
+
+    # -- the synchronous shell ----------------------------------------------
+
+    def execute(self, queries: Union[AqpQuery, Sequence[AqpQuery]],
+                selector: Optional[str] = None,
+                backend: Optional[str] = None) -> List[AqpResult]:
+        """Answer a batch of AqpQuery specs; one AqpResult per query (one per
+        group value for GROUP BY queries, in discovered/declared order)."""
+        return self.run_compiled(self.compile(queries), selector=selector,
+                                 backend=backend)
 
     def answers(self, queries, **kw) -> np.ndarray:
         """`execute`, reduced to the estimates (submission order)."""
         return np.asarray([r.estimate for r in self.execute(queries, **kw)],
                           np.float64)
+
+    def session(self, **kwargs) -> "AqpSession":
+        """A streaming admission session over this engine: submit AqpQuery
+        specs from many logical clients, get futures back, micro-batches
+        flush on a batch-size watermark or max-delay deadline (see
+        repro.core.aqp_admission)."""
+        from .aqp_admission import AqpSession
+        return AqpSession(self, **kwargs)
 
     def _group_values(self, q: AqpQuery) -> List[Optional[float]]:
         if q.group_by is None:

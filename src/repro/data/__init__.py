@@ -1,2 +1,3 @@
-from .aqp_store import MultiReservoir, Reservoir, SynopsisCache, TelemetryStore
+from .aqp_store import (CategoricalSketch, MultiReservoir, Reservoir,
+                        SynopsisCache, TelemetryStore)
 from .pipeline import TokenPipeline

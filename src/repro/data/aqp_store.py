@@ -25,9 +25,11 @@ counters surfaced through `TelemetryStore.stats()`.
 from __future__ import annotations
 
 import copy
+import weakref
 import zlib
 from collections import OrderedDict
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, Hashable, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -162,6 +164,78 @@ class MultiReservoir(Reservoir):
         return out
 
 
+class CategoricalSketch:
+    """Exact per-code frequency sketch for a dictionary column.
+
+    Dictionary columns hold a small set of unit-spaced codes, so keeping ONE
+    counter per code alongside the reservoir answers Eq-term aggregates
+    *exactly* — no kernel smoothing, no sample->relation scaling.  The KDE
+    code±1/2 window stays as the fallback for untracked columns (and for
+    sketches that do not cover the column's whole stream).
+
+    `n_rows` counts every value the sketch has seen; the engine only takes
+    the exact path when it equals the reservoir's `n_seen` (i.e. the sketch
+    was registered before any data and never missed a batch).  A column
+    whose distinct-code count exceeds `max_codes` is not dictionary-like;
+    the sketch marks itself `overflowed` and the exact path disables itself.
+    """
+
+    def __init__(self, max_codes: int = 4096):
+        self.counts: Dict[float, int] = {}
+        self.n_rows = 0
+        self.max_codes = max_codes
+        self.overflowed = False
+
+    def add(self, values: np.ndarray) -> None:
+        values = np.asarray(values, np.float64).ravel()
+        if values.shape[0] == 0:
+            return
+        if not self.overflowed:
+            codes, counts = np.unique(values, return_counts=True)
+            for c, k in zip(codes, counts):
+                self.counts[float(c)] = self.counts.get(float(c), 0) + int(k)
+            if len(self.counts) > self.max_codes:
+                self.overflowed = True
+                self.counts.clear()
+        # n_rows LAST: the store bumps the reservoir's n_seen before this
+        # add runs, so a concurrent reader mid-update sees n_rows < n_seen
+        # and `exact_for` conservatively routes it to the KDE fallback
+        # rather than serving half-updated counts as "exact"
+        self.n_rows += values.shape[0]
+
+    def exact_for(self, n_seen: int) -> bool:
+        """True when the sketch covers the column's entire stream."""
+        return not self.overflowed and self.n_rows == n_seen
+
+    def range_terms(self, lo: float, hi: float) -> Tuple[int, float]:
+        """(COUNT, SUM of code values) over codes in [lo, hi] — exact."""
+        cnt = 0
+        sm = 0.0
+        # snapshot: a concurrent add() may insert codes mid-iteration
+        for code, k in list(self.counts.items()):
+            if lo <= code <= hi:
+                cnt += k
+                sm += code * k
+        return cnt, sm
+
+    def merge(self, other: "CategoricalSketch") -> "CategoricalSketch":
+        out = CategoricalSketch(max_codes=min(self.max_codes, other.max_codes))
+        out.n_rows = self.n_rows + other.n_rows
+        out.overflowed = self.overflowed or other.overflowed
+        if not out.overflowed:
+            out.counts = dict(self.counts)
+            for c, k in other.counts.items():
+                out.counts[c] = out.counts.get(c, 0) + k
+            if len(out.counts) > out.max_codes:
+                out.overflowed = True
+                out.counts.clear()
+        return out
+
+    def stats(self) -> Dict[str, object]:
+        return {"codes": len(self.counts), "rows": self.n_rows,
+                "overflowed": self.overflowed}
+
+
 def _entry_nbytes(syn) -> int:
     """Byte footprint of a cached synopsis — the device payload (sample +
     bandwidth).  Payloads without device arrays size to 0; the entry bound
@@ -254,10 +328,13 @@ class TelemetryStore:
                  cache_entries: int = 128, cache_bytes: Optional[int] = None):
         self.columns: Dict[str, Reservoir] = {}
         self.joints: Dict[Tuple[str, ...], MultiReservoir] = {}
+        self.categoricals: Dict[str, CategoricalSketch] = {}
         self.capacity = capacity
         self.seed = seed
         self.cache = SynopsisCache(max_entries=cache_entries,
                                    max_bytes=cache_bytes)
+        self._listeners: List[Callable[[Dict[ColumnKey, int]], None]] = []
+        self._sessions: List["weakref.ref"] = []
 
     def _col_seed(self, name: str) -> int:
         # crc32, not hash(): Python string hashing is randomised per
@@ -293,6 +370,37 @@ class TelemetryStore:
             res.backfilled = True
         self.joints[key] = res
 
+    def track_categorical(self, column: str, max_codes: int = 4096) -> None:
+        """Register an exact per-code frequency sketch for a dictionary
+        column.  Register *before* the column's first `add_batch` — the
+        engine's exact Eq path requires the sketch to cover the whole stream
+        (otherwise it falls back to the KDE code-window estimate; see
+        `stats()["categoricals"]` for coverage)."""
+        if column in self.categoricals:
+            return
+        self.categoricals[column] = CategoricalSketch(max_codes=max_codes)
+
+    def subscribe(self, fn: Callable[[Dict[ColumnKey, int]], None]
+                  ) -> Callable[[], None]:
+        """Version-change notification: `fn` is called after every
+        `add_batch` with {column-or-joint-tuple: new version} for each bumped
+        reservoir.  Returns an unsubscribe callable.  Admission sessions use
+        this to re-key in-flight micro-batches to the fresh synopsis."""
+        self._listeners.append(fn)
+
+        def unsubscribe() -> None:
+            try:
+                self._listeners.remove(fn)
+            except ValueError:
+                pass
+        return unsubscribe
+
+    def _register_session(self, session) -> None:
+        """Track an admission session (weakly) so `stats()` can aggregate its
+        counters; called by AqpSession.__init__."""
+        self._sessions = [r for r in self._sessions if r() is not None]
+        self._sessions.append(weakref.ref(session))
+
     def add_batch(self, stats: Dict[str, np.ndarray]) -> None:
         # Build joint rows BEFORE mutating any reservoir: a ragged batch must
         # fail cleanly, not leave per-column reservoirs updated with the
@@ -312,8 +420,18 @@ class TelemetryStore:
                 self.columns[name] = Reservoir(self.capacity,
                                                seed=self._col_seed(name))
             self.columns[name].add(values)
+            sketch = self.categoricals.get(name)
+            if sketch is not None:
+                sketch.add(values)
         for cols, rows in joint_rows.items():
             self.joints[cols].add(rows)
+        if self._listeners:
+            bumped: Dict[ColumnKey, int] = {
+                name: self.columns[name].version for name in stats}
+            for cols in joint_rows:
+                bumped[cols] = self.joints[cols].version
+            for fn in list(self._listeners):
+                fn(bumped)
 
     def synopsis(self, column: str, selector: str = "plugin") -> KDESynopsis:
         res = self.columns.get(column)
@@ -356,6 +474,14 @@ class TelemetryStore:
         """A QueryEngine facade over this store (see repro.core.aqp_query)."""
         from repro.core.aqp_query import QueryEngine
         return QueryEngine(self, **kwargs)
+
+    def session(self, selector: str = "plugin", backend: str = "jnp",
+                **kwargs) -> "AqpSession":
+        """A streaming admission session over this store: submit AqpQuery
+        specs from many logical clients, micro-batches coalesce across
+        callers and flush on watermark/deadline (repro.core.aqp_admission).
+        Remaining kwargs (watermark, max_delay, ...) go to AqpSession."""
+        return self.engine(selector=selector, backend=backend).session(**kwargs)
 
     def query(self, queries, selector: str = "plugin",
               backend: str = "jnp") -> List["AqpResult"]:
@@ -400,15 +526,48 @@ class TelemetryStore:
 
     def stats(self) -> Dict[str, object]:
         """Store-level observability: cache hit/miss/eviction counters,
-        per-reservoir stream sizes, and which joints were seeded by the
-        per-column backfill (pseudo-rows, see `track_joint`)."""
+        per-reservoir stream sizes, which joints were seeded by the
+        per-column backfill (pseudo-rows, see `track_joint`), exact-sketch
+        coverage, and aggregated admission-session counters."""
+        cats = {}
+        for name, sketch in self.categoricals.items():
+            ent = sketch.stats()
+            res = self.columns.get(name)
+            ent["exact"] = res is not None and sketch.exact_for(res.n_seen)
+            cats[name] = ent
         return {
             "cache": self.cache.stats(),
             "columns": {name: res.n_seen for name, res in self.columns.items()},
             "joints": {key: res.n_seen for key, res in self.joints.items()},
             "backfilled": {key: res.backfilled
                            for key, res in self.joints.items()},
+            "categoricals": cats,
+            "admission": self._admission_stats(),
         }
+
+    def _admission_stats(self) -> Dict[str, object]:
+        """Sum the counters of every live admission session opened on this
+        store (flushes, coalesced queries, mean batch size, ...)."""
+        live = [r() for r in self._sessions]
+        live = [s for s in live if s is not None]
+        agg: Dict[str, object] = {
+            "sessions": len(live), "submitted": 0, "executed": 0,
+            "pending": 0, "flushes": 0, "coalesced": 0,
+            "invalidations": 0, "flush_reasons": {},
+        }
+        total_batch = 0
+        for s in live:
+            st = s.stats()
+            for k in ("submitted", "executed", "pending", "flushes",
+                      "coalesced", "invalidations"):
+                agg[k] += st[k]
+            total_batch += st["mean_batch"] * st["flushes"]
+            for reason, n in st["flush_reasons"].items():
+                agg["flush_reasons"][reason] = \
+                    agg["flush_reasons"].get(reason, 0) + n
+        agg["mean_batch"] = (total_batch / agg["flushes"]
+                             if agg["flushes"] else 0.0)
+        return agg
 
     def merge(self, other: "TelemetryStore") -> "TelemetryStore":
         out = TelemetryStore(self.capacity, self.seed,
@@ -428,4 +587,13 @@ class TelemetryStore:
             else:
                 out.joints[key] = copy.deepcopy(
                     self.joints.get(key) or other.joints[key])
+        for name in set(self.categoricals) | set(other.categoricals):
+            if name in self.categoricals and name in other.categoricals:
+                out.categoricals[name] = \
+                    self.categoricals[name].merge(other.categoricals[name])
+            else:
+                # one-sided sketch: carried along, but it cannot cover the
+                # merged stream, so `exact_for` disables the exact path
+                out.categoricals[name] = copy.deepcopy(
+                    self.categoricals.get(name) or other.categoricals[name])
         return out

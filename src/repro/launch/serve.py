@@ -5,14 +5,19 @@ LM mode (default): prefill + greedy decode on a smoke config.
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
         --batch 4 --prompt-len 16 --max-new 16
 
-AQP mode: stand up a TelemetryStore over synthetic telemetry columns and
-serve ONE mixed batch — 1-D ranges, multi-column box predicates (eq. 11),
-categorical equality on a dictionary column, and a GROUP BY — through the
-unified QueryEngine (core/aqp_query.py): one `execute` call, one jitted pass
-per (column tuple, selector) group, synopses cached.
+AQP mode: a long-lived admission loop over a TelemetryStore.  Concurrent
+query clients submit heterogeneous AqpQuery specs — 1-D ranges, multi-column
+box predicates (eq. 11), categorical equality on a dictionary column — into
+one `AqpSession` while a producer keeps streaming telemetry batches into the
+store (bumping synopsis versions mid-flight).  The session coalesces specs
+across clients into micro-batches keyed by (column tuple, selector, synopsis
+version) and flushes them on a batch-size watermark or max-delay deadline;
+the summary reports queue depth, flush reasons, per-flush batch sizes, and
+version invalidations.
 
     PYTHONPATH=src python -m repro.launch.serve --mode aqp \
-        --rows 200000 --queries 2000 --box-queries 512 --selector plugin
+        --rows 200000 --clients 8 --per-client 150 --max-delay-ms 5 \
+        --selector plugin
 """
 from __future__ import annotations
 
@@ -136,7 +141,22 @@ def make_mixed_aqp_queries(n_queries: int, ranges, joint_cols, cat_col,
     return queries
 
 
+def _make_telemetry(rng, n):
+    import numpy as np
+
+    return {
+        "loss": rng.gamma(3.0, 0.7, n).astype(np.float32),
+        "latency_ms": np.where(rng.random(n) < 0.8, rng.normal(40, 8, n),
+                               rng.normal(160, 30, n)).astype(np.float32),
+        "seq_len": rng.integers(16, 2048, n).astype(np.float32),
+        # dictionary-coded categorical column (e.g. which model variant
+        # served the request): unit-spaced codes, served by Eq terms
+        "model_id": rng.integers(0, 4, n).astype(np.float32),
+    }
+
+
 def run_aqp(args) -> None:
+    import threading
     from collections import Counter
 
     import numpy as np
@@ -146,18 +166,11 @@ def run_aqp(args) -> None:
 
     rng = np.random.default_rng(0)
     n = args.rows
-    telemetry = {
-        "loss": rng.gamma(3.0, 0.7, n).astype(np.float32),
-        "latency_ms": np.where(rng.random(n) < 0.8, rng.normal(40, 8, n),
-                               rng.normal(160, 30, n)).astype(np.float32),
-        "seq_len": rng.integers(16, 2048, n).astype(np.float32),
-        # dictionary-coded categorical column (e.g. which model variant
-        # served the request): unit-spaced codes, served by Eq terms
-        "model_id": rng.integers(0, 4, n).astype(np.float32),
-    }
+    telemetry = _make_telemetry(rng, n)
     joint_cols = ("loss", "latency_ms")
     store = TelemetryStore(capacity=args.capacity, seed=0)
     store.track_joint(joint_cols)          # before add_batch: joints sample rows
+    store.track_categorical("model_id")    # exact per-code counts for Eq terms
     store.add_batch(telemetry)
     # registering after add_batch backfills from the per-column reservoirs
     store.track_joint(("model_id", "latency_ms"))
@@ -165,24 +178,84 @@ def run_aqp(args) -> None:
     numeric = [c for c in telemetry if c != "model_id"]
     ranges = {c: (float(telemetry[c].min()), float(telemetry[c].max()))
               for c in numeric}
-    queries = make_mixed_aqp_queries(
-        args.queries, ranges, joint_cols, "model_id", (0.0, 1.0, 2.0, 3.0),
-        n_boxes=args.box_queries, seed=1)
     engine = store.engine(selector=args.selector, backend=args.backend)
 
-    # Warm-up fits the synopses (cache miss) and compiles the batched passes
-    # at the serving batch shape, so the timed run measures steady state.
-    engine.execute(queries)
-    t0 = time.perf_counter()
-    results = engine.execute(queries)
-    dt = time.perf_counter() - t0
+    # Closed-loop clients hold one outstanding query each, so a bucket can
+    # never exceed the client count: a deeper watermark would leave every
+    # flush to the deadline and cap throughput at clients/max_delay.
+    watermark = args.watermark if args.watermark is not None \
+        else max(2, args.clients)
 
-    qps = len(results) / dt
+    # Warm-up fits the synopses (cache miss) and compiles the batched passes
+    # near the flush shapes, so the timed loop measures steady state.
+    warm = make_mixed_aqp_queries(
+        max(watermark, 64), ranges, joint_cols, "model_id",
+        (0.0, 1.0, 2.0, 3.0), seed=99)
+    engine.execute(warm)
+
+    session = engine.session(watermark=watermark,
+                             max_delay=args.max_delay_ms / 1e3)
+    per_client: dict = {}
+    results_lock = threading.Lock()
+    stop_producer = threading.Event()
+
+    def client(ci: int) -> None:
+        specs = make_mixed_aqp_queries(
+            args.per_client, ranges, joint_cols, "model_id",
+            (0.0, 1.0, 2.0, 3.0), seed=10 + ci)
+        got = []
+        for q in specs:                       # closed loop: 1 outstanding
+            got.append(session.submit(q).result())
+        with results_lock:
+            per_client[ci] = got
+
+    def producer() -> None:
+        # keep streaming telemetry while queries are in flight: every batch
+        # bumps reservoir versions, re-keying pending micro-batches
+        prng = np.random.default_rng(1234)
+        while not stop_producer.wait(args.stream_every_ms / 1e3):
+            store.add_batch(_make_telemetry(prng, args.stream_rows))
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(args.clients)]
+    prod = threading.Thread(target=producer, daemon=True)
+    depth_samples = []
+    t0 = time.perf_counter()
+    prod.start()
+    for t in threads:
+        t.start()
+    while any(t.is_alive() for t in threads):
+        depth_samples.append(session.pending)
+        time.sleep(0.002)
+    for t in threads:
+        t.join()
+    dt = time.perf_counter() - t0
+    stop_producer.set()
+    prod.join(timeout=2.0)
+    session.close()
+
+    # client order (not thread finish order): the sample rows below are
+    # reproducible run-to-run when the producer is quiescent
+    results = [r for ci in sorted(per_client) for r in per_client[ci]]
+    st = session.stats()
     cs = store.cache.stats()
     paths = Counter(r.path for r in results)
-    print(f"[serve:aqp] {len(results)} mixed queries (ONE engine call) over "
-          f"{len(telemetry)} columns ({n:,} rows each) in {dt * 1e3:.1f} ms "
-          f"-> {qps:,.0f} queries/s [{args.backend}]")
+    qps = len(results) / dt
+    print(f"[serve:aqp] {len(results)} mixed queries from {args.clients} "
+          f"concurrent clients over {len(telemetry)} columns ({n:,} seed rows) "
+          f"in {dt * 1e3:.1f} ms -> {qps:,.0f} queries/s [{args.backend}]")
+    print(f"[serve:aqp] admission: {st['flushes']} flushes "
+          f"(reasons: " + ", ".join(f"{k}={v}" for k, v
+                                    in sorted(st['flush_reasons'].items()))
+          + f"), mean batch {st['mean_batch']:.1f}, "
+          f"{st['coalesced']} coalesced, "
+          f"{st['invalidations']} version invalidations")
+    if depth_samples:
+        print(f"[serve:aqp] queue depth: max {max(depth_samples)}, "
+              f"mean {sum(depth_samples) / len(depth_samples):.1f} "
+              f"({len(depth_samples)} samples); "
+              f"plan cache {st['plan_cache']['hits']} hits / "
+              f"{st['plan_cache']['misses']} misses")
     print(f"[serve:aqp] execution paths: "
           + ", ".join(f"{p}={c}" for p, c in sorted(paths.items())))
     print(f"[serve:aqp] synopsis cache: {cs['hits']} hits / {cs['misses']} misses "
@@ -191,6 +264,10 @@ def run_aqp(args) -> None:
     bf = store.stats()["backfilled"]
     print(f"[serve:aqp] joints: " + ", ".join(
         f"{k} ({'backfilled' if v else 'streamed'})" for k, v in bf.items()))
+    cat = store.stats()["categoricals"].get("model_id", {})
+    print(f"[serve:aqp] model_id sketch: {cat.get('codes', 0)} codes, "
+          f"{cat.get('rows', 0):,} rows, "
+          f"exact={'yes' if cat.get('exact') else 'no (KDE fallback)'}")
     for r in results[:6]:
         q = r.query
         terms = " & ".join(
@@ -202,10 +279,12 @@ def run_aqp(args) -> None:
         print(f"  {q.aggregate.upper():5s} WHERE {terms} ~= {r.estimate:,.2f} "
               f"[{r.path}, rel_width {r.rel_width:.1f}]")
 
-    # GROUP BY over the dictionary column: one spec, one result per category
+    # GROUP BY over the dictionary column: one spec, one result per category,
+    # answered by the factored grouped kernel (shared box terms once per flush)
     gb = engine.execute(AqpQuery("avg", (Range("latency_ms", 0.0, 500.0),),
                                  target="latency_ms", group_by="model_id"))
-    print(f"[serve:aqp] AVG(latency_ms) GROUP BY model_id: "
+    print(f"[serve:aqp] AVG(latency_ms) GROUP BY model_id "
+          f"[{gb[0].path}]: "
           + ", ".join(f"{r.group:.0f}: {r.estimate:.1f}" for r in gb))
 
 
@@ -220,10 +299,22 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--rows", type=int, default=200_000)
-    ap.add_argument("--queries", type=int, default=2000)
-    ap.add_argument("--box-queries", type=int, default=256,
-                    help="multi-column box predicates mixed into the engine "
-                         "batch (0 disables boxes)")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="concurrent query clients feeding the AqpSession")
+    ap.add_argument("--per-client", type=int, default=150,
+                    help="queries each client submits (closed loop)")
+    ap.add_argument("--watermark", type=int, default=None,
+                    help="flush a micro-batch at this many pending queries "
+                         "(default: the client count — closed-loop clients "
+                         "can never fill a deeper bucket)")
+    ap.add_argument("--max-delay-ms", type=float, default=5.0,
+                    help="max time a pending query waits before its bucket "
+                         "flushes on deadline")
+    ap.add_argument("--stream-every-ms", type=float, default=50.0,
+                    help="producer cadence for streaming telemetry batches "
+                         "(bumps synopsis versions mid-flight)")
+    ap.add_argument("--stream-rows", type=int, default=20_000,
+                    help="rows per streamed telemetry batch")
     ap.add_argument("--capacity", type=int, default=2048)
     ap.add_argument("--selector", default="plugin",
                     choices=["plugin", "silverman", "lscv_h"])

@@ -1,0 +1,280 @@
+"""Async admission & micro-batch scheduling (core/aqp_admission.py):
+bit-identical parity with the synchronous engine, watermark vs deadline vs
+close flush triggers, out-of-order future resolution across buckets,
+mid-flight synopsis-version invalidation, and the admission counters."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import AqpQuery, Box, Eq, GroupBy, Range
+from repro.core.aqp_admission import (FLUSH_CLOSE, FLUSH_DEADLINE,
+                                      FLUSH_MANUAL, FLUSH_WATERMARK)
+from repro.data import TelemetryStore
+
+
+def _store(rng, n=20_000, capacity=512, categorical=False):
+    store = TelemetryStore(capacity=capacity, seed=0)
+    store.track_joint(("a", "b"))
+    store.track_joint(("code", "b"))
+    if categorical:
+        store.track_categorical("code")
+    a = rng.normal(0, 1, n).astype(np.float32)
+    b = (0.8 * a + 0.6 * rng.normal(0, 1, n)).astype(np.float32)
+    code = rng.integers(0, 4, n).astype(np.float32)
+    store.add_batch({"a": a, "b": b, "code": code})
+    return store
+
+
+def _manual_session(engine, **kw):
+    """A session with no automatic flushing: everything is driven by
+    explicit flush()/poll() so tests are deterministic."""
+    kw.setdefault("watermark", None)
+    kw.setdefault("max_delay", None)
+    return engine.session(auto_flush=False, **kw)
+
+
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+# --- acceptance: bit-identical to the synchronous path -----------------------
+
+def test_admission_bit_identical_to_execute(rng):
+    """Every execution path — range1d, box, exact Eq, GROUP BY expansion,
+    per-query selector override (qmc) — answers bit-identically to
+    QueryEngine.execute for the same specs."""
+    store = _store(rng, categorical=True)
+    engine = store.engine()
+    specs = [
+        AqpQuery("count", (Range("a", -1.0, 1.0),)),
+        AqpQuery("sum", (Range("b", -0.5, 2.0),), target="b"),
+        AqpQuery("avg", (Box(("a", "b"), (-1.0, -1.0), (1.0, 1.0)),),
+                 target="b"),
+        AqpQuery("count", (Eq("code", 2.0),)),
+        AqpQuery("count", (Range("a", -1.0, 1.0),), selector="lscv_H"),
+        AqpQuery("count", (Range("b", -1.0, 1.0),),
+                 group_by=GroupBy("code", values=(0.0, 1.0, 2.0, 3.0))),
+    ]
+    want = engine.execute(specs)
+    with _manual_session(engine) as sess:
+        futs = [sess.submit(q) for q in specs]
+        assert sess.pending > 0 and not futs[0].done()
+        sess.flush()
+        got = []
+        for f in futs:
+            r = f.result(timeout=5)
+            got.extend(r if isinstance(r, list) else [r])
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.estimate == w.estimate          # bit-identical
+        assert g.path == w.path
+        assert g.synopsis_version == w.synopsis_version
+        assert g.rel_width == w.rel_width
+        assert g.group == w.group
+
+
+def test_session_execute_convenience_matches_engine(rng):
+    store = _store(rng)
+    engine = store.engine()
+    specs = [AqpQuery("count", (Range("a", -1, 1),)),
+             AqpQuery("avg", (Range("b", -1, 1),), target="b")]
+    want = [r.estimate for r in engine.execute(specs)]
+    with _manual_session(engine) as sess:
+        got = [r.estimate for r in sess.execute(specs)]
+    assert got == want
+
+
+# --- flush triggers ----------------------------------------------------------
+
+def test_watermark_flush_is_inline_and_scoped_to_bucket(rng):
+    store = _store(rng)
+    sess = store.session(watermark=3, max_delay=None, auto_flush=False)
+    futs = [sess.submit(AqpQuery("count", (Range("a", -1, i),)))
+            for i in range(2)]
+    assert not any(f.done() for f in futs)       # below watermark: pending
+    f3 = sess.submit(AqpQuery("count", (Range("a", -1, 2),)))
+    assert f3.done() and all(f.done() for f in futs)
+    st = sess.stats()
+    assert st["flush_reasons"] == {FLUSH_WATERMARK: 1}
+    assert st["mean_batch"] == 3.0 and st["coalesced"] == 3
+    sess.close()
+
+
+def test_deadline_flush_via_poll_with_fake_clock(rng):
+    store = _store(rng)
+    clock = FakeClock()
+    sess = store.session(watermark=None, max_delay=1.0, auto_flush=False,
+                         time_fn=clock)
+    fut = sess.submit(AqpQuery("count", (Range("a", -1, 1),)))
+    assert sess.poll() == 0 and not fut.done()   # deadline not reached
+    clock.now = 0.5
+    assert sess.poll() == 0 and not fut.done()
+    clock.now = 1.0
+    assert sess.poll() == 1 and fut.done()
+    assert sess.stats()["flush_reasons"] == {FLUSH_DEADLINE: 1}
+    sess.close()
+
+
+def test_flush_on_close_resolves_everything(rng):
+    store = _store(rng)
+    sess = store.session(watermark=None, max_delay=None, auto_flush=False)
+    futs = [sess.submit(AqpQuery("count", (Range(c, -1, 1),)))
+            for c in ("a", "b", "a")]
+    assert not any(f.done() for f in futs)
+    sess.close()
+    assert all(f.done() for f in futs)
+    st = sess.stats()
+    assert st["pending"] == 0
+    assert st["flush_reasons"] == {FLUSH_CLOSE: 2}   # one per bucket
+    with pytest.raises(RuntimeError, match="closed"):
+        sess.submit(AqpQuery("count", (Range("a", -1, 1),)))
+    sess.close()                                  # idempotent
+
+
+def test_out_of_order_future_resolution(rng):
+    """A later-submitted bucket hitting its watermark resolves before an
+    earlier bucket that is still below watermark."""
+    store = _store(rng)
+    sess = store.session(watermark=2, max_delay=None, auto_flush=False)
+    first = sess.submit(AqpQuery("count", (Range("a", -1, 1),)))
+    b1 = sess.submit(AqpQuery("count", (Range("b", -1, 1),)))
+    b2 = sess.submit(AqpQuery("count", (Range("b", -2, 2),)))
+    assert b1.done() and b2.done()               # bucket "b" hit watermark
+    assert not first.done()                      # bucket "a" still pending
+    sess.flush()
+    assert first.done()
+    st = sess.stats()
+    assert st["flush_reasons"] == {FLUSH_WATERMARK: 1, FLUSH_MANUAL: 1}
+    sess.close()
+
+
+# --- version invalidation ----------------------------------------------------
+
+def test_version_bump_rekeys_in_flight_batch(rng):
+    """add_batch between submit and flush: the pending micro-batch is
+    re-keyed to the new synopsis version and answers match a fresh
+    synchronous execute bit-for-bit (never the stale synopsis)."""
+    store = _store(rng)
+    engine = store.engine()
+    spec = AqpQuery("count", (Range("a", -1.0, 1.0),))
+    v0 = store.columns["a"].version
+    with _manual_session(engine) as sess:
+        fut = sess.submit(spec)
+        store.add_batch({"a": rng.normal(3, 1, 4000).astype(np.float32)})
+        assert store.columns["a"].version > v0
+        sess.flush()
+        got = fut.result(timeout=5)
+    want = engine.execute(spec)[0]
+    assert got.synopsis_version == store.columns["a"].version
+    assert got.estimate == want.estimate
+    assert sess.stats()["invalidations"] == 1
+
+
+def test_abandoned_session_is_collectable(rng):
+    """A session dropped without close() must not be pinned by the store's
+    listener list or by its own flusher thread: the subscription holds only
+    a weakref and the flusher re-checks liveness every tick."""
+    import gc
+    import time as _time
+    import weakref
+
+    store = _store(rng, n=2000, capacity=256)
+    sess = store.session(watermark=None, max_delay=0.01)   # starts no thread
+    fut = sess.submit(AqpQuery("count", (Range("a", -1, 1),)))  # starts it
+    fut.result(timeout=10)
+    ref = weakref.ref(sess)
+    del sess, fut
+    gc.collect()
+    deadline = _time.monotonic() + 5.0
+    while ref() is not None and _time.monotonic() < deadline:
+        _time.sleep(0.1)                    # flusher tick drops its ref
+        gc.collect()
+    assert ref() is None
+    # the dead session's listener removes itself on the next notification
+    store.add_batch({"a": np.zeros(4, np.float32)})
+    assert store._listeners == []
+
+
+def test_unsubscribed_after_close(rng):
+    store = _store(rng)
+    sess = store.session(watermark=None, max_delay=None, auto_flush=False)
+    sess.close()
+    assert store._listeners == []
+
+
+# --- concurrency -------------------------------------------------------------
+
+def test_concurrent_clients_all_resolve_and_match_sync(rng):
+    """8 closed-loop client threads against one auto-flushing session: every
+    future resolves and every answer equals the synchronous path."""
+    store = _store(rng)
+    engine = store.engine()
+    n_clients, per_client = 8, 6
+    specs = {ci: [AqpQuery("count",
+                           (Range("a" if (ci + i) % 2 else "b",
+                                  -2.0 + 0.1 * i, 0.5 * ci),))
+                  for i in range(per_client)]
+             for ci in range(n_clients)}
+    flat = [q for ci in range(n_clients) for q in specs[ci]]
+    want = engine.answers(flat)
+    got = {}
+    lock = threading.Lock()
+    with engine.session(watermark=4, max_delay=0.002) as sess:
+        def client(ci):
+            mine = [sess.submit(q).result(timeout=30) for q in specs[ci]]
+            with lock:
+                got[ci] = [r.estimate for r in mine]
+        threads = [threading.Thread(target=client, args=(ci,))
+                   for ci in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        st = sess.stats()
+    flat_got = [est for ci in range(n_clients) for est in got[ci]]
+    np.testing.assert_array_equal(flat_got, want)
+    assert st["executed"] == n_clients * per_client
+    assert st["flushes"] >= 1
+
+
+# --- validation & bookkeeping ------------------------------------------------
+
+def test_submit_raises_synchronously_on_bad_specs(rng):
+    store = _store(rng)
+    with _manual_session(store.engine()) as sess:
+        with pytest.raises(KeyError, match="unknown column"):
+            sess.submit(AqpQuery("count", (Range("missing", 0, 1),)))
+        with pytest.raises(KeyError, match="track_joint"):
+            sess.submit(AqpQuery("count", (Range("a", 0, 1),
+                                           Range("code", 0, 1))))
+        assert sess.pending == 0
+
+
+def test_session_param_validation(rng):
+    store = _store(rng, n=2000, capacity=256)
+    with pytest.raises(ValueError, match="watermark"):
+        store.session(watermark=0)
+    with pytest.raises(ValueError, match="max_delay"):
+        store.session(max_delay=-1.0)
+
+
+def test_store_stats_aggregate_admission_counters(rng):
+    store = _store(rng)
+    s1 = store.session(watermark=None, max_delay=None, auto_flush=False)
+    s2 = store.session(watermark=None, max_delay=None, auto_flush=False)
+    s1.submit(AqpQuery("count", (Range("a", -1, 1),)))
+    s1.flush()
+    s2.submit(AqpQuery("count", (Range("b", -1, 1),)))
+    agg = store.stats()["admission"]
+    assert agg["sessions"] == 2
+    assert agg["submitted"] == 2 and agg["executed"] == 1
+    assert agg["pending"] == 1
+    assert agg["flush_reasons"] == {FLUSH_MANUAL: 1}
+    s1.close()
+    s2.close()
+    assert store.stats()["admission"]["pending"] == 0

@@ -158,11 +158,15 @@ def test_group_by_discovers_codes_and_matches_eq(rng):
     grouped = store.engine().execute(
         AqpQuery("count", (Range("b", -1.0, 1.0),), group_by="code"))
     assert [r.group for r in grouped] == [0.0, 1.0, 2.0, 3.0]
-    # each group row equals the equivalent explicit Eq conjunction
+    assert all(r.path == "box:grouped" for r in grouped)
+    # each group row matches the equivalent explicit Eq conjunction; the
+    # grouped kernel factors the shared-axis product out of the per-category
+    # pass, so agreement is to float tolerance rather than bitwise
     explicit = store.engine().answers(
         [AqpQuery("count", (Range("b", -1.0, 1.0), Eq("code", v)))
          for v in (0.0, 1.0, 2.0, 3.0)])
-    np.testing.assert_array_equal([r.estimate for r in grouped], explicit)
+    np.testing.assert_allclose([r.estimate for r in grouped], explicit,
+                               rtol=1e-5, atol=1e-3)
     sel = (b >= -1) & (b <= 1)
     for r in grouped:
         # the joint stream is the backfill window plus one real pass over the
@@ -220,6 +224,124 @@ def test_group_by_guards(rng):
     with pytest.raises(ValueError, match="max_groups"):
         store.engine().execute(AqpQuery("count", (Range("a", 0, 1),),
                                         group_by="many"))
+
+
+def test_group_by_single_category_stays_on_plain_path(rng):
+    """A one-category GROUP BY has nothing to factor; it runs the ordinary
+    box path (the grouped kernel needs >= 2 siblings)."""
+    store, *_ = _store(rng)
+    store.track_joint(("code", "b"))
+    only = store.engine().execute(
+        AqpQuery("count", (Range("b", -1.0, 1.0),),
+                 group_by=GroupBy("code", values=(2.0,))))
+    assert [r.path for r in only] == ["box"]
+
+
+def test_grouped_kernel_with_group_column_target(rng):
+    """SUM/AVG whose target IS the group column exercises the grouped
+    kernel's moment-on-group-axis branch."""
+    n = 20_000
+    code = rng.integers(0, 3, n).astype(np.float32)
+    b = (code + rng.normal(0, 0.3, n)).astype(np.float32)
+    store = TelemetryStore(capacity=1024, seed=0)
+    store.track_joint(("code", "b"))
+    store.add_batch({"code": code, "b": b})
+    grouped = store.engine().execute(
+        AqpQuery("avg", (Range("b", -2.0, 5.0),), target="code",
+                 group_by="code"))
+    assert all(r.path == "box:grouped" for r in grouped)
+    explicit = store.engine().answers(
+        [AqpQuery("avg", (Range("b", -2.0, 5.0), Eq("code", v)),
+                  target="code") for v in (0.0, 1.0, 2.0)])
+    np.testing.assert_allclose([r.estimate for r in grouped], explicit,
+                               rtol=1e-4, atol=1e-3)
+    for r in grouped:
+        # AVG(code) within a category's code window ~ the category code
+        assert r.estimate == pytest.approx(float(r.group), abs=0.1)
+
+
+# --- exact categorical sketches ----------------------------------------------
+
+def test_exact_eq_path_count_sum_avg(rng):
+    """Eq terms on a tracked dictionary column answer from the per-code
+    frequency sketch: exact, path=="exact", rel_width==inf."""
+    n = 25_000
+    code = rng.choice([0, 1, 2, 3], size=n,
+                      p=[0.4, 0.3, 0.2, 0.1]).astype(np.float32)
+    store = TelemetryStore(capacity=1024, seed=0)
+    store.track_categorical("code")
+    store.add_batch({"code": code})
+    res = store.query([
+        AqpQuery("count", (Eq("code", 2.0),)),
+        AqpQuery("sum", (Eq("code", 2.0),)),
+        AqpQuery("avg", (Eq("code", 2.0),)),
+        AqpQuery("count", (Eq("code", 7.0),)),        # absent code
+    ])
+    n2 = float((code == 2).sum())
+    assert [r.path for r in res] == ["exact"] * 4
+    assert res[0].estimate == n2
+    assert res[1].estimate == 2.0 * n2
+    assert res[2].estimate == 2.0
+    assert res[3].estimate == 0.0
+    assert all(r.rel_width == np.inf for r in res)
+    assert res[0].synopsis_version == store.columns["code"].version
+
+
+def test_exact_eq_falls_back_without_full_coverage(rng):
+    """Untracked columns, sketches registered after data, and range (non-Eq)
+    predicates all stay on the KDE path."""
+    n = 10_000
+    code = rng.integers(0, 4, n).astype(np.float32)
+    store = TelemetryStore(capacity=1024, seed=0)
+    store.add_batch({"code": code})
+    # untracked: KDE code-window estimate
+    r = store.query([AqpQuery("count", (Eq("code", 1.0),))])[0]
+    assert r.path == "range1d"
+    # tracked late: sketch misses the first batch -> still KDE
+    store.track_categorical("code")
+    store.add_batch({"code": code})
+    r = store.query([AqpQuery("count", (Eq("code", 1.0),))])[0]
+    assert r.path == "range1d"
+    assert store.stats()["categoricals"]["code"]["exact"] is False
+
+
+def test_exact_eq_mixes_with_kde_paths_in_one_batch(rng):
+    """One batch mixing exact Eq, ranges, and boxes scatters back to
+    submission order with per-row paths."""
+    store, a, b, code = _store(rng)
+    store2 = TelemetryStore(capacity=1024, seed=0)
+    store2.track_categorical("code")
+    store2.track_joint(("a", "b"))
+    store2.add_batch({"a": a, "b": b, "code": code})
+    res = store2.query([
+        AqpQuery("count", (Eq("code", 0.0),)),
+        AqpQuery("count", (Range("a", -1.0, 1.0),)),
+        AqpQuery("count", (Box(("a", "b"), (-1, -1), (1, 1)),)),
+        AqpQuery("count", (Eq("code", 3.0),)),
+    ])
+    assert [r.path for r in res] == ["exact", "range1d", "box", "exact"]
+    assert res[0].estimate == float((code == 0).sum())
+    assert res[3].estimate == float((code == 3).sum())
+    # Eq + Range on the same dictionary column is a range conjunction, not a
+    # pure code window: it must NOT take the exact path
+    r = store2.query([AqpQuery("count", (Eq("code", 1.0),
+                                         Range("code", 0.0, 2.0)))])[0]
+    assert r.path == "range1d"
+
+
+def test_exact_eq_group_by_same_column(rng):
+    """COUNT .. GROUP BY code with no other predicate is a pure code window
+    per category: every row exact."""
+    n = 8_000
+    code = rng.integers(0, 3, n).astype(np.float32)
+    store = TelemetryStore(capacity=512, seed=0)
+    store.track_categorical("code")
+    store.add_batch({"code": code})
+    rows = store.engine().execute(AqpQuery("count", (), group_by="code"))
+    assert [r.path for r in rows] == ["exact"] * 3
+    for r in rows:
+        assert r.estimate == float((code == r.group).sum())
+    assert sum(r.estimate for r in rows) == float(n)
 
 
 # --- normalization / validation ---------------------------------------------

@@ -392,3 +392,75 @@ def test_add_batch_ragged_joint_fails_before_mutation(rng):
     assert store.columns["a"].n_seen == 10
     assert store.columns["b"].n_seen == 10
     assert store.joints[("a", "b")].n_seen == 10
+
+
+# --- categorical sketches and version notification ---------------------------
+
+def test_categorical_sketch_counts_and_merge(rng):
+    from repro.data import CategoricalSketch
+
+    s1, s2 = CategoricalSketch(), CategoricalSketch()
+    a = rng.integers(0, 4, 5000).astype(np.float32)
+    b = rng.integers(2, 6, 3000).astype(np.float32)
+    s1.add(a)
+    s2.add(b)
+    m = s1.merge(s2)
+    assert m.n_rows == 8000 and not m.overflowed
+    for v in range(6):
+        want = int((a == v).sum() + (b == v).sum())
+        cnt, sm = m.range_terms(v - 0.5, v + 0.5)
+        assert cnt == want and sm == pytest.approx(v * want)
+    # full-range terms cover every row
+    assert m.range_terms(-1.0, 10.0)[0] == 8000
+
+
+def test_categorical_sketch_overflow_disables_exact(rng):
+    store = TelemetryStore(capacity=256, seed=0)
+    store.track_categorical("wide", max_codes=16)
+    store.add_batch({"wide": np.arange(64, dtype=np.float32)})
+    cat = store.stats()["categoricals"]["wide"]
+    assert cat["overflowed"] and cat["exact"] is False and cat["codes"] == 0
+    # engine must fall back to the KDE window, not crash
+    from repro.core import AqpQuery, Eq
+    assert store.query([AqpQuery("count", (Eq("wide", 3.0),))],
+                       selector="silverman")[0].path == "range1d"
+
+
+def test_store_merge_with_one_sided_sketch_disables_exact(rng):
+    s1 = TelemetryStore(capacity=256, seed=0)
+    s2 = TelemetryStore(capacity=256, seed=1)
+    s1.track_categorical("code")
+    code = rng.integers(0, 3, 2000).astype(np.float32)
+    s1.add_batch({"code": code})
+    s2.add_batch({"code": code})
+    m = s1.merge(s2)
+    cat = m.stats()["categoricals"]["code"]
+    assert cat["rows"] == 2000                  # only s1's side was sketched
+    assert cat["exact"] is False                # stream is 4000 rows
+    # two-sided sketches keep exact coverage across the merge
+    s2.track_categorical("code")
+    s2.add_batch({"code": code})
+    m2 = s1.merge(s2)
+    assert m2.stats()["categoricals"]["code"]["exact"] is False  # s2 late
+    s3 = TelemetryStore(capacity=256, seed=2)
+    s3.track_categorical("code")
+    s3.add_batch({"code": code})
+    m3 = s1.merge(s3)
+    assert m3.stats()["categoricals"]["code"]["exact"] is True
+
+
+def test_subscribe_notifies_bumped_versions(rng):
+    store = TelemetryStore(capacity=256, seed=0)
+    store.track_joint(("x", "y"))
+    seen = []
+    unsubscribe = store.subscribe(seen.append)
+    store.add_batch({"x": rng.normal(0, 1, 100).astype(np.float32),
+                     "y": rng.normal(0, 1, 100).astype(np.float32)})
+    assert len(seen) == 1
+    bumped = seen[0]
+    assert bumped["x"] == store.columns["x"].version
+    assert bumped[("x", "y")] == store.joints[("x", "y")].version
+    unsubscribe()
+    store.add_batch({"x": rng.normal(0, 1, 10).astype(np.float32)})
+    assert len(seen) == 1                        # unsubscribed: no more calls
+    unsubscribe()                                # idempotent

@@ -1,0 +1,149 @@
+"""Durable-store warm start (data/aqp_store.py to_state/save/load): restart
+wall time from a checkpoint vs a cold refit.
+
+The paper's economics make bandwidth fitting the expensive step; a restart
+that re-ingests the stream and refits every synopsis repeats exactly that
+work.  Two legs, answering the same mixed query batch after a simulated
+process restart:
+
+  cold  — rebuild a TelemetryStore from the raw stream: add_batch the full
+          history (O(history)), then the first query batch refits every
+          synopsis (O(sample^2) for LSCV selectors)
+  warm  — TelemetryStore.load(snapshot): reservoirs, sketches, AND the
+          fitted synopses come back from the atomic keep-k checkpoint; the
+          first query batch runs entirely on cache hits
+
+Answers must be bit-identical across the original, cold, and warm stores
+(same capacity/seed/stream -> same reservoirs -> same synopses), with the
+exact categorical path still active after restore — both asserted always.
+Outside quick mode the warm leg must also beat the cold leg >= 1.5x and
+serve the batch with zero synopsis-cache misses.
+
+Set REPRO_BENCH_QUICK=1 (or `python -m benchmarks.run --quick`) for the CI
+smoke configuration.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from .common import emit
+
+ROWS = 200_000
+CAPACITY = 2048
+N_QUERIES = 64
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def _telemetry(n: int):
+    rng = np.random.default_rng(0)
+    return {
+        "loss": rng.gamma(3.0, 0.7, n).astype(np.float32),
+        "latency_ms": np.where(rng.random(n) < 0.8, rng.normal(40, 8, n),
+                               rng.normal(160, 30, n)).astype(np.float32),
+        "model_id": rng.integers(0, 4, n).astype(np.float32),
+    }
+
+
+def _build(data, capacity: int):
+    from repro.data import TelemetryStore
+
+    store = TelemetryStore(capacity=capacity, seed=0)
+    store.track_joint(("loss", "latency_ms"))
+    store.track_categorical("model_id")
+    store.add_batch(data)
+    return store
+
+
+def _specs(n_queries: int):
+    from repro.core import AqpQuery, Box, Eq, Range
+
+    rng = np.random.default_rng(7)
+    ops = ["count", "sum", "avg"]
+    specs = []
+    for i in range(n_queries):
+        op = ops[int(rng.integers(3))]
+        if i % 4 == 1:
+            lo = [float(rng.uniform(0, 4)), float(rng.uniform(20, 60))]
+            hi = [lo[0] + 2.0, lo[1] + 60.0]
+            specs.append(AqpQuery(
+                op, (Box(("loss", "latency_ms"), tuple(lo), tuple(hi)),),
+                target=None if op == "count" else "latency_ms"))
+        elif i % 8 == 3:
+            specs.append(AqpQuery("count", (Eq("model_id",
+                                               float(rng.integers(4))),)))
+        else:
+            a = float(rng.uniform(0, 5))
+            specs.append(AqpQuery(op, (Range("loss", a, a + 2.0),),
+                                  target=None if op == "count" else "loss"))
+    return specs
+
+
+def run() -> dict:
+    quick = _quick()
+    n = ROWS if not quick else 30_000
+    capacity = CAPACITY if not quick else 512
+    data = _telemetry(n)
+    specs = _specs(N_QUERIES if not quick else 24)
+
+    # the running process: fits + caches synopses, then checkpoints.  Its
+    # execute also compiles every batched pass the timed legs hit, so the
+    # cold/warm comparison measures ingest+fit vs load, not jit compiles.
+    original = _build(data, capacity)
+    want = original.query(specs)
+    snap_dir = tempfile.mkdtemp(prefix="bench_aqp_restore_")
+    try:
+        t0 = time.perf_counter()
+        step = original.save(snap_dir)
+        t_save = time.perf_counter() - t0
+
+        from repro.data import TelemetryStore
+
+        # --- cold restart: re-ingest the stream, refit on first query ------
+        t0 = time.perf_counter()
+        cold = _build(data, capacity)
+        cold_rows = cold.query(specs)
+        t_cold = time.perf_counter() - t0
+
+        # --- warm restart: load the snapshot, first query is all cache hits
+        t0 = time.perf_counter()
+        warm = TelemetryStore.load(snap_dir)
+        warm_rows = warm.query(specs)
+        t_warm = time.perf_counter() - t0
+        warm_misses = warm.cache.stats()["misses"]
+    finally:
+        shutil.rmtree(snap_dir, ignore_errors=True)
+
+    for rows, label in ((cold_rows, "cold"), (warm_rows, "warm")):
+        for r, w in zip(rows, want):
+            assert r.estimate == w.estimate and r.path == w.path, \
+                (label, r, w)
+    assert any(r.path == "exact" for r in warm_rows), \
+        "exact categorical coverage must survive the restore"
+
+    speedup = t_cold / t_warm
+    emit(f"aqp_restore_save_n{n}", t_save * 1e6,
+         f"atomic keep-k snapshot (step {step})")
+    emit(f"aqp_restore_cold_n{n}", t_cold * 1e6,
+         f"re-ingest {n:,} rows + refit {len(specs)} queries")
+    emit(f"aqp_restore_warm_n{n}", t_warm * 1e6,
+         f"load + query, {speedup:.1f}x over cold refit, "
+         f"{warm_misses} cache misses")
+
+    if not quick:
+        assert warm_misses == 0, \
+            f"warm start must not refit, got {warm_misses} cache misses"
+        assert speedup >= 1.5, \
+            f"warm start should beat cold refit >= 1.5x, got {speedup:.2f}x"
+    return {"speedup": speedup, "t_save_us": t_save * 1e6}
+
+
+if __name__ == "__main__":
+    run()

@@ -116,6 +116,20 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def restore_flat(self, step: int):
+        """Load one checkpoint as (flat {path-key: np.ndarray}, extra) with
+        no template — for state that is naturally a flat keyed dict rather
+        than a model pytree (e.g. `TelemetryStore.save`'s durable-AQP
+        snapshots).  bf16-view keys are folded back to bfloat16."""
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        for key in [k for k in flat if k.endswith(".bf16")]:
+            flat[key[: -len(".bf16")]] = flat.pop(key).view(_BF16)
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        return flat, manifest["extra"]
+
     def restore(self, step: int, template: Any, shardings: Any = None):
         """Load leaves and (re)shard onto the current mesh.
 

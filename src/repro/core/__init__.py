@@ -17,7 +17,7 @@ Public API:
 from .aqp import (KDESynopsis, Query, QueryBatch, batch_query_1d, count_1d,
                   count_1d_numeric, count_box_H, count_box_diag, sum_1d,
                   sum_1d_numeric, sum_box_H, sum_box_diag)
-from .aqp_admission import AdmissionQueue, AqpSession
+from .aqp_admission import AdmissionFull, AdmissionQueue, AqpSession
 from .aqp_multid import (BoxQuery, BoxQueryBatch, batch_query_box,
                          batch_query_box_grouped, batch_query_qmc)
 from .aqp_query import (AqpQuery, AqpResult, Box, Eq, GroupBy, PlanCache,
@@ -29,7 +29,7 @@ from .plugin import PluginResult, plugin_bandwidth, plugin_bandwidth_sequential
 __all__ = [
     "KDESynopsis", "Query", "QueryBatch", "BoxQuery", "BoxQueryBatch",
     "AqpQuery", "AqpResult", "QueryEngine", "Range", "Box", "Eq", "GroupBy",
-    "AqpSession", "AdmissionQueue", "PlanCache",
+    "AqpSession", "AdmissionQueue", "AdmissionFull", "PlanCache",
     "batch_query_1d", "batch_query_box", "batch_query_box_grouped",
     "batch_query_qmc",
     "count_1d", "count_1d_numeric", "count_box_H", "count_box_diag",

@@ -27,6 +27,12 @@ execute through `QueryEngine.run_compiled` — the same compile/_execute
 machinery as the synchronous path, so admission answers are bit-identical to
 `execute()` for the same specs (test-enforced).
 
+Backpressure: the pending set is bounded by `max_pending` (ROADMAP
+follow-up; unbounded by default for drop-in compatibility).  At the bound
+the `overflow` policy either parks the submitting thread until a flush
+frees room ("block") or raises `AdmissionFull` ("shed"); both outcomes are
+counted in `stats()` and aggregated into `store.stats()["admission"]`.
+
 Version invalidation: the session subscribes to the store's version-change
 notifications; when `add_batch` bumps a reservoir, pending buckets keyed to
 the stale version are re-keyed to the new one (counted in
@@ -48,6 +54,11 @@ FLUSH_WATERMARK = "watermark"
 FLUSH_DEADLINE = "deadline"
 FLUSH_MANUAL = "manual"
 FLUSH_CLOSE = "close"
+
+
+class AdmissionFull(RuntimeError):
+    """submit() refused: the session is at `max_pending` and its overflow
+    policy is "shed".  The caller should retry later or back off."""
 
 
 class _Ticket:
@@ -145,20 +156,37 @@ class AqpSession:
                  `flush()`/`close()` drain the queue)
     auto_flush — run the deadline flusher on a daemon thread; pass False for
                  single-threaded drivers and tests, and pump via `poll()`
+    max_pending — bound on the pending queue depth (None: unbounded).  At
+                 the bound, `overflow` decides: "block" parks the submitting
+                 thread until a flush frees room (needs a flusher — the
+                 auto_flush thread, watermark flushes from other submitters,
+                 or an external poll()er); "shed" raises `AdmissionFull`
+                 immediately so the caller can back off.  A single spec
+                 whose compiled parts alone exceed the bound (a wide GROUP
+                 BY) is admitted once the queue is empty rather than
+                 deadlocking.  Both outcomes are counted in `stats()`.
     time_fn    — injectable clock (tests drive deadlines deterministically)
     """
 
     def __init__(self, engine: QueryEngine, watermark: Optional[int] = 32,
                  max_delay: Optional[float] = 0.005, auto_flush: bool = True,
                  selector: Optional[str] = None, backend: Optional[str] = None,
+                 max_pending: Optional[int] = None, overflow: str = "block",
                  time_fn: Callable[[], float] = time.monotonic):
         if watermark is not None and watermark < 1:
             raise ValueError(f"watermark must be >= 1, got {watermark}")
         if max_delay is not None and max_delay < 0:
             raise ValueError(f"max_delay must be >= 0, got {max_delay}")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if overflow not in ("block", "shed"):
+            raise ValueError(f"overflow must be 'block' or 'shed', "
+                             f"got {overflow!r}")
         self.engine = engine
         self.watermark = watermark
         self.max_delay = max_delay
+        self.max_pending = max_pending
+        self.overflow = overflow
         self.selector = selector or engine.selector
         self.backend = backend or engine.backend
         self.time_fn = time_fn
@@ -174,6 +202,8 @@ class AqpSession:
         self.flushes = 0
         self.coalesced = 0            # units flushed in a batch of size > 1
         self.invalidations = 0        # units re-keyed by a version bump
+        self.blocked = 0              # submits that waited at max_pending
+        self.shed = 0                 # submits refused at max_pending
         self.max_depth = 0
         self.flush_reasons: Dict[str, int] = {}
         self._batch_total = 0
@@ -216,6 +246,7 @@ class AqpSession:
         with self._lock:
             if self._closed:
                 raise RuntimeError("cannot submit to a closed AqpSession")
+            self._admit(len(keyed))
             now = self.time_fn()
             for part, (key, c) in enumerate(keyed):
                 size = self._queue.add(key, _Pending(c, ticket, part, now))
@@ -305,6 +336,9 @@ class AqpSession:
                 "mean_batch": mean_batch,
                 "flush_reasons": dict(self.flush_reasons),
                 "invalidations": self.invalidations,
+                "max_pending": self.max_pending,
+                "blocked": self.blocked,
+                "shed": self.shed,
                 "max_depth": self.max_depth,
                 "plan_cache": self.engine.plans.stats(),
             }
@@ -315,6 +349,38 @@ class AqpSession:
     # how long an abandoned (never close()d) session stays pinned by its own
     # thread and the latency of noticing closure without a wakeup.
     _FLUSHER_TICK = 0.5
+
+    # Blocked submitters re-check capacity at this cadence even without a
+    # wakeup, so an external poll()er draining the queue out-of-band still
+    # unblocks them promptly.
+    _BLOCK_TICK = 0.05
+
+    def _admit(self, n_parts: int) -> None:
+        """Enforce the max_pending bound (lock held).  A ticket whose parts
+        alone exceed the bound is admitted once the queue is empty — refusing
+        it forever (shed) or parking it forever (block) would deadlock wide
+        GROUP BY specs behind a bound meant for queue depth."""
+        if self.max_pending is None:
+            return
+
+        def over() -> bool:
+            return (self._queue.depth > 0
+                    and self._queue.depth + n_parts > self.max_pending)
+
+        if not over():
+            return
+        if self.overflow == "shed":
+            self.shed += 1
+            raise AdmissionFull(
+                f"admission queue at max_pending={self.max_pending} "
+                f"({self._queue.depth} pending); resubmit later")
+        self.blocked += 1
+        while over():
+            self._wakeup.wait(timeout=self._BLOCK_TICK)
+            if self._closed:
+                raise RuntimeError(
+                    "AqpSession closed while submit was blocked on "
+                    "max_pending")
 
     def _start_flusher(self) -> None:
         self._thread = threading.Thread(
@@ -361,6 +427,8 @@ class AqpSession:
     def _flush_key(self, key: BucketKey, reason: str) -> int:
         with self._lock:
             pendings = self._queue.pop(key)
+            if pendings:
+                self._wakeup.notify_all()     # free submitters at max_pending
         if not pendings:
             return 0
         self._run_flush(pendings, reason)
@@ -369,6 +437,8 @@ class AqpSession:
     def _flush_all(self, reason: str) -> int:
         with self._lock:
             batches = self._queue.pop_all()
+            if batches:
+                self._wakeup.notify_all()     # free submitters at max_pending
         total = 0
         for _, pendings in batches:
             self._run_flush(pendings, reason)

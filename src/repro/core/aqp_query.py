@@ -170,10 +170,11 @@ class AqpResult:
 
     estimate         — the approximate answer
     path             — execution path: "range1d" | "box" | "qmc" | "exact"
-                       (":pallas" suffix when the Pallas tile kernels ran;
-                       "box:grouped" for GROUP BY families answered by the
-                       factored grouped kernel; "exact" answers come from a
-                       CategoricalSketch, not the KDE)
+                       | "exact:cm" (":pallas" suffix when the Pallas tile
+                       kernels ran; "box:grouped" for GROUP BY families
+                       answered by the factored grouped kernel; "exact"
+                       answers come from a CategoricalSketch, "exact:cm"
+                       from a bounded-error CountMinSketch — not the KDE)
     rel_width        — accuracy proxy: the narrowest constrained axis measured
                        in bandwidths, min_j (hi_j - lo_j) / h_j.  Small values
                        (below ~2) mean the kernel smoothing dominates the mass
@@ -449,9 +450,12 @@ class _StoreResolver:
         return key, c2, self.plan_for(key, version), version
 
     def try_exact(self, c: _Compiled):
-        """Exact categorical answer for an all-Eq single-column query, when
-        the column carries a `CategoricalSketch` covering its whole stream;
-        returns (estimate, version) or None (KDE fallback)."""
+        """Sketch answer for an all-Eq single-column query, when the column
+        carries a categorical sketch covering its whole stream; returns
+        (estimate, version, path) or None (KDE fallback).  The path is
+        "exact" for a `CategoricalSketch` and "exact:cm" for the
+        bounded-error `CountMinSketch`; a count-min window too wide to
+        enumerate (range_terms -> None) falls back to the KDE too."""
         if not c.all_eq or c.cols is None or len(c.cols) != 1:
             return None
         col = c.cols[0]
@@ -459,14 +463,17 @@ class _StoreResolver:
         res = self.store.columns.get(col)
         if sketch is None or res is None or not sketch.exact_for(res.n_seen):
             return None
-        cnt, sm = sketch.range_terms(c.lo[0], c.hi[0])
+        terms = sketch.range_terms(c.lo[0], c.hi[0])
+        if terms is None:
+            return None
+        cnt, sm = terms
         if c.op == OP_COUNT:
             est = float(cnt)
         elif c.op == OP_SUM:
             est = float(sm)
         else:
             est = float(sm / cnt) if cnt > 0 else 0.0
-        return est, res.version
+        return est, res.version, sketch.path
 
 
 class _MappingResolver:
@@ -640,9 +647,9 @@ def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
     for c in compiled:
         hit = try_exact(c) if try_exact is not None else None
         if hit is not None:
-            est, version = hit
+            est, version, path = hit
             results[c.slot] = AqpResult(
-                estimate=est, path="exact", rel_width=float("inf"),
+                estimate=est, path=path, rel_width=float("inf"),
                 synopsis_version=version, group=c.group, query=c.query)
         else:
             remaining.append(c)

@@ -1,3 +1,3 @@
-from .aqp_store import (CategoricalSketch, MultiReservoir, Reservoir,
-                        SynopsisCache, TelemetryStore)
+from .aqp_store import (CategoricalSketch, CountMinSketch, MultiReservoir,
+                        Reservoir, SynopsisCache, TelemetryStore)
 from .pipeline import TokenPipeline

@@ -21,10 +21,22 @@ for LSCV), so the store memoises fitted synopses in a `SynopsisCache` keyed by
 version and invalidates stale entries on the next lookup.  The cache is a
 byte-bounded LRU (`max_entries` + `max_bytes`) with hit/miss/eviction
 counters surfaced through `TelemetryStore.stats()`.
+
+The store is *durable*: `to_state()`/`from_state()` round-trip every
+reservoir (buffer, stream counters, version, RNG bit-generator state — so
+post-restore sampling is deterministic), every categorical sketch, the joint
+registrations with their backfill flags, and the fitted synopses in the
+cache.  `save(path)`/`load(path)` put that state behind the atomic keep-k
+`CheckpointManager` (repro.checkpoint), so a `serve --mode aqp` restart
+warm-starts instead of refitting — and exact-Eq coverage, which requires a
+sketch to have seen the *whole* stream, survives the restart.  Snapshots are
+taken under the store's write lock, so a snapshot racing `add_batch` can
+never persist a sketch that claims rows its reservoir has not seen.
 """
 from __future__ import annotations
 
 import copy
+import threading
 import weakref
 import zlib
 from collections import OrderedDict
@@ -37,6 +49,8 @@ from repro.core.aqp import KDESynopsis, Query, canonical_selector
 from repro.core.aqp_multid import BoxQuery
 
 ColumnKey = Union[str, Tuple[str, ...]]
+
+STATE_FORMAT = 1     # bump on incompatible to_state layout changes
 
 
 class Reservoir:
@@ -90,6 +104,26 @@ class Reservoir:
 
     def sample(self) -> np.ndarray:
         return self.buf[: self.n_filled].copy()
+
+    def state(self) -> Tuple[np.ndarray, Dict[str, object]]:
+        """(retained buffer, JSON-safe metadata) for checkpointing.  The RNG
+        bit-generator state rides along so post-restore acceptance draws are
+        bit-identical to the never-checkpointed reservoir's."""
+        meta = {"n_seen": int(self.n_seen), "n_filled": int(self.n_filled),
+                "version": int(self.version),
+                "rng": self.rng.bit_generator.state}
+        return self.buf[: self.n_filled].copy(), meta
+
+    def load_state(self, buf: np.ndarray, meta: Dict[str, object]) -> None:
+        n_filled = int(meta["n_filled"])
+        if n_filled > self.capacity or buf.shape[0] != n_filled:
+            raise ValueError(f"reservoir state has {buf.shape[0]} rows for "
+                             f"n_filled={n_filled}, capacity={self.capacity}")
+        self.buf[:n_filled] = np.asarray(buf, np.float32)
+        self.n_filled = n_filled
+        self.n_seen = int(meta["n_seen"])
+        self.version = int(meta["version"])
+        self.rng.bit_generator.state = meta["rng"]
 
     def merge(self, other: "Reservoir") -> "Reservoir":
         """Weighted union: each side contributes in proportion to the stream
@@ -163,6 +197,15 @@ class MultiReservoir(Reservoir):
         out.backfilled = self.backfilled or other.backfilled
         return out
 
+    def state(self) -> Tuple[np.ndarray, Dict[str, object]]:
+        buf, meta = super().state()
+        meta["backfilled"] = bool(self.backfilled)
+        return buf, meta
+
+    def load_state(self, buf: np.ndarray, meta: Dict[str, object]) -> None:
+        super().load_state(buf, meta)
+        self.backfilled = bool(meta.get("backfilled", False))
+
 
 class CategoricalSketch:
     """Exact per-code frequency sketch for a dictionary column.
@@ -177,8 +220,12 @@ class CategoricalSketch:
     the exact path when it equals the reservoir's `n_seen` (i.e. the sketch
     was registered before any data and never missed a batch).  A column
     whose distinct-code count exceeds `max_codes` is not dictionary-like;
-    the sketch marks itself `overflowed` and the exact path disables itself.
+    the sketch marks itself `overflowed` and the exact path disables itself
+    (for high-cardinality columns, `CountMinSketch` degrades to bounded-error
+    counts instead).
     """
+
+    path = "exact"    # AqpResult.path label when this sketch answers
 
     def __init__(self, max_codes: int = 4096):
         self.counts: Dict[float, int] = {}
@@ -187,7 +234,10 @@ class CategoricalSketch:
         self.overflowed = False
 
     def add(self, values: np.ndarray) -> None:
-        values = np.asarray(values, np.float64).ravel()
+        # float32, matching Reservoir._coerce: a code that is not exactly
+        # float32-representable must count under the SAME rounded code on the
+        # exact path and in the KDE sample, or the two paths disagree
+        values = np.asarray(values, np.float32).ravel()
         if values.shape[0] == 0:
             return
         if not self.overflowed:
@@ -232,8 +282,179 @@ class CategoricalSketch:
         return out
 
     def stats(self) -> Dict[str, object]:
-        return {"codes": len(self.counts), "rows": self.n_rows,
-                "overflowed": self.overflowed}
+        return {"kind": "exact", "codes": len(self.counts),
+                "rows": self.n_rows, "overflowed": self.overflowed}
+
+    def state(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
+        """(arrays, JSON-safe metadata) for checkpointing."""
+        # iterate items() rather than re-deriving keys from a float32 array:
+        # NaN codes are legal dict keys here but can never be looked up
+        # again (nan != nan), so a rebuilt-key path would KeyError
+        items = list(self.counts.items())
+        codes = np.asarray([c for c, _ in items], np.float32)
+        counts = np.asarray([k for _, k in items], np.int64)
+        meta = {"kind": "exact", "n_rows": int(self.n_rows),
+                "max_codes": int(self.max_codes),
+                "overflowed": bool(self.overflowed)}
+        return {"codes": codes, "counts": counts}, meta
+
+    @classmethod
+    def from_state(cls, arrays: Dict[str, np.ndarray],
+                   meta: Dict[str, object]) -> "CategoricalSketch":
+        out = cls(max_codes=int(meta["max_codes"]))
+        out.n_rows = int(meta["n_rows"])
+        out.overflowed = bool(meta["overflowed"])
+        out.counts = {float(c): int(k) for c, k
+                      in zip(arrays["codes"], arrays["counts"])}
+        return out
+
+
+class CountMinSketch:
+    """Bounded-error per-code counts for high-cardinality dictionary columns.
+
+    `CategoricalSketch` is all-or-nothing: past `max_codes` distinct codes it
+    overflows and every Eq query falls back to KDE smoothing.  A count-min
+    sketch (Cormode & Muthukrishnan; cf. the hashing-based estimators of
+    Charikar & Siminelakis) never overflows: each value increments one cell
+    per row of a (depth x width) counter table through independent
+    multiply-shift hashes, and a code's estimated count is the MIN over its
+    depth cells.  Estimates only over-count (hash collisions add, never
+    subtract): with probability >= 1 - exp(-depth) the error is at most
+    (e / width) * n_rows.  Registered via `track_categorical(col, kind="cm")`
+    and reported on path "exact:cm" — same coverage gate as the exact sketch
+    (the sketch must have seen the whole stream), bounded error instead of
+    none.
+    """
+
+    path = "exact:cm"
+
+    def __init__(self, width: int = 2048, depth: int = 4, seed: int = 0,
+                 max_enumerate: int = 64):
+        if width < 1 or depth < 1:
+            raise ValueError(f"width/depth must be >= 1, got {width}x{depth}")
+        self.width = width
+        self.depth = depth
+        self.seed = seed
+        self.max_enumerate = max_enumerate   # widest code window enumerated
+        self.table = np.zeros((depth, width), np.int64)
+        self.n_rows = 0
+        self.overflowed = False              # a CM sketch never overflows
+        rng = np.random.default_rng(seed)
+        # odd multipliers for 64-bit multiply-shift hashing of the code's
+        # float32 bit pattern; deterministic in `seed` so merges line up
+        self._mul = (rng.integers(1, 1 << 61, size=depth, dtype=np.uint64)
+                     * np.uint64(2) + np.uint64(1))
+        self._add = rng.integers(0, 1 << 61, size=depth, dtype=np.uint64)
+
+    def _hash(self, codes: np.ndarray, row: int) -> np.ndarray:
+        bits = np.asarray(codes, np.float32).view(np.uint32).astype(np.uint64)
+        mixed = (self._mul[row] * bits + self._add[row]) >> np.uint64(33)
+        return (mixed % np.uint64(self.width)).astype(np.int64)
+
+    def add(self, values: np.ndarray) -> None:
+        # float32 like Reservoir._coerce / CategoricalSketch.add: both paths
+        # must bucket a non-representable code under the same rounded value
+        values = np.asarray(values, np.float32).ravel()
+        if values.shape[0] == 0:
+            return
+        for r in range(self.depth):
+            np.add.at(self.table[r], self._hash(values, r), 1)
+        # n_rows last, same reason as CategoricalSketch.add: a concurrent
+        # reader mid-update must see n_rows < n_seen and fall back
+        self.n_rows += values.shape[0]
+
+    def estimate(self, code: float) -> int:
+        """Estimated count of one code: min over the depth cells (>= truth)."""
+        idx = [self._hash(np.asarray([code], np.float32), r)[0]
+               for r in range(self.depth)]
+        return int(min(self.table[r, i] for r, i in zip(range(self.depth), idx)))
+
+    def exact_for(self, n_seen: int) -> bool:
+        """Coverage gate, same contract as `CategoricalSketch.exact_for`:
+        True when the sketch has seen the column's entire stream.  Covered
+        answers are bounded-error (err <= e/width * n_rows w.h.p.), not
+        exact — the engine labels them "exact:cm"."""
+        return self.n_rows == n_seen
+
+    def range_terms(self, lo: float, hi: float) -> Optional[Tuple[int, float]]:
+        """(COUNT, SUM of code values) over *integer* codes in [lo, hi], or
+        None when the window spans more than `max_enumerate` codes (a
+        count-min sketch cannot enumerate its keys, so wide windows go back
+        to the KDE path rather than summing unbounded collision noise)."""
+        first = int(np.ceil(lo))
+        last = int(np.floor(hi))
+        if last < first:
+            return 0, 0.0
+        if last - first + 1 > self.max_enumerate:
+            return None
+        cnt = 0
+        sm = 0.0
+        seen = set()
+        for code in range(first, last + 1):
+            code32 = float(np.float32(code))
+            if code32 in seen:      # ints > 2^24 can alias to one float32
+                continue            # code; count the shared cell once
+            seen.add(code32)
+            k = self.estimate(code32)
+            cnt += k
+            sm += code32 * k
+        return cnt, sm
+
+    def err_bound(self) -> int:
+        """Counts overshoot by at most this many rows, w.p. >= 1-exp(-depth)."""
+        return int(np.ceil(np.e / self.width * self.n_rows))
+
+    def merge(self, other: "CountMinSketch") -> "CountMinSketch":
+        # compare the actual hash parameters, not just the seed: a sketch
+        # restored from a snapshot keeps its persisted multipliers even if
+        # the local numpy derives different ones from the same seed
+        if (self.width, self.depth) != (other.width, other.depth) \
+                or not np.array_equal(self._mul, other._mul) \
+                or not np.array_equal(self._add, other._add):
+            raise ValueError(
+                f"cannot merge count-min sketches with different geometry: "
+                f"{(self.width, self.depth, self.seed)} vs "
+                f"{(other.width, other.depth, other.seed)} "
+                f"(or unequal hash parameters)")
+        out = CountMinSketch(self.width, self.depth, self.seed,
+                             max_enumerate=min(self.max_enumerate,
+                                               other.max_enumerate))
+        out._mul = self._mul.copy()
+        out._add = self._add.copy()
+        out.table = self.table + other.table
+        out.n_rows = self.n_rows + other.n_rows
+        return out
+
+    def stats(self) -> Dict[str, object]:
+        return {"kind": "cm", "rows": self.n_rows, "overflowed": False,
+                "width": self.width, "depth": self.depth,
+                "err_bound": self.err_bound()}
+
+    def state(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
+        meta = {"kind": "cm", "n_rows": int(self.n_rows),
+                "width": int(self.width), "depth": int(self.depth),
+                "seed": int(self.seed),
+                "max_enumerate": int(self.max_enumerate)}
+        # the hash multipliers are persisted, not re-derived on load: numpy
+        # does not guarantee Generator streams across versions, and a table
+        # read through different hashes is silently wrong
+        return {"table": self.table.copy(), "mul": self._mul.copy(),
+                "add": self._add.copy()}, meta
+
+    @classmethod
+    def from_state(cls, arrays: Dict[str, np.ndarray],
+                   meta: Dict[str, object]) -> "CountMinSketch":
+        out = cls(int(meta["width"]), int(meta["depth"]), int(meta["seed"]),
+                  max_enumerate=int(meta["max_enumerate"]))
+        out._mul = np.asarray(arrays["mul"], np.uint64)
+        out._add = np.asarray(arrays["add"], np.uint64)
+        out.table = np.asarray(arrays["table"], np.int64).reshape(
+            out.depth, out.width)
+        out.n_rows = int(meta["n_rows"])
+        return out
+
+
+_SKETCH_KINDS = {"exact": CategoricalSketch, "cm": CountMinSketch}
 
 
 def _entry_nbytes(syn) -> int:
@@ -257,6 +478,11 @@ class SynopsisCache:
     Bounded by `max_entries` and (optionally) `max_bytes`, with LRU eviction:
     hits refresh recency, eviction pops the least-recently-used entry and is
     counted in `stats()`.
+
+    Thread-safe: concurrent query threads hit `get`/`put` (every hit mutates
+    LRU order) while serving, and a snapshot (`entries`, via
+    `TelemetryStore.to_state`) must see a consistent entry list — all
+    internal state is guarded by one lock.
     """
 
     def __init__(self, max_entries: int = 128, max_bytes: Optional[int] = None):
@@ -269,58 +495,74 @@ class SynopsisCache:
         self.evictions = 0
         self.oversize = 0      # entries refused because nbytes > max_bytes
         self._bytes = 0
+        self._lock = threading.Lock()
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     @property
     def nbytes(self) -> int:
-        return self._bytes
+        with self._lock:
+            return self._bytes
 
     def get(self, column: ColumnKey, selector: str, version: int) -> Optional[KDESynopsis]:
         # selector case-normalized: "Plugin" and "plugin" are the same
         # synopsis and must share one entry, not collide as two live copies
         key = (column, canonical_selector(selector))
-        ent = self._entries.get(key)
-        if ent is not None and ent[0] == version:
-            self.hits += 1
-            self._entries.move_to_end(key)            # LRU: refresh recency
-            return ent[1]
-        self.misses += 1
-        return None
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is not None and ent[0] == version:
+                self.hits += 1
+                self._entries.move_to_end(key)        # LRU: refresh recency
+                return ent[1]
+            self.misses += 1
+            return None
 
     def put(self, column: ColumnKey, selector: str, version: int, syn: KDESynopsis) -> None:
         key = (column, canonical_selector(selector))
         nb = _entry_nbytes(syn)
-        if self.max_bytes is not None and nb > self.max_bytes:
-            # An entry that can never fit must not flush the whole cache on
-            # its way through the eviction loop; refuse it and keep the rest.
-            self.oversize += 1
+        with self._lock:
+            if self.max_bytes is not None and nb > self.max_bytes:
+                # An entry that can never fit must not flush the whole cache
+                # on its way through the eviction loop; refuse it and keep
+                # the rest.
+                self.oversize += 1
+                if key in self._entries:
+                    self._bytes -= self._entries.pop(key)[2]
+                return
             if key in self._entries:
                 self._bytes -= self._entries.pop(key)[2]
-            return
-        if key in self._entries:
-            self._bytes -= self._entries.pop(key)[2]
-        self._entries[key] = (version, syn, nb)
-        self._bytes += nb
-        while (len(self._entries) > self.max_entries
-               or (self.max_bytes is not None and self._bytes > self.max_bytes)):
-            _, (_, _, ev_nb) = self._entries.popitem(last=False)
-            self._bytes -= ev_nb
-            self.evictions += 1
+            self._entries[key] = (version, syn, nb)
+            self._bytes += nb
+            while (len(self._entries) > self.max_entries
+                   or (self.max_bytes is not None
+                       and self._bytes > self.max_bytes)):
+                _, (_, _, ev_nb) = self._entries.popitem(last=False)
+                self._bytes -= ev_nb
+                self.evictions += 1
 
     def invalidate(self, column: Optional[ColumnKey] = None) -> None:
-        if column is None:
-            self._entries.clear()
-            self._bytes = 0
-            return
-        for key in [k for k in self._entries if k[0] == column]:
-            self._bytes -= self._entries.pop(key)[2]
+        with self._lock:
+            if column is None:
+                self._entries.clear()
+                self._bytes = 0
+                return
+            for key in [k for k in self._entries if k[0] == column]:
+                self._bytes -= self._entries.pop(key)[2]
+
+    def entries(self) -> List[Tuple[Tuple[Hashable, str], int, KDESynopsis]]:
+        """Consistent snapshot of the live entries, LRU order:
+        [(key, version, synopsis)] — the durable-state serializer's view."""
+        with self._lock:
+            return [(key, version, syn) for key, (version, syn, _nb)
+                    in self._entries.items()]
 
     def stats(self) -> Dict[str, int]:
-        return {"hits": self.hits, "misses": self.misses,
-                "entries": len(self._entries), "bytes": self._bytes,
-                "evictions": self.evictions, "oversize": self.oversize}
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._entries), "bytes": self._bytes,
+                    "evictions": self.evictions, "oversize": self.oversize}
 
 
 class TelemetryStore:
@@ -335,6 +577,11 @@ class TelemetryStore:
                                    max_bytes=cache_bytes)
         self._listeners: List[Callable[[Dict[ColumnKey, int]], None]] = []
         self._sessions: List["weakref.ref"] = []
+        # serializes mutation (add_batch/restore_state) against snapshots
+        # (to_state): a snapshot taken mid-add_batch could otherwise persist
+        # a sketch whose n_rows exceeds its reservoir's n_seen — a restored
+        # store would then claim exact coverage it does not have
+        self._write_lock = threading.RLock()
 
     def _col_seed(self, name: str) -> int:
         # crc32, not hash(): Python string hashing is randomised per
@@ -370,15 +617,33 @@ class TelemetryStore:
             res.backfilled = True
         self.joints[key] = res
 
-    def track_categorical(self, column: str, max_codes: int = 4096) -> None:
-        """Register an exact per-code frequency sketch for a dictionary
-        column.  Register *before* the column's first `add_batch` — the
-        engine's exact Eq path requires the sketch to cover the whole stream
+    def track_categorical(self, column: str, max_codes: int = 4096,
+                          kind: str = "exact", width: int = 2048,
+                          depth: int = 4) -> None:
+        """Register a per-code frequency sketch for a dictionary column.
+        Register *before* the column's first `add_batch` — the engine's
+        exact Eq path requires the sketch to cover the whole stream
         (otherwise it falls back to the KDE code-window estimate; see
-        `stats()["categoricals"]` for coverage)."""
+        `stats()["categoricals"]` for coverage).
+
+        kind="exact" (default) keeps one exact counter per code but disables
+        itself past `max_codes` distinct codes; kind="cm" keeps a
+        (depth x width) count-min table instead — bounded-error counts
+        (path "exact:cm") for columns too wide to enumerate."""
         if column in self.categoricals:
             return
-        self.categoricals[column] = CategoricalSketch(max_codes=max_codes)
+        if kind == "exact":
+            self.categoricals[column] = CategoricalSketch(max_codes=max_codes)
+        elif kind == "cm":
+            # seed from the column name alone (NOT the per-host store seed):
+            # cross-host merge adds the counter tables cell-wise, which is
+            # only meaningful when every host hashes codes identically
+            self.categoricals[column] = CountMinSketch(
+                width=width, depth=depth,
+                seed=zlib.crc32(column.encode()) % 1000)
+        else:
+            raise ValueError(f"unknown sketch kind {kind!r}; "
+                             f"expected one of {sorted(_SKETCH_KINDS)}")
 
     def subscribe(self, fn: Callable[[Dict[ColumnKey, int]], None]
                   ) -> Callable[[], None]:
@@ -415,23 +680,24 @@ class TelemetryStore:
                     raise ValueError(f"joint {cols} needs row-aligned columns, "
                                      f"got lengths {sizes}")
                 joint_rows[cols] = np.stack(arrays, axis=1)
-        for name, values in stats.items():
-            if name not in self.columns:
-                self.columns[name] = Reservoir(self.capacity,
-                                               seed=self._col_seed(name))
-            self.columns[name].add(values)
-            sketch = self.categoricals.get(name)
-            if sketch is not None:
-                sketch.add(values)
-        for cols, rows in joint_rows.items():
-            self.joints[cols].add(rows)
-        if self._listeners:
-            bumped: Dict[ColumnKey, int] = {
-                name: self.columns[name].version for name in stats}
-            for cols in joint_rows:
-                bumped[cols] = self.joints[cols].version
-            for fn in list(self._listeners):
-                fn(bumped)
+        with self._write_lock:      # vs to_state: snapshots see whole batches
+            for name, values in stats.items():
+                if name not in self.columns:
+                    self.columns[name] = Reservoir(self.capacity,
+                                                   seed=self._col_seed(name))
+                self.columns[name].add(values)
+                sketch = self.categoricals.get(name)
+                if sketch is not None:
+                    sketch.add(values)
+            for cols, rows in joint_rows.items():
+                self.joints[cols].add(rows)
+            if self._listeners:
+                bumped: Dict[ColumnKey, int] = {
+                    name: self.columns[name].version for name in stats}
+                for cols in joint_rows:
+                    bumped[cols] = self.joints[cols].version
+                for fn in list(self._listeners):
+                    fn(bumped)
 
     def synopsis(self, column: str, selector: str = "plugin") -> KDESynopsis:
         res = self.columns.get(column)
@@ -553,13 +819,14 @@ class TelemetryStore:
         agg: Dict[str, object] = {
             "sessions": len(live), "submitted": 0, "executed": 0,
             "pending": 0, "flushes": 0, "coalesced": 0,
-            "invalidations": 0, "flush_reasons": {},
+            "invalidations": 0, "blocked": 0, "shed": 0,
+            "flush_reasons": {},
         }
         total_batch = 0
         for s in live:
             st = s.stats()
             for k in ("submitted", "executed", "pending", "flushes",
-                      "coalesced", "invalidations"):
+                      "coalesced", "invalidations", "blocked", "shed"):
                 agg[k] += st[k]
             total_batch += st["mean_batch"] * st["flushes"]
             for reason, n in st["flush_reasons"].items():
@@ -597,3 +864,169 @@ class TelemetryStore:
                 out.categoricals[name] = copy.deepcopy(
                     self.categoricals.get(name) or other.categoricals[name])
         return out
+
+    # -- durability ----------------------------------------------------------
+    #
+    # `to_state`/`from_state` round-trip the store's complete mutable state;
+    # `save`/`load` put it behind the atomic keep-k CheckpointManager.  The
+    # fitted synopses in the cache ride along, so a warm-started store skips
+    # the expensive bandwidth refits entirely (the paper's whole premise is
+    # that fitting is the step worth not repeating).
+
+    def to_state(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
+        """Snapshot to (flat array tree, JSON-safe metadata), taken under the
+        store's write lock — a snapshot racing `add_batch` sees whole batches
+        only, so a persisted sketch never claims rows its reservoir has not
+        seen (`from_state` re-asserts this invariant on load)."""
+        with self._write_lock:
+            tree: Dict[str, np.ndarray] = {}
+            meta: Dict[str, object] = {
+                "format": STATE_FORMAT, "capacity": int(self.capacity),
+                "seed": int(self.seed), "columns": {}, "joints": [],
+                "categoricals": {}, "cache": [],
+            }
+            for name in list(self.columns) + list(self.categoricals):
+                if "/" in name:
+                    raise ValueError(f"column name {name!r} contains '/', "
+                                     f"which state keys reserve as a "
+                                     f"separator")
+            for name, res in self.columns.items():
+                buf, m = res.state()
+                tree[f"columns/{name}/buf"] = buf
+                meta["columns"][name] = m
+            for i, (cols, res) in enumerate(self.joints.items()):
+                buf, m = res.state()
+                m["columns"] = list(cols)
+                tree[f"joints/{i}/buf"] = buf
+                meta["joints"].append(m)
+            for name, sketch in self.categoricals.items():
+                arrays, m = sketch.state()
+                for k, arr in arrays.items():
+                    tree[f"categoricals/{name}/{k}"] = arr
+                meta["categoricals"][name] = m
+            for i, (key, version, syn) in enumerate(self.cache.entries()):
+                col, sel = key
+                meta["cache"].append({
+                    "column": list(col) if isinstance(col, tuple) else col,
+                    "is_tuple": isinstance(col, tuple), "selector": sel,
+                    "version": int(version), "n_source": int(syn.n_source),
+                    "syn_selector": syn.selector,
+                })
+                tree[f"cache/{i}/x"] = np.asarray(syn.x)
+                if syn.h is not None:
+                    tree[f"cache/{i}/h"] = np.asarray(syn.h)
+                if syn.H is not None:
+                    tree[f"cache/{i}/H"] = np.asarray(syn.H)
+            return tree, meta
+
+    def restore_state(self, tree: Dict[str, np.ndarray],
+                      meta: Dict[str, object]) -> None:
+        """Swap this store's contents for a snapshot's, in place.  The
+        restored reservoir versions are pushed through the `subscribe`
+        listeners, so in-flight admission buckets re-key to them and the
+        version-keyed PlanCache/SynopsisCache lookups key correctly."""
+        import jax.numpy as jnp
+
+        if int(meta.get("format", -1)) != STATE_FORMAT:
+            raise ValueError(f"unsupported store-state format "
+                             f"{meta.get('format')!r} (want {STATE_FORMAT})")
+        with self._write_lock:
+            self.capacity = int(meta["capacity"])
+            columns: Dict[str, Reservoir] = {}
+            for name, m in meta["columns"].items():
+                res = Reservoir(self.capacity, seed=self._col_seed(name))
+                res.load_state(tree[f"columns/{name}/buf"], m)
+                columns[name] = res
+            joints: Dict[Tuple[str, ...], MultiReservoir] = {}
+            for i, m in enumerate(meta["joints"]):
+                cols = tuple(m["columns"])
+                res = MultiReservoir(cols, self.capacity,
+                                     seed=self._col_seed("|".join(cols)))
+                res.load_state(tree[f"joints/{i}/buf"], m)
+                joints[cols] = res
+            categoricals: Dict[str, object] = {}
+            for name, m in meta["categoricals"].items():
+                prefix = f"categoricals/{name}/"
+                arrays = {k[len(prefix):]: v for k, v in tree.items()
+                          if k.startswith(prefix)}
+                sketch = _SKETCH_KINDS[str(m["kind"])].from_state(arrays, m)
+                res = columns.get(name)
+                if res is not None and sketch.n_rows > res.n_seen:
+                    # the coverage invariant: restoring this would let the
+                    # store claim exact coverage of rows it never sampled
+                    raise ValueError(
+                        f"inconsistent snapshot: sketch for {name!r} has "
+                        f"seen {sketch.n_rows} rows but its reservoir only "
+                        f"{res.n_seen}")
+                categoricals[name] = sketch
+            self.columns = columns
+            self.joints = joints
+            self.categoricals = categoricals
+            self.cache.invalidate()
+            for i, ent in enumerate(meta["cache"]):
+                h = tree.get(f"cache/{i}/h")
+                H = tree.get(f"cache/{i}/H")
+                syn = KDESynopsis(
+                    x=jnp.asarray(tree[f"cache/{i}/x"]),
+                    h=None if h is None else jnp.asarray(h),
+                    H=None if H is None else jnp.asarray(H),
+                    n_source=int(ent["n_source"]),
+                    selector=str(ent["syn_selector"]))
+                col = tuple(ent["column"]) if ent["is_tuple"] \
+                    else ent["column"]
+                self.cache.put(col, str(ent["selector"]),
+                               int(ent["version"]), syn)
+            if self._listeners:
+                bumped: Dict[ColumnKey, int] = {
+                    name: res.version for name, res in self.columns.items()}
+                for cols, res in self.joints.items():
+                    bumped[cols] = res.version
+                for fn in list(self._listeners):
+                    fn(bumped)
+
+    @classmethod
+    def from_state(cls, tree: Dict[str, np.ndarray],
+                   meta: Dict[str, object], cache_entries: int = 128,
+                   cache_bytes: Optional[int] = None) -> "TelemetryStore":
+        """Rebuild a store from a `to_state` snapshot."""
+        store = cls(capacity=int(meta["capacity"]), seed=int(meta["seed"]),
+                    cache_entries=cache_entries, cache_bytes=cache_bytes)
+        store.restore_state(tree, meta)
+        return store
+
+    def save(self, path: str, step: Optional[int] = None,
+             keep: int = 3) -> int:
+        """Write an atomic snapshot under `path` through the keep-k
+        `CheckpointManager` (crash mid-write never corrupts the latest
+        completed snapshot).  Returns the step written (monotonic when
+        `step` is omitted)."""
+        from repro.checkpoint import CheckpointManager
+
+        mgr = CheckpointManager(path, keep=keep, async_save=False)
+        if step is None:
+            latest = mgr.latest_step()
+            step = 1 if latest is None else latest + 1
+        tree, meta = self.to_state()
+        mgr.save(step, tree, extra=meta)
+        return step
+
+    @classmethod
+    def load(cls, path: str, step: Optional[int] = None,
+             cache_entries: int = 128,
+             cache_bytes: Optional[int] = None) -> "TelemetryStore":
+        """Warm-start a store from the latest (or a specific) snapshot under
+        `path`.  Everything survives: reservoir samples and RNG states (so
+        post-restore sampling is bit-identical to an uninterrupted store),
+        versions, joint registrations and backfill flags, categorical-sketch
+        coverage (exact-Eq answers stay exact), and the fitted synopses."""
+        from repro.checkpoint import CheckpointManager
+
+        mgr = CheckpointManager(path, async_save=False)
+        if step is None:
+            step = mgr.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no completed snapshots under "
+                                        f"{path!r}")
+        tree, meta = mgr.restore_flat(step)
+        return cls.from_state(tree, meta, cache_entries=cache_entries,
+                              cache_bytes=cache_bytes)

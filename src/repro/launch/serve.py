@@ -18,6 +18,16 @@ version invalidations.
     PYTHONPATH=src python -m repro.launch.serve --mode aqp \
         --rows 200000 --clients 8 --per-client 150 --max-delay-ms 5 \
         --selector plugin
+
+The loop is *restartable*: `--snapshot-dir` makes the producer write atomic
+keep-k store snapshots (reservoirs + RNG states, sketches, fitted synopses)
+every `--snapshot-every` streamed batches, and `--restore` warm-starts from
+the latest snapshot instead of re-seeding — the exact categorical path stays
+active (sketch coverage survives) and no synopsis is refitted.  `--max-pending`
+bounds the admission queue (block or shed, `--overflow`).
+
+    PYTHONPATH=src python -m repro.launch.serve --mode aqp \
+        --snapshot-dir /tmp/aqp-snap --snapshot-every 5 --restore
 """
 from __future__ import annotations
 
@@ -166,18 +176,37 @@ def run_aqp(args) -> None:
 
     rng = np.random.default_rng(0)
     n = args.rows
-    telemetry = _make_telemetry(rng, n)
     joint_cols = ("loss", "latency_ms")
-    store = TelemetryStore(capacity=args.capacity, seed=0)
-    store.track_joint(joint_cols)          # before add_batch: joints sample rows
-    store.track_categorical("model_id")    # exact per-code counts for Eq terms
-    store.add_batch(telemetry)
-    # registering after add_batch backfills from the per-column reservoirs
-    store.track_joint(("model_id", "latency_ms"))
-
-    numeric = [c for c in telemetry if c != "model_id"]
-    ranges = {c: (float(telemetry[c].min()), float(telemetry[c].max()))
-              for c in numeric}
+    restored_step = None
+    if args.restore:
+        if not args.snapshot_dir:
+            raise SystemExit("--restore needs --snapshot-dir")
+        from repro.checkpoint import CheckpointManager
+        restored_step = CheckpointManager(args.snapshot_dir,
+                                          async_save=False).latest_step()
+        if restored_step is None:
+            raise SystemExit(f"--restore: no completed snapshots under "
+                             f"{args.snapshot_dir!r}")
+        # warm start: reservoirs, sketches (exact coverage intact), joint
+        # registrations, and fitted synopses all come back from the snapshot
+        store = TelemetryStore.load(args.snapshot_dir)
+        n = max(res.n_seen for res in store.columns.values())
+    else:
+        telemetry = _make_telemetry(rng, n)
+        store = TelemetryStore(capacity=args.capacity, seed=0)
+        store.track_joint(joint_cols)       # before add_batch: joints sample rows
+        store.track_categorical("model_id")  # exact per-code counts for Eq terms
+        store.add_batch(telemetry)
+        # registering after add_batch backfills from the per-column reservoirs
+        store.track_joint(("model_id", "latency_ms"))
+    # query-mix sampling ranges come from the reservoir samples (not the raw
+    # stream) on BOTH paths, so a restarted process regenerates the exact
+    # same client query stream as the run that wrote the snapshot — with a
+    # quiescent producer, the printed sample rows are bit-identical across
+    # the restart
+    ranges = {c: (float(s.min()), float(s.max()))
+              for c, s in ((c, store.columns[c].sample())
+                           for c in store.columns if c != "model_id")}
     engine = store.engine(selector=args.selector, backend=args.backend)
 
     # Closed-loop clients hold one outstanding query each, so a bucket can
@@ -194,10 +223,19 @@ def run_aqp(args) -> None:
     engine.execute(warm)
 
     session = engine.session(watermark=watermark,
-                             max_delay=args.max_delay_ms / 1e3)
+                             max_delay=args.max_delay_ms / 1e3,
+                             max_pending=args.max_pending,
+                             overflow=args.overflow)
     per_client: dict = {}
     results_lock = threading.Lock()
     stop_producer = threading.Event()
+    snapshots = [0]
+
+    if args.snapshot_dir and not args.restore:
+        # a restartable loop snapshots at startup too: --restore works even
+        # if the process dies before the producer's first cadence tick
+        store.save(args.snapshot_dir)
+        snapshots[0] += 1
 
     def client(ci: int) -> None:
         specs = make_mixed_aqp_queries(
@@ -213,8 +251,13 @@ def run_aqp(args) -> None:
         # keep streaming telemetry while queries are in flight: every batch
         # bumps reservoir versions, re-keying pending micro-batches
         prng = np.random.default_rng(1234)
+        batches = 0
         while not stop_producer.wait(args.stream_every_ms / 1e3):
             store.add_batch(_make_telemetry(prng, args.stream_rows))
+            batches += 1
+            if args.snapshot_dir and batches % args.snapshot_every == 0:
+                store.save(args.snapshot_dir)   # atomic keep-k, under the
+                snapshots[0] += 1               # store's write lock
 
     threads = [threading.Thread(target=client, args=(i,))
                for i in range(args.clients)]
@@ -242,14 +285,26 @@ def run_aqp(args) -> None:
     paths = Counter(r.path for r in results)
     qps = len(results) / dt
     print(f"[serve:aqp] {len(results)} mixed queries from {args.clients} "
-          f"concurrent clients over {len(telemetry)} columns ({n:,} seed rows) "
+          f"concurrent clients over {len(store.columns)} columns "
+          f"({n:,} seed rows) "
           f"in {dt * 1e3:.1f} ms -> {qps:,.0f} queries/s [{args.backend}]")
+    if restored_step is not None:
+        print(f"[serve:aqp] durability: warm-started from snapshot step "
+              f"{restored_step} ({args.snapshot_dir}) — no refit, sketch "
+              f"coverage intact")
+    if args.snapshot_dir:
+        print(f"[serve:aqp] durability: {snapshots[0]} snapshots written to "
+              f"{args.snapshot_dir} (every {args.snapshot_every} streamed "
+              f"batches, keep-3)")
     print(f"[serve:aqp] admission: {st['flushes']} flushes "
           f"(reasons: " + ", ".join(f"{k}={v}" for k, v
                                     in sorted(st['flush_reasons'].items()))
           + f"), mean batch {st['mean_batch']:.1f}, "
           f"{st['coalesced']} coalesced, "
-          f"{st['invalidations']} version invalidations")
+          f"{st['invalidations']} version invalidations"
+          + (f", backpressure: {st['blocked']} blocked, {st['shed']} shed "
+             f"(max_pending={st['max_pending']})"
+             if st["max_pending"] is not None else ""))
     if depth_samples:
         print(f"[serve:aqp] queue depth: max {max(depth_samples)}, "
               f"mean {sum(depth_samples) / len(depth_samples):.1f} "
@@ -316,10 +371,27 @@ def main() -> None:
     ap.add_argument("--stream-rows", type=int, default=20_000,
                     help="rows per streamed telemetry batch")
     ap.add_argument("--capacity", type=int, default=2048)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="write atomic keep-k store snapshots here (enables "
+                         "--restore on the next run)")
+    ap.add_argument("--snapshot-every", type=int, default=5,
+                    help="streamed producer batches between snapshots")
+    ap.add_argument("--restore", action="store_true",
+                    help="warm-start from the latest snapshot in "
+                         "--snapshot-dir instead of re-seeding (reservoirs, "
+                         "sketch coverage, and fitted synopses all survive)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="bound the admission queue depth (default: "
+                         "unbounded)")
+    ap.add_argument("--overflow", default="block", choices=["block", "shed"],
+                    help="policy at --max-pending: park the submitter or "
+                         "raise AdmissionFull")
     ap.add_argument("--selector", default="plugin",
                     choices=["plugin", "silverman", "lscv_h"])
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     args = ap.parse_args()
+    if args.snapshot_every < 1:
+        ap.error(f"--snapshot-every must be >= 1, got {args.snapshot_every}")
 
     if args.mode == "aqp":
         run_aqp(args)

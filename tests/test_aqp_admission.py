@@ -278,3 +278,109 @@ def test_store_stats_aggregate_admission_counters(rng):
     s1.close()
     s2.close()
     assert store.stats()["admission"]["pending"] == 0
+
+
+# --- backpressure: the max_pending bound (ROADMAP follow-up) -----------------
+
+def test_max_pending_shed_raises_and_counts(rng):
+    from repro.core import AdmissionFull
+
+    store = _store(rng, n=2000, capacity=256)
+    with _manual_session(store.engine(), max_pending=2,
+                         overflow="shed") as sess:
+        futs = [sess.submit(AqpQuery("count", (Range("a", 0.0, float(i)),)))
+                for i in range(2)]
+        with pytest.raises(AdmissionFull, match="max_pending=2"):
+            sess.submit(AqpQuery("count", (Range("a", 0.0, 9.0),)))
+        st = sess.stats()
+        assert st["shed"] == 1 and st["max_pending"] == 2
+        assert st["submitted"] == 2                  # shed spec not admitted
+        sess.flush()
+        for f in futs:
+            f.result(timeout=10)
+        sess.submit(AqpQuery("count", (Range("a", 0.0, 9.0),)))   # room again
+        assert sess.stats()["shed"] == 1
+
+
+def test_max_pending_block_parks_until_flush_frees_room(rng):
+    store = _store(rng, n=2000, capacity=256)
+    sess = _manual_session(store.engine(), max_pending=2, overflow="block")
+    sess.submit(AqpQuery("count", (Range("a", -1.0, 1.0),)))
+    sess.submit(AqpQuery("count", (Range("a", -2.0, 2.0),)))
+    got = []
+
+    def blocked_submit():
+        got.append(sess.submit(
+            AqpQuery("count", (Range("a", -3.0, 3.0),))).result(timeout=30))
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    t.join(timeout=0.2)
+    assert t.is_alive()                      # parked at the bound
+    assert sess.stats()["blocked"] == 1
+    sess.flush()                             # frees room -> submit proceeds
+    for _ in range(100):
+        if sess.pending:
+            break
+        t.join(timeout=0.05)
+    sess.flush()                             # flush the unblocked submit
+    t.join(timeout=10)
+    assert not t.is_alive() and len(got) == 1
+    assert got[0].estimate == store.engine().execute(
+        [AqpQuery("count", (Range("a", -3.0, 3.0),))])[0].estimate
+    sess.close()
+
+
+def test_max_pending_oversized_ticket_admitted_on_empty_queue(rng):
+    """A GROUP BY spec whose compiled parts alone exceed max_pending must be
+    admitted once the queue is empty — not shed or parked forever."""
+    store = _store(rng, n=2000, capacity=256, categorical=True)
+    with _manual_session(store.engine(), max_pending=2,
+                         overflow="shed") as sess:
+        fut = sess.submit(AqpQuery(
+            "count", (Range("b", -5.0, 5.0),),
+            group_by=GroupBy("code", values=(0.0, 1.0, 2.0, 3.0))))
+        assert sess.pending == 4             # > max_pending, admitted anyway
+        assert sess.stats()["shed"] == 0
+        sess.flush()
+        assert len(fut.result(timeout=10)) == 4
+
+
+def test_max_pending_param_validation_and_close_unblocks(rng):
+    store = _store(rng, n=2000, capacity=256)
+    with pytest.raises(ValueError, match="max_pending"):
+        store.session(max_pending=0)
+    with pytest.raises(ValueError, match="overflow"):
+        store.session(overflow="drop")
+
+    sess = _manual_session(store.engine(), max_pending=1, overflow="block")
+    sess.submit(AqpQuery("count", (Range("a", -1.0, 1.0),)))
+    errs = []
+
+    def blocked_submit():
+        try:
+            sess.submit(AqpQuery("count", (Range("a", -2.0, 2.0),)))
+        except RuntimeError as exc:
+            errs.append(exc)
+
+    t = threading.Thread(target=blocked_submit)
+    t.start()
+    t.join(timeout=0.2)
+    assert t.is_alive()
+    sess.close()                             # close() wakes parked submitters
+    t.join(timeout=10)
+    assert not t.is_alive() and len(errs) == 1
+    assert "closed" in str(errs[0])
+
+
+def test_store_stats_aggregate_backpressure_counters(rng):
+    from repro.core import AdmissionFull
+
+    store = _store(rng, n=2000, capacity=256)
+    sess = _manual_session(store.engine(), max_pending=1, overflow="shed")
+    sess.submit(AqpQuery("count", (Range("a", -1.0, 1.0),)))
+    with pytest.raises(AdmissionFull):
+        sess.submit(AqpQuery("count", (Range("a", -2.0, 2.0),)))
+    agg = store.stats()["admission"]
+    assert agg["shed"] == 1 and agg["blocked"] == 0
+    sess.close()

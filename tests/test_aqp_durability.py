@@ -1,0 +1,422 @@
+"""Durable AQP store: checkpoint/restore round-trips (reservoir buffers +
+RNG bit-generator state, categorical sketches, joint registrations, fitted
+synopses), post-restore bit-identical determinism, the snapshot-vs-mutation
+coverage invariant, count-min sketches for high-cardinality columns, and the
+restart-a-serving-process acceptance scenario."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import AqpQuery, Box, Eq, Range
+from repro.data import CategoricalSketch, CountMinSketch, TelemetryStore
+
+
+def _full_store(rng, n=20_000, capacity=512):
+    """A store exercising every durable part: per-column reservoirs, a
+    streamed joint, a backfilled joint, an exact sketch, a count-min
+    sketch."""
+    store = TelemetryStore(capacity=capacity, seed=0)
+    store.track_joint(("a", "b"))
+    store.track_categorical("code")
+    store.track_categorical("wide", kind="cm")
+    a = rng.normal(0, 1, n).astype(np.float32)
+    store.add_batch({
+        "a": a,
+        "b": (0.8 * a + 0.6 * rng.normal(0, 1, n)).astype(np.float32),
+        "code": rng.integers(0, 4, n).astype(np.float32),
+        "wide": rng.integers(0, 10_000, n).astype(np.float32),
+    })
+    store.track_joint(("code", "b"))     # backfilled from per-column samples
+    return store
+
+
+def _batch(rng, n=5_000):
+    a = rng.normal(0.5, 1, n).astype(np.float32)
+    return {
+        "a": a,
+        "b": (0.8 * a + 0.6 * rng.normal(0, 1, n)).astype(np.float32),
+        "code": rng.integers(0, 4, n).astype(np.float32),
+        "wide": rng.integers(0, 10_000, n).astype(np.float32),
+    }
+
+
+_SPECS = [
+    AqpQuery("count", (Range("a", -1.0, 1.0),)),
+    AqpQuery("sum", (Range("b", -0.5, 2.0),), target="b"),
+    AqpQuery("avg", (Box(("a", "b"), (-1.0, -1.0), (1.0, 1.0)),), target="b"),
+    AqpQuery("count", (Eq("code", 2.0),)),
+    AqpQuery("count", (Eq("wide", 137.0),)),
+]
+
+
+def _assert_rows_identical(r1, r2):
+    for x, y in zip(r1, r2):
+        assert x.estimate == y.estimate, (x, y)
+        assert x.path == y.path and x.synopsis_version == y.synopsis_version
+
+
+def _assert_stores_identical(s1: TelemetryStore, s2: TelemetryStore):
+    assert sorted(s1.columns) == sorted(s2.columns)
+    for name, res in s1.columns.items():
+        other = s2.columns[name]
+        np.testing.assert_array_equal(res.sample(), other.sample())
+        assert (res.n_seen, res.n_filled, res.version) == \
+            (other.n_seen, other.n_filled, other.version)
+        assert res.rng.bit_generator.state == other.rng.bit_generator.state
+    assert sorted(s1.joints) == sorted(s2.joints)
+    for key, res in s1.joints.items():
+        other = s2.joints[key]
+        np.testing.assert_array_equal(res.sample(), other.sample())
+        assert res.backfilled == other.backfilled
+        assert (res.n_seen, res.version) == (other.n_seen, other.version)
+
+
+# --- round-trip determinism (satellite + acceptance) -------------------------
+
+def test_roundtrip_then_add_batch_is_bit_identical(rng, tmp_path):
+    """save -> load -> add_batch(B) must yield bit-identical samples,
+    versions, RNG states, and query answers to the un-restored store fed the
+    same batch — the RNG bit-generator state survives the checkpoint, so
+    post-restore reservoir acceptance draws replay exactly."""
+    store = _full_store(rng)
+    store.save(str(tmp_path))
+    restored = TelemetryStore.load(str(tmp_path))
+    _assert_stores_identical(store, restored)
+
+    batch = _batch(rng)
+    store.add_batch(batch)
+    restored.add_batch(batch)
+    _assert_stores_identical(store, restored)
+    _assert_rows_identical(store.query(_SPECS), restored.query(_SPECS))
+
+
+def test_restart_serving_process_scenario(rng, tmp_path):
+    """Acceptance: a serving process killed and restarted from a snapshot
+    answers the same query batch bit-identically to an uninterrupted one,
+    with the exact categorical path still active after restore."""
+    uninterrupted = _full_store(rng)
+    uninterrupted.save(str(tmp_path))
+
+    # "kill" the process: drop every live object, restart from disk only
+    restarted = TelemetryStore.load(str(tmp_path))
+    batch = _batch(rng)
+    uninterrupted.add_batch(batch)
+    restarted.add_batch(batch)
+
+    with uninterrupted.session(auto_flush=False, watermark=None,
+                               max_delay=None) as s1, \
+            restarted.session(auto_flush=False, watermark=None,
+                              max_delay=None) as s2:
+        r1 = s1.execute(_SPECS)
+        r2 = s2.execute(_SPECS)
+    _assert_rows_identical(r1, r2)
+    assert r2[3].path == "exact"             # whole-stream coverage survived
+    assert r2[4].path == "exact:cm"
+    assert restarted.stats()["categoricals"]["code"]["exact"] is True
+
+
+def test_restore_warm_starts_fitted_synopses(rng, tmp_path):
+    """The fitted synopses ride along in the snapshot: a warm-started store
+    answers the same specs with ZERO cache misses (no bandwidth refit)."""
+    store = _full_store(rng)
+    store.query(_SPECS)                      # fit + populate the cache
+    store.save(str(tmp_path))
+    restored = TelemetryStore.load(str(tmp_path))
+    misses0 = restored.cache.stats()["misses"]
+    r = restored.query(_SPECS)
+    assert restored.cache.stats()["misses"] == misses0
+    _assert_rows_identical(store.query(_SPECS), r)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chained_weighted_merge_then_restore(seed, tmp_path):
+    """Property (over seeds): a store built by chained weighted merges
+    round-trips like any other — post-restore updates and answers are
+    bit-identical to the un-restored merged store's."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    for i, (mu, n) in enumerate([(0.0, 8000), (3.0, 4000), (6.0, 2000)]):
+        st = TelemetryStore(capacity=256, seed=i)
+        st.track_categorical("code")
+        st.add_batch({"x": rng.normal(mu, 1, n).astype(np.float32),
+                      "code": rng.integers(0, 3, n).astype(np.float32)})
+        parts.append(st)
+    merged = parts[0].merge(parts[1]).merge(parts[2])
+    merged.save(str(tmp_path))
+    restored = TelemetryStore.load(str(tmp_path))
+    _assert_stores_identical(merged, restored)
+
+    batch = {"x": rng.normal(1, 1, 3000).astype(np.float32),
+             "code": rng.integers(0, 3, 3000).astype(np.float32)}
+    merged.add_batch(batch)
+    restored.add_batch(batch)
+    _assert_stores_identical(merged, restored)
+    specs = [AqpQuery("count", (Range("x", -1.0, 4.0),)),
+             AqpQuery("count", (Eq("code", 1.0),))]
+    _assert_rows_identical(merged.query(specs), restored.query(specs))
+
+
+def test_save_keep_k_retains_latest(rng, tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    store = _full_store(rng, n=2_000, capacity=128)
+    for _ in range(4):
+        store.add_batch(_batch(rng, n=500))
+        store.save(str(tmp_path), keep=2)
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    assert len(mgr.all_steps()) == 2           # keep-k GC ran
+    restored = TelemetryStore.load(str(tmp_path))
+    _assert_stores_identical(store, restored)
+
+
+# --- snapshot-vs-mutation consistency (satellite) ----------------------------
+
+def test_snapshot_never_persists_uncovered_sketch_rows(rng):
+    """A snapshot racing add_batch must see whole batches only: no persisted
+    sketch may claim more rows than its reservoir's n_seen (a restored store
+    would claim exact coverage it doesn't have).  Hammer to_state from a
+    second thread while the main thread streams batches."""
+    store = TelemetryStore(capacity=128, seed=0)
+    store.track_categorical("code")
+    snapshots = []
+    stop = threading.Event()
+
+    def snapshotter():
+        while not stop.is_set():
+            snapshots.append(store.to_state())
+
+    t = threading.Thread(target=snapshotter)
+    t.start()
+    try:
+        for _ in range(40):
+            store.add_batch(
+                {"code": rng.integers(0, 4, 2_000).astype(np.float32)})
+    finally:
+        stop.set()
+        t.join(5.0)
+    assert len(snapshots) >= 2
+    for tree, meta in snapshots:
+        cat = meta["categoricals"].get("code")
+        col = meta["columns"].get("code")
+        if cat is None or col is None:
+            continue
+        # whole-batch atomicity: coverage holds exactly, not just <=
+        assert cat["n_rows"] == col["n_seen"], (cat, col)
+        TelemetryStore.from_state(tree, meta)      # never raises
+
+
+def test_from_state_rejects_inconsistent_sketch(rng, tmp_path):
+    store = TelemetryStore(capacity=128, seed=0)
+    store.track_categorical("code")
+    store.add_batch({"code": rng.integers(0, 4, 1_000).astype(np.float32)})
+    tree, meta = store.to_state()
+    meta["categoricals"]["code"]["n_rows"] += 5    # claims unseen rows
+    with pytest.raises(ValueError, match="inconsistent snapshot"):
+        TelemetryStore.from_state(tree, meta)
+
+
+def test_from_state_rejects_unknown_format(rng):
+    store = TelemetryStore(capacity=64, seed=0)
+    tree, meta = store.to_state()
+    meta["format"] = 999
+    with pytest.raises(ValueError, match="format"):
+        TelemetryStore.from_state(tree, meta)
+
+
+# --- restored versions flow through subscribe (admission re-keying) ----------
+
+def test_restore_state_notifies_subscribers_and_rekeys_sessions(rng):
+    """restore_state on a live store must push the restored versions through
+    the subscribe listeners, so in-flight admission buckets re-key and flush
+    against (and report) the restored synopsis versions."""
+    store = TelemetryStore(capacity=256, seed=0)
+    store.add_batch({"x": rng.normal(0, 1, 4_000).astype(np.float32)})
+    snapshot = store.to_state()                    # x at version 1
+    store.add_batch({"x": rng.normal(0, 1, 1_000).astype(np.float32)})
+    assert store.columns["x"].version == 2
+
+    seen = []
+    store.subscribe(seen.append)
+    session = store.session(auto_flush=False, watermark=None, max_delay=None)
+    fut = session.submit(AqpQuery("count", (Range("x", -1.0, 1.0),)))
+    store.restore_state(*snapshot)                 # roll back to version 1
+    assert seen and seen[-1]["x"] == 1
+    assert session.stats()["invalidations"] == 1   # pending bucket re-keyed
+    session.flush()
+    assert fut.result().synopsis_version == 1
+    session.close()
+
+
+# --- dtype normalization regression (satellite) ------------------------------
+
+def test_sketch_counts_under_float32_codes_like_the_reservoir(rng):
+    """Regression: CategoricalSketch.add used to coerce to float64 while
+    Reservoir._coerce uses float32, so a code that is not exactly
+    float32-representable (16777217 rounds to 16777216) counted under
+    different codes on the exact path vs the KDE fallback."""
+    store = TelemetryStore(capacity=64, seed=0)
+    store.track_categorical("code")
+    store.add_batch({"code": np.full(8, 16777217.0)})   # float64 input
+    sketch = store.categoricals["code"]
+    # one code, and it is the float32 rounding the reservoir sampled
+    assert set(sketch.counts) == {16777216.0}
+    np.testing.assert_array_equal(store.columns["code"].sample(),
+                                  np.full(8, 16777216.0, np.float32))
+    r = store.query([AqpQuery("count", (Eq("code", 16777216.0),))])[0]
+    assert r.path == "exact" and r.estimate == 8.0
+    # the unrepresentable spelling holds no mass on the exact path, matching
+    # the KDE sample (where it cannot be distinguished either)
+    r2 = store.query([AqpQuery("count", (Eq("code", 16777217.0),))])[0]
+    assert r2.path == "exact" and r2.estimate == 0.0
+
+
+def test_count_min_uses_float32_codes(rng):
+    cm = CountMinSketch(seed=3)
+    cm.add(np.full(10, 16777217.0))                 # float64 input
+    assert cm.estimate(float(np.float32(16777216.0))) >= 10
+
+
+# --- count-min sketches (high-cardinality fallback) --------------------------
+
+def test_count_min_estimates_overcount_within_bound(rng):
+    cm = CountMinSketch(width=2048, depth=4, seed=1)
+    values = rng.integers(0, 5_000, 30_000).astype(np.float32)
+    cm.add(values)
+    assert cm.n_rows == 30_000 and cm.exact_for(30_000)
+    for code in (0.0, 17.0, 4_999.0):
+        true = int((values == code).sum())
+        est = cm.estimate(code)
+        assert est >= true                          # CM never undercounts
+        assert est - true <= 4 * cm.err_bound()     # and stays bounded
+
+
+def test_count_min_store_path_and_wide_window_fallback(rng):
+    store = TelemetryStore(capacity=256, seed=0)
+    store.track_categorical("wide", kind="cm")
+    values = rng.integers(0, 5_000, 20_000).astype(np.float32)
+    store.add_batch({"wide": values})
+    cat = store.stats()["categoricals"]["wide"]
+    assert cat["kind"] == "cm" and cat["exact"] is True
+    assert not cat["overflowed"]                    # CM never overflows
+
+    r = store.query([AqpQuery("count", (Eq("wide", 137.0),))],
+                    selector="silverman")[0]
+    assert r.path == "exact:cm"
+    assert r.estimate >= int((values == 137.0).sum())
+    # a window too wide to enumerate falls back to the KDE, not garbage
+    wide_eq = AqpQuery("count", (Eq("wide", 2_500.0, halfwidth=1_000.0),))
+    assert store.query([wide_eq], selector="silverman")[0].path == "range1d"
+    # late coverage gate: a second un-sketched stream disables the path
+    store2 = TelemetryStore(capacity=256, seed=0)
+    store2.add_batch({"wide": values})
+    store2.track_categorical("wide", kind="cm")     # AFTER data
+    store2.add_batch({"wide": values[:100]})
+    r2 = store2.query([AqpQuery("count", (Eq("wide", 137.0),))],
+                      selector="silverman")[0]
+    assert r2.path == "range1d"
+
+
+def test_count_min_merge_is_additive(rng):
+    s1 = TelemetryStore(capacity=128, seed=0)
+    s2 = TelemetryStore(capacity=128, seed=1)
+    for st in (s1, s2):
+        st.track_categorical("wide", kind="cm")     # same column -> same seed
+    v1 = rng.integers(0, 1_000, 8_000).astype(np.float32)
+    v2 = rng.integers(0, 1_000, 4_000).astype(np.float32)
+    s1.add_batch({"wide": v1})
+    s2.add_batch({"wide": v2})
+    m = s1.merge(s2)
+    sk = m.categoricals["wide"]
+    assert sk.n_rows == 12_000 and sk.exact_for(12_000)
+    true = int((v1 == 5.0).sum() + (v2 == 5.0).sum())
+    assert sk.estimate(5.0) >= true
+    with pytest.raises(ValueError, match="geometry"):
+        CountMinSketch(width=64, seed=0).merge(CountMinSketch(width=128,
+                                                              seed=0))
+
+
+def test_exact_sketch_state_roundtrip_overflowed(rng):
+    sk = CategoricalSketch(max_codes=8)
+    sk.add(np.arange(64, dtype=np.float32))          # overflow
+    back = CategoricalSketch.from_state(*sk.state())
+    assert back.overflowed and back.n_rows == 64 and back.counts == {}
+
+
+# --- review regressions ------------------------------------------------------
+
+def test_state_roundtrip_with_nan_codes(rng):
+    """A NaN row in a tracked categorical column must not make save()
+    crash: state() serializes counts by items() (NaN keys can never be
+    looked up again, nan != nan)."""
+    store = TelemetryStore(capacity=64, seed=0)
+    store.track_categorical("code")
+    store.add_batch({"code": np.asarray([1.0, 2.0, np.nan], np.float32)})
+    tree, meta = store.to_state()                    # must not raise
+    restored = TelemetryStore.from_state(tree, meta)
+    sk = restored.categoricals["code"]
+    assert sk.n_rows == 3
+    assert sk.range_terms(0.5, 2.5) == (2, pytest.approx(3.0))
+
+
+def test_count_min_range_dedupes_float32_aliased_codes():
+    """Consecutive ints above 2^24 alias to one float32 code; a window
+    covering both must count the shared cell once, not per-int."""
+    cm = CountMinSketch(width=256, depth=4, seed=0)
+    cm.add(np.full(10, 16777216.0, np.float32))
+    cnt, _ = cm.range_terms(16777214.5, 16777217.5)  # ints ..216 and ..217
+    assert cnt == 10                                 # not 20
+
+
+def test_count_min_restore_keeps_hash_parameters(rng, tmp_path):
+    """The hash multipliers are persisted, not re-derived from the seed on
+    load — a table read through different hashes is silently wrong.  A
+    restored sketch must also still merge with the original (geometry is
+    compared on the actual parameters)."""
+    store = TelemetryStore(capacity=128, seed=0)
+    store.track_categorical("wide", kind="cm")
+    values = rng.integers(0, 2_000, 10_000).astype(np.float32)
+    store.add_batch({"wide": values})
+    store.save(str(tmp_path))
+    back = TelemetryStore.load(str(tmp_path)).categoricals["wide"]
+    orig = store.categoricals["wide"]
+    np.testing.assert_array_equal(back._mul, orig._mul)
+    np.testing.assert_array_equal(back._add, orig._add)
+    assert back.estimate(17.0) == orig.estimate(17.0)
+    merged = orig.merge(back)                        # same parameters: fine
+    assert merged.n_rows == 20_000
+
+
+def test_to_state_consistent_under_concurrent_queries(rng):
+    """Snapshots race live query traffic: cache hits reorder the LRU list
+    while to_state serializes it, which must never blow up mid-iteration."""
+    from repro.core import AqpQuery, Range
+
+    store = TelemetryStore(capacity=128, seed=0)
+    store.add_batch({"x": rng.normal(0, 1, 4_000).astype(np.float32),
+                     "y": rng.normal(0, 1, 4_000).astype(np.float32)})
+    stop = threading.Event()
+    errs = []
+
+    def querier():
+        try:
+            i = 0
+            while not stop.is_set():
+                col = ("x", "y")[i % 2]
+                sel = ("plugin", "silverman")[i % 2]
+                store.query([AqpQuery("count", (Range(col, -1.0, 1.0),))],
+                            selector=sel)
+                i += 1
+        except BaseException as exc:          # pragma: no cover
+            errs.append(exc)
+
+    t = threading.Thread(target=querier)
+    t.start()
+    try:
+        for _ in range(30):
+            tree, meta = store.to_state()
+            TelemetryStore.from_state(tree, meta)
+    finally:
+        stop.set()
+        t.join(10.0)
+    assert not errs

@@ -1,0 +1,135 @@
+"""Progressive tiered execution (data/aqp_store.py TieredReservoir +
+core/aqp_query.py progressive mode): latency of a coarse first answer vs the
+full-accuracy pass, and the CI-width convergence it buys.
+
+A Verdict-style tier ladder keeps geometric sub-samples of the reservoir
+(tier 0 is 1/2^(n_tiers-1) of the full sample), each an independent uniform
+sample of the whole stream.  Progressive mode answers every query on tier 0
+first — same estimator, same confidence machinery, just less data — then
+re-answers on each larger tier until the top tier reproduces the plain
+batch answer bit-for-bit.  The trade this benchmark quantifies:
+
+  tier0 — run_compiled(compiled, tier=0): O(tier0_size) kernel passes
+  full  — run_compiled(compiled):         O(capacity) kernel passes
+
+Always asserted: the final progressive round is bit-identical to plain
+execute (estimates AND confidence intervals), and the median CI width never
+widens from one round to the next.  Outside quick mode the tier-0 pass must
+be >= 5x faster (p50) than the full pass at 200k rows.
+
+Set REPRO_BENCH_QUICK=1 (or `python -m benchmarks.run --quick`) for the CI
+smoke configuration.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from .common import emit
+
+ROWS = 200_000
+CAPACITY = 16_384
+N_TIERS = 6          # tier 0 holds CAPACITY >> 5 = 512 rows
+N_QUERIES = 256
+REPS = 7
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def _build(n: int, capacity: int, n_tiers: int):
+    from repro.data import TelemetryStore
+
+    rng = np.random.default_rng(0)
+    store = TelemetryStore(capacity=capacity, seed=0)
+    store.track_tiered("loss", n_tiers=n_tiers)
+    store.track_tiered(("loss", "latency_ms"), n_tiers=n_tiers)
+    store.add_batch({
+        "loss": rng.gamma(3.0, 0.7, n).astype(np.float32),
+        "latency_ms": np.where(rng.random(n) < 0.8, rng.normal(40, 8, n),
+                               rng.normal(160, 30, n)).astype(np.float32),
+    })
+    return store
+
+
+def _specs(n_queries: int):
+    from repro.core import AqpQuery, Box, Range
+
+    rng = np.random.default_rng(7)
+    ops = ["count", "sum", "avg"]
+    specs = []
+    for i in range(n_queries):
+        op = ops[int(rng.integers(3))]
+        if i % 4 == 1:
+            lo = [float(rng.uniform(0, 4)), float(rng.uniform(20, 60))]
+            hi = [lo[0] + 2.0, lo[1] + 60.0]
+            specs.append(AqpQuery(
+                op, (Box(("loss", "latency_ms"), tuple(lo), tuple(hi)),),
+                target=None if op == "count" else "latency_ms"))
+        else:
+            a = float(rng.uniform(0, 5))
+            specs.append(AqpQuery(op, (Range("loss", a, a + 2.0),),
+                                  target=None if op == "count" else "loss"))
+    return specs
+
+
+def run() -> dict:
+    quick = _quick()
+    n = ROWS if not quick else 30_000
+    capacity = CAPACITY if not quick else 2_048
+    n_tiers = N_TIERS if not quick else 4
+    specs = _specs(N_QUERIES if not quick else 64)
+
+    store = _build(n, capacity, n_tiers)
+    engine = store.shared_engine()
+
+    # --- convergence: one progressive sweep, median CI width per round ------
+    rounds = list(engine.execute(specs, mode="progressive"))
+    assert len(rounds) == n_tiers
+    med_widths = []
+    for _, rows in rounds:
+        widths = [r.ci_width for r in rows if np.isfinite(r.ci_width)]
+        assert widths, "progressive rounds must report finite CIs"
+        med_widths.append(float(np.median(widths)))
+    for a, b in zip(med_widths, med_widths[1:]):
+        assert a >= b, f"median CI width widened across rounds: {med_widths}"
+
+    want = engine.execute(specs)
+    for r, w in zip(rounds[-1][1], want):
+        assert r.estimate == w.estimate and r.path == w.path, (r, w)
+        assert (r.ci_lo, r.ci_hi) == (w.ci_lo, w.ci_hi), (r, w)
+
+    # --- latency: coarse tier-0 pass vs the full pass (both pre-compiled
+    # and pre-fitted by the sweep above, so this times kernels, not jit) ----
+    compiled = engine.compile(specs)
+    t0_times, full_times = [], []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        engine.run_compiled(compiled, tier=0)
+        t0_times.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        engine.run_compiled(compiled)
+        full_times.append(time.perf_counter() - t0)
+    tier0_p50 = float(np.median(t0_times))
+    full_p50 = float(np.median(full_times))
+    ratio = full_p50 / tier0_p50
+
+    tier0_rows = capacity >> (n_tiers - 1)
+    emit(f"aqp_progressive_tier0_n{n}", tier0_p50 * 1e6,
+         f"{len(specs)} queries on {tier0_rows}-row tier, "
+         f"median CI width {med_widths[0]:.1f}")
+    emit(f"aqp_progressive_full_n{n}", full_p50 * 1e6,
+         f"{len(specs)} queries on {capacity}-row sample, "
+         f"{ratio:.1f}x tier-0 latency, median CI width {med_widths[-1]:.1f}")
+
+    if not quick:
+        assert ratio >= 5.0, \
+            f"tier-0 pass should be >= 5x faster than full, got {ratio:.2f}x"
+    return {"ratio": ratio, "med_widths": med_widths}
+
+
+if __name__ == "__main__":
+    run()

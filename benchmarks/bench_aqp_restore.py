@@ -17,7 +17,9 @@ Answers must be bit-identical across the original, cold, and warm stores
 (same capacity/seed/stream -> same reservoirs -> same synopses), with the
 exact categorical path still active after restore — both asserted always.
 Outside quick mode the warm leg must also beat the cold leg >= 1.5x and
-serve the batch with zero synopsis-cache misses.
+serve the batch with zero synopsis-cache misses and zero plan-cache misses
+(the snapshot persists the PlanCache keys, so a restored engine replans
+nothing it had already planned).
 
 Set REPRO_BENCH_QUICK=1 (or `python -m benchmarks.run --quick`) for the CI
 smoke configuration.
@@ -118,6 +120,7 @@ def run() -> dict:
         warm_rows = warm.query(specs)
         t_warm = time.perf_counter() - t0
         warm_misses = warm.cache.stats()["misses"]
+        warm_plan_misses = warm.shared_engine().plans.stats()["misses"]
     finally:
         shutil.rmtree(snap_dir, ignore_errors=True)
 
@@ -135,11 +138,14 @@ def run() -> dict:
          f"re-ingest {n:,} rows + refit {len(specs)} queries")
     emit(f"aqp_restore_warm_n{n}", t_warm * 1e6,
          f"load + query, {speedup:.1f}x over cold refit, "
-         f"{warm_misses} cache misses")
+         f"{warm_misses} cache misses, {warm_plan_misses} plan misses")
 
     if not quick:
         assert warm_misses == 0, \
             f"warm start must not refit, got {warm_misses} cache misses"
+        assert warm_plan_misses == 0, \
+            "warm start must not replan: the checkpoint carries the " \
+            f"PlanCache keys, got {warm_plan_misses} plan misses"
         assert speedup >= 1.5, \
             f"warm start should beat cold refit >= 1.5x, got {speedup:.2f}x"
     return {"speedup": speedup, "t_save_us": t_save * 1e6}

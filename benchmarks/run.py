@@ -4,8 +4,8 @@
 
 Prints ``name,us_per_call,derived`` CSV lines.  --quick sets
 REPRO_BENCH_QUICK=1, which suites honouring it (aqp_boxes, aqp_engine,
-aqp_serve, aqp_restore) read at run() time to shrink to a CI-smoke
-configuration.
+aqp_serve, aqp_restore, aqp_progressive) read at run() time to shrink to a
+CI-smoke configuration.
 """
 from __future__ import annotations
 
@@ -16,7 +16,7 @@ import time
 
 SUITES = ("paper_validation", "plugin", "lscv_h", "lscv_H", "table3",
           "kernels", "aqp_batch", "aqp_boxes", "aqp_engine", "aqp_serve",
-          "aqp_restore", "roofline", "serving")
+          "aqp_restore", "aqp_progressive", "roofline", "serving")
 
 
 def main() -> None:

@@ -17,7 +17,9 @@ Public API:
 from .aqp import (KDESynopsis, Query, QueryBatch, batch_query_1d, count_1d,
                   count_1d_numeric, count_box_H, count_box_diag, sum_1d,
                   sum_1d_numeric, sum_box_H, sum_box_diag)
-from .aqp_admission import AdmissionFull, AdmissionQueue, AqpSession
+from .aqp_admission import (DEFAULT_PRIORITY_TIERS, AdmissionFull,
+                            AdmissionQueue, AqpSession)
+from .aqp_ci import DEFAULT_CI_LEVEL, norm_ppf, t_ppf
 from .aqp_multid import (BoxQuery, BoxQueryBatch, batch_query_box,
                          batch_query_box_grouped, batch_query_qmc)
 from .aqp_query import (AqpQuery, AqpResult, Box, Eq, GroupBy, PlanCache,
@@ -30,6 +32,7 @@ __all__ = [
     "KDESynopsis", "Query", "QueryBatch", "BoxQuery", "BoxQueryBatch",
     "AqpQuery", "AqpResult", "QueryEngine", "Range", "Box", "Eq", "GroupBy",
     "AqpSession", "AdmissionQueue", "AdmissionFull", "PlanCache",
+    "DEFAULT_PRIORITY_TIERS", "DEFAULT_CI_LEVEL", "norm_ppf", "t_ppf",
     "batch_query_1d", "batch_query_box", "batch_query_box_grouped",
     "batch_query_qmc",
     "count_1d", "count_1d_numeric", "count_box_H", "count_box_diag",

@@ -10,14 +10,24 @@ futures back, while the session coalesces pending specs *across callers* into
 micro-batches and flushes them through the engine's planning/execution core.
 
   `AdmissionQueue` — pure bookkeeping: pending entries bucketed by
-                     (column tuple, selector, synopsis version), per-bucket
-                     oldest-submit timestamps, queue-depth accounting.  No
-                     locking, no execution — the session owns both.
+                     (column tuple, selector, tier, synopsis version),
+                     per-bucket oldest-submit timestamps, queue-depth
+                     accounting.  No locking, no execution — the session
+                     owns both.
   `AqpSession`     — the long-lived, thread-safe admission surface:
 
       session = store.session(watermark=32, max_delay=0.005)
       fut = session.submit(AqpQuery("count", (Range("loss", 1, 4),)))
       fut.result()          # AqpResult (list of them for GROUP BY specs)
+
+Priority classes: a submission's `priority` maps to a tier budget over the
+store's `TieredReservoir`s ("coarse" -> tier 0, "full" -> the whole sample
+by default; configurable via `priority_tiers`).  The tier rides in the
+bucket key, so a fast-coarse ticket never queues behind — or coalesces
+into — a full-reservoir pass: it flushes on its own small-sample plan and
+reports wider confidence intervals, trading accuracy for latency exactly
+the way the paper frames AQP.  Columns without tiered reservoirs ignore
+the budget (the tier normalizes to the full sample).
 
 A bucket flushes when it reaches `watermark` pending queries (inline, on the
 submitting thread), when its oldest entry ages past `max_delay` (a background
@@ -55,6 +65,10 @@ FLUSH_DEADLINE = "deadline"
 FLUSH_MANUAL = "manual"
 FLUSH_CLOSE = "close"
 
+# priority class -> tier budget: "coarse" answers from the smallest tier of
+# a TieredReservoir, "full" from the whole sample (None = no budget)
+DEFAULT_PRIORITY_TIERS: Dict[str, Optional[int]] = {"full": None, "coarse": 0}
+
 
 class AdmissionFull(RuntimeError):
     """submit() refused: the session is at `max_pending` and its overflow
@@ -88,12 +102,14 @@ class _Pending:
         self.submitted_at = submitted_at
 
 
-BucketKey = Tuple[object, str, int]     # (column-or-tuple, selector, version)
+# (column-or-tuple, selector, tier-or-None, version)
+BucketKey = Tuple[object, str, Optional[int], int]
 
 
 class AdmissionQueue:
-    """Pending micro-batches keyed by (column tuple, selector, synopsis
-    version).  Pure data structure — the owning session serializes access."""
+    """Pending micro-batches keyed by (column tuple, selector, tier,
+    synopsis version).  Pure data structure — the owning session serializes
+    access."""
 
     def __init__(self):
         self.buckets: "OrderedDict[BucketKey, List[_Pending]]" = OrderedDict()
@@ -166,13 +182,18 @@ class AqpSession:
                  BY) is admitted once the queue is empty rather than
                  deadlocking.  Both outcomes are counted in `stats()`.
     time_fn    — injectable clock (tests drive deadlines deterministically)
+    priority_tiers — {class name: tier budget} (default: "full" -> None,
+                 "coarse" -> 0); `submit(query, priority=...)` picks one
+    default_priority — class used when submit() gets no explicit priority
     """
 
     def __init__(self, engine: QueryEngine, watermark: Optional[int] = 32,
                  max_delay: Optional[float] = 0.005, auto_flush: bool = True,
                  selector: Optional[str] = None, backend: Optional[str] = None,
                  max_pending: Optional[int] = None, overflow: str = "block",
-                 time_fn: Callable[[], float] = time.monotonic):
+                 time_fn: Callable[[], float] = time.monotonic,
+                 priority_tiers: Optional[Dict[str, Optional[int]]] = None,
+                 default_priority: str = "full"):
         if watermark is not None and watermark < 1:
             raise ValueError(f"watermark must be >= 1, got {watermark}")
         if max_delay is not None and max_delay < 0:
@@ -182,6 +203,14 @@ class AqpSession:
         if overflow not in ("block", "shed"):
             raise ValueError(f"overflow must be 'block' or 'shed', "
                              f"got {overflow!r}")
+        self.priority_tiers = dict(priority_tiers
+                                   if priority_tiers is not None
+                                   else DEFAULT_PRIORITY_TIERS)
+        if default_priority not in self.priority_tiers:
+            raise ValueError(
+                f"default_priority {default_priority!r} not in "
+                f"priority_tiers {sorted(self.priority_tiers)}")
+        self.default_priority = default_priority
         self.engine = engine
         self.watermark = watermark
         self.max_delay = max_delay
@@ -206,6 +235,7 @@ class AqpSession:
         self.shed = 0                 # submits refused at max_pending
         self.max_depth = 0
         self.flush_reasons: Dict[str, int] = {}
+        self.priority_counts: Dict[str, int] = {}
         self._batch_total = 0
         store = engine.store
         unsub = getattr(store, "subscribe", None)
@@ -230,17 +260,28 @@ class AqpSession:
 
     # -- client surface ------------------------------------------------------
 
-    def submit(self, query: AqpQuery) -> Future:
+    def submit(self, query: AqpQuery,
+               priority: Optional[str] = None) -> Future:
         """Admit one spec; returns a future resolving to its `AqpResult`
         (a list of them for GROUP BY specs, in category order).  Compilation
         and synopsis-key resolution run synchronously, so malformed specs and
-        unknown columns raise here, not inside the future."""
+        unknown columns raise here, not inside the future.
+
+        `priority` picks a class from `priority_tiers` (default
+        `default_priority`): its tier budget keys the pending bucket, so
+        coarse-tier tickets flush on small-sample plans without queueing
+        behind full-accuracy passes."""
+        name = self.default_priority if priority is None else priority
+        if name not in self.priority_tiers:
+            raise ValueError(f"unknown priority {name!r}; "
+                             f"have {sorted(self.priority_tiers)}")
+        tier = self.priority_tiers[name]
         parts = self.engine.compile(query)
-        resolver = self.engine.resolver(self.selector)
+        resolver = self.engine.resolver(self.selector, tier=tier)
         keyed = []
         for c in parts:
-            (colkey, sel), c2, version = resolver.key_for(c)
-            keyed.append(((colkey, sel, version), c2))
+            key3, c2, version = resolver.key_for(c)
+            keyed.append((key3 + (version,), c2))
         ticket = _Ticket(len(parts), single=query.group_by is None)
         due: List[BucketKey] = []
         with self._lock:
@@ -253,17 +294,25 @@ class AqpSession:
                 if self.watermark is not None and size >= self.watermark:
                     due.append(key)
             self.submitted += 1
+            self.priority_counts[name] = self.priority_counts.get(name, 0) + 1
             self.max_depth = max(self.max_depth, self._queue.depth)
             if self._auto_flush and self.max_delay is not None \
                     and self._thread is None:
                 self._start_flusher()
             self._wakeup.notify_all()
+        # Past-deadline buckets flush first (oldest-first, via poll): without
+        # this, a lone sub-watermark ticket whose deadline has passed would
+        # keep waiting for the background flusher even while fresh submits
+        # prove the session is alive.
+        if self.max_delay is not None:
+            self.poll()
         for key in due:
             self._flush_key(key, FLUSH_WATERMARK)
         return ticket.future
 
-    def submit_many(self, queries: Sequence[AqpQuery]) -> List[Future]:
-        return [self.submit(q) for q in queries]
+    def submit_many(self, queries: Sequence[AqpQuery],
+                    priority: Optional[str] = None) -> List[Future]:
+        return [self.submit(q, priority=priority) for q in queries]
 
     def execute(self, queries: Union[AqpQuery, Sequence[AqpQuery]]):
         """Submit-and-wait convenience: admit the specs, flush anything still
@@ -340,6 +389,7 @@ class AqpSession:
                 "blocked": self.blocked,
                 "shed": self.shed,
                 "max_depth": self.max_depth,
+                "priorities": dict(self.priority_counts),
                 "plan_cache": self.engine.plans.stats(),
             }
 
@@ -418,11 +468,11 @@ class AqpSession:
         against the fresh synopsis version."""
         with self._lock:
             for key in list(self._queue.buckets):
-                colkey, sel, version = key
+                colkey, sel, tier, version = key
                 fresh = bumped.get(colkey)
                 if fresh is not None and fresh != version:
                     self.invalidations += self._queue.rekey(
-                        key, (colkey, sel, fresh))
+                        key, (colkey, sel, tier, fresh))
 
     def _flush_key(self, key: BucketKey, reason: str) -> int:
         with self._lock:
@@ -431,7 +481,7 @@ class AqpSession:
                 self._wakeup.notify_all()     # free submitters at max_pending
         if not pendings:
             return 0
-        self._run_flush(pendings, reason)
+        self._run_flush(key, pendings, reason)
         return 1
 
     def _flush_all(self, reason: str) -> int:
@@ -440,14 +490,17 @@ class AqpSession:
             if batches:
                 self._wakeup.notify_all()     # free submitters at max_pending
         total = 0
-        for _, pendings in batches:
-            self._run_flush(pendings, reason)
+        for key, pendings in batches:
+            self._run_flush(key, pendings, reason)
             total += len(pendings)
         return total
 
-    def _run_flush(self, pendings: List[_Pending], reason: str) -> None:
+    def _run_flush(self, key: BucketKey, pendings: List[_Pending],
+                   reason: str) -> None:
         """Execute one micro-batch through the engine core and scatter the
-        results (or the failure) onto the waiting tickets."""
+        results (or the failure) onto the waiting tickets.  The bucket key
+        carries the tier budget, so a coarse-priority batch executes on its
+        tier's plan rather than the full sample."""
         compiled = []
         for i, p in enumerate(pendings):
             p.compiled.slot = i
@@ -456,7 +509,8 @@ class AqpSession:
         results: List[AqpResult] = []
         try:
             results = self.engine.run_compiled(compiled, selector=self.selector,
-                                               backend=self.backend)
+                                               backend=self.backend,
+                                               tier=key[2])
         except BaseException as exc:            # surface through the futures
             error = exc
         done: List[_Ticket] = []

@@ -331,24 +331,25 @@ def _qmc_shared_terms(x: jax.Array, H: jax.Array, glo: jax.Array,
     return jax.vmap(one)(lo, hi, tgt)
 
 
-def batch_query_qmc(x: jax.Array, H: jax.Array, lo: np.ndarray, hi: np.ndarray,
-                    tgt: np.ndarray, ops: np.ndarray, scale: float,
-                    n_qmc: int = 4096) -> jax.Array:
-    """Answer a mixed box batch against one full-H synopsis in one KDE pass.
+def _qmc_plan(x_host: np.ndarray, H: np.ndarray, lo: np.ndarray,
+              hi: np.ndarray, n_qmc: int):
+    """Host-side quasi-MC planning, shared by the estimate pass and the
+    subsample-CI pass (repro.core.aqp_ci) so both reduce over the same
+    clipped boxes and node set.
 
-    lo/hi: (q, d) host arrays (the bounding box and node budget are planned on
-    the host).  Axes wider than the synopsis support are clipped to
-    support +- 6 per-axis sigma ("unconstrained" axes from SUM/AVG targets);
-    essentially all Gaussian mass lies inside, and it keeps the shared node
-    set finite.  Small boxes inside a large bounding box see fewer effective
-    nodes, so the node budget grows (up to MAX_QMC_NODES) when the narrowest
-    box covers a small fraction of the group hull.
+    Axes wider than the synopsis support are clipped to support +- 6
+    per-axis sigma ("unconstrained" axes from SUM/AVG targets); essentially
+    all Gaussian mass lies inside, and it keeps the shared node set finite.
+    Small boxes inside a large bounding box see fewer effective nodes, so the
+    node budget grows (up to MAX_QMC_NODES) when the narrowest box covers a
+    small fraction of the group hull.
+
+    Returns (glo, ghi, clo, chi, n_nodes) float64 host arrays, or None when
+    every box is zero-measure.
     """
     lo = np.asarray(lo, np.float64).reshape(lo.shape[0], -1)
     hi = np.asarray(hi, np.float64).reshape(hi.shape[0], -1)
-    d = x.shape[1]
     sig = np.sqrt(np.diag(np.asarray(H, np.float64)))
-    x_host = np.asarray(x, np.float64)
     slo = x_host.min(axis=0) - 6.0 * sig
     shi = x_host.max(axis=0) + 6.0 * sig
     clo = np.clip(lo, slo[None, :], shi[None, :])
@@ -357,7 +358,7 @@ def batch_query_qmc(x: jax.Array, H: jax.Array, lo: np.ndarray, hi: np.ndarray,
     ghi = chi.max(axis=0)
     vol_g = float(np.prod(ghi - glo))
     if vol_g <= 0.0:                       # every box is zero-measure
-        return jnp.zeros((lo.shape[0],), jnp.float32)
+        return None
     ratios = np.prod(chi - clo, axis=1) / vol_g
     ratios = ratios[ratios > 0]
     min_ratio = float(ratios.min()) if ratios.size else 1.0
@@ -367,6 +368,22 @@ def batch_query_qmc(x: jax.Array, H: jax.Array, lo: np.ndarray, hi: np.ndarray,
     # retracing _qmc_shared_terms and churning the Halton cache on each call.
     n_nodes = 1 << max(int(np.ceil(np.log2(max(n_nodes, 1)))),
                        int(np.ceil(np.log2(n_qmc))))
+    return glo, ghi, clo, chi, n_nodes
+
+
+def batch_query_qmc(x: jax.Array, H: jax.Array, lo: np.ndarray, hi: np.ndarray,
+                    tgt: np.ndarray, ops: np.ndarray, scale: float,
+                    n_qmc: int = 4096) -> jax.Array:
+    """Answer a mixed box batch against one full-H synopsis in one KDE pass.
+
+    lo/hi: (q, d) host arrays; the bounding box and node budget are planned
+    on the host by `_qmc_plan` (support clipping, shared-node budget).
+    """
+    d = x.shape[1]
+    plan = _qmc_plan(np.asarray(x, np.float64), np.asarray(H), lo, hi, n_qmc)
+    if plan is None:                       # every box is zero-measure
+        return jnp.zeros((np.asarray(lo).shape[0],), jnp.float32)
+    glo, ghi, clo, chi, n_nodes = plan
 
     cnt_raw, sum_raw = _qmc_shared_terms(
         x, H, jnp.asarray(glo, jnp.float32), jnp.asarray(ghi, jnp.float32),

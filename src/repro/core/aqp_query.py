@@ -42,6 +42,8 @@ import numpy as np
 
 from .aqp import (OP_CODES, OP_COUNT, OP_SUM, KDESynopsis,
                   batch_query_1d, canonical_selector)
+from .aqp_ci import (DEFAULT_CI_LEVEL, moments_1d, moments_box, norm_ppf,
+                     qmc_subsample_se, se_from_moments, t_ppf)
 from .aqp_multid import (batch_query_box, batch_query_box_grouped,
                          batch_query_qmc)
 
@@ -49,6 +51,33 @@ ColumnKey = Union[None, str, Tuple[str, ...]]
 
 EQ_HALFWIDTH = 0.5   # dictionary codes are unit-spaced: `== v` is v +- 1/2
 WIDE = 1e30          # "unconstrained axis": Phi saturates to {0,1}, phi to 0
+
+
+# --- tier addressing (TieredReservoir, repro.data.aqp_store) ----------------
+
+def _effective_tier(res, tier: Optional[int]) -> Optional[int]:
+    """Normalize a tier request against a reservoir: None (or a plain
+    untiered reservoir) means the full sample, and a request for the top
+    tier of a `TieredReservoir` collapses to None too — the top tier IS the
+    full sample, so full-accuracy requests share cache keys, plans, and
+    jitted executables with untiered execution."""
+    n_tiers = getattr(res, "n_tiers", None)
+    if tier is None or n_tiers is None:
+        return None
+    t = max(0, min(int(tier), n_tiers - 1))
+    return None if t >= n_tiers - 1 else t
+
+
+def _tier_key(col, tier: Optional[int]):
+    """Suffix a synopsis-cache column key with the tier so tiered synopses
+    coexist with the full-sample entry.  '#' cannot appear in a tracked
+    column tuple's joint (names are user column names), and the suffixed key
+    round-trips through the checkpoint cache serialization untouched."""
+    if tier is None:
+        return col
+    if isinstance(col, tuple):
+        return col + (f"#tier{tier}",)
+    return f"{col}#tier{tier}"
 
 
 # --- predicate terms --------------------------------------------------------
@@ -175,12 +204,22 @@ class AqpResult:
                        answered by the factored grouped kernel; "exact"
                        answers come from a CategoricalSketch, "exact:cm"
                        from a bounded-error CountMinSketch — not the KDE)
-    rel_width        — accuracy proxy: the narrowest constrained axis measured
-                       in bandwidths, min_j (hi_j - lo_j) / h_j.  Small values
-                       (below ~2) mean the kernel smoothing dominates the mass
-                       in the box, so expect higher relative error; inf when
-                       no axis is constrained (whole-table SUM/AVG) and for
-                       "exact" answers (no smoothing at all).
+    ci_lo / ci_hi    — confidence interval at `ci_level`, computed per path:
+                       analytic product-kernel variance for range1d/box (and
+                       box:grouped), subsample (batch-means) variance for
+                       qmc, exact zero width for "exact", and the count-min
+                       error bound for "exact:cm".  Infinite endpoints mean
+                       the estimate carries no finite error bound (e.g. AVG
+                       over an effectively empty selection).
+    ci_level         — nominal coverage of [ci_lo, ci_hi] (default 0.95)
+    n_effective      — rows behind the answer: the retained sample size for
+                       the KDE paths (the tier size under a tier budget),
+                       the sketch's full row count for the exact paths
+    rel_width        — DEPRECATED accuracy proxy (narrowest constrained axis
+                       in bandwidths, min_j (hi_j - lo_j) / h_j); kept for
+                       one release, prefer the CI fields.  0.0 on the exact
+                       paths (no smoothing at all); inf only when no axis is
+                       constrained (whole-table SUM/AVG).
     synopsis_version — reservoir version of the synopsis that answered it
                        (0 when executed against bare synopses, not a store)
     group            — group_by category code (None outside GROUP BY)
@@ -192,6 +231,14 @@ class AqpResult:
     synopsis_version: int
     group: Optional[float] = None
     query: Optional[AqpQuery] = None
+    ci_lo: float = float("nan")
+    ci_hi: float = float("nan")
+    ci_level: float = DEFAULT_CI_LEVEL
+    n_effective: int = 0
+
+    @property
+    def ci_width(self) -> float:
+        return self.ci_hi - self.ci_lo
 
     def __float__(self) -> float:
         return self.estimate
@@ -380,6 +427,13 @@ class PlanCache:
     def put(self, key, version: int, plan: _GroupPlan) -> None:
         self._entries[key] = (version, plan)
 
+    def entries(self) -> List[Tuple[object, int]]:
+        """[(key, version)] for every live entry — the checkpoint
+        serializer's view (plans rebuild from persisted synopses on
+        restore, so only the keys need to be durable)."""
+        return [(key, version) for key, (version, _plan)
+                in self._entries.items()]
+
     def stats(self) -> Dict[str, int]:
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._entries)}
@@ -393,13 +447,19 @@ class _StoreResolver:
 
     `key_for` is the cheap half (no synopsis fit) — the admission layer uses
     it to bucket pending queries without forcing a fit at submit time.
+
+    `tier` (a `TieredReservoir` tier index, None for the full sample) rides
+    in the group key, so a coarse-tier flush and a full-accuracy flush over
+    the same column resolve to distinct plans and synopses.
     """
 
     def __init__(self, store, selector: str,
-                 plans: Optional[PlanCache] = None):
+                 plans: Optional[PlanCache] = None,
+                 tier: Optional[int] = None):
         self.store = store
         self.selector = selector
         self.plans = plans
+        self.tier = tier
 
     def key_for(self, c: _Compiled):
         """(group key, reordered compiled, reservoir version) — no fitting."""
@@ -415,7 +475,7 @@ class _StoreResolver:
             if res is None:
                 raise KeyError(f"unknown column {col!r}; "
                                f"have {sorted(self.store.columns)}")
-            return (col, sel), c, res.version
+            return (col, sel, _effective_tier(res, self.tier)), c, res.version
         cols = c.cols
         joints = self.store.joints
         if cols not in joints:
@@ -427,7 +487,8 @@ class _StoreResolver:
                 raise KeyError(f"no joint reservoir for columns {cols!r}; "
                                f"call track_joint({cols!r}) before add_batch "
                                f"(have {sorted(joints)})")
-        return (cols, sel), c, joints[cols].version
+        res = joints[cols]
+        return (cols, sel, _effective_tier(res, self.tier)), c, res.version
 
     def plan_for(self, key, version: int) -> _GroupPlan:
         """Fit-or-fetch the group's plan for the given reservoir version."""
@@ -435,11 +496,11 @@ class _StoreResolver:
             plan = self.plans.get(key, version)
             if plan is not None:
                 return plan
-        col, sel = key
+        col, sel, tier = key
         if isinstance(col, tuple):
-            syn = self.store.joint_synopsis(col, sel)
+            syn = self.store.joint_synopsis(col, sel, tier=tier)
         else:
-            syn = self.store.synopsis(col, sel)
+            syn = self.store.synopsis(col, sel, tier=tier)
         plan = _make_plan(syn)
         if self.plans is not None:
             self.plans.put(key, version, plan)
@@ -452,10 +513,13 @@ class _StoreResolver:
     def try_exact(self, c: _Compiled):
         """Sketch answer for an all-Eq single-column query, when the column
         carries a categorical sketch covering its whole stream; returns
-        (estimate, version, path) or None (KDE fallback).  The path is
-        "exact" for a `CategoricalSketch` and "exact:cm" for the
-        bounded-error `CountMinSketch`; a count-min window too wide to
-        enumerate (range_terms -> None) falls back to the KDE too."""
+        (estimate, version, path, ci_lo, ci_hi, n_effective) or None (KDE
+        fallback).  The path is "exact" for a `CategoricalSketch` (zero CI
+        width) and "exact:cm" for the bounded-error `CountMinSketch` (CI
+        from the deterministic over-count bound — count-min never
+        under-counts, so the interval is one-sided for COUNT); a count-min
+        window too wide to enumerate (range_terms -> None) falls back to
+        the KDE too."""
         if not c.all_eq or c.cols is None or len(c.cols) != 1:
             return None
         col = c.cols[0]
@@ -473,7 +537,30 @@ class _StoreResolver:
             est = float(sm)
         else:
             est = float(sm / cnt) if cnt > 0 else 0.0
-        return est, res.version, sketch.path
+        n_eff = int(sketch.n_rows)
+        range_err = getattr(sketch, "range_err", None)
+        if range_err is None:
+            return est, res.version, sketch.path, est, est, n_eff
+        err = range_err(c.lo[0], c.hi[0])
+        if err is None:                       # raced the coverage gate
+            return None
+        cnt_err, sum_pos, sum_neg = err
+        if c.op == OP_COUNT:
+            ci_lo, ci_hi = max(0.0, est - cnt_err), est
+        elif c.op == OP_SUM:
+            # over-counted positive codes inflate the sum, over-counted
+            # negative codes deflate it: the truth window is asymmetric
+            ci_lo, ci_hi = sm - sum_pos, sm + sum_neg
+        else:
+            if cnt <= 0:
+                ci_lo, ci_hi = -float("inf"), float("inf")
+            else:
+                nums = (sm - sum_pos, sm + sum_neg)
+                dens = [d for d in (float(cnt), float(max(0, cnt - cnt_err)))
+                        if d > 0]
+                ratios = [n / d for n in nums for d in dens]
+                ci_lo, ci_hi = min(ratios), max(ratios)
+        return est, res.version, sketch.path, ci_lo, ci_hi, n_eff
 
 
 class _MappingResolver:
@@ -548,9 +635,14 @@ def _pad_rows(arr: np.ndarray, m: int) -> np.ndarray:
 
 
 def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
-               backend: str, n_qmc: int) -> List[Tuple[float, str]]:
+               backend: str, n_qmc: int,
+               ci_level: float = DEFAULT_CI_LEVEL
+               ) -> List[Tuple[float, str, float, float, int]]:
     """Answer one resolved group in batched passes; returns one
-    (estimate, path label) per entry, in entry order.
+    (estimate, path label, ci_lo, ci_hi, n_effective) per entry, in entry
+    order.  The CI comes from a SEPARATE moments pass (aqp_ci) so the
+    estimate kernels — and therefore the estimates — stay bit-identical to
+    the pre-CI engine.
 
     GROUP BY families — entries expanded from one query that differ only on
     the group column's code window — are peeled off onto the factored grouped
@@ -588,7 +680,10 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
     else:
         rest = list(entries)
 
-    out: Dict[int, Tuple[float, str]] = {}
+    n_eff = int(x.shape[0])
+    p = 0.5 + ci_level / 2.0
+
+    out: Dict[int, Tuple[float, str, float, float, int]] = {}
     if rest:
         n = len(rest)
         m = _pad_count(n)
@@ -599,12 +694,18 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
             tgt = _pad_rows(np.asarray([c.tgt for c in rest], np.int32), m)
             ans = batch_query_qmc(x, syn.H, lo, hi, tgt, ops_np, scale,
                                   n_qmc=n_qmc)
+            se, dof = qmc_subsample_se(x, syn.H, lo, hi, tgt, ops_np,
+                                       syn.n_source, n_qmc)
+            q_ci = t_ppf(p, dof)
             path = "qmc"
         elif plan.kind == "range1d":
             a = _pad_rows(np.asarray([c.lo[0] for c in rest], np.float32), m)
             b = _pad_rows(np.asarray([c.hi[0] for c in rest], np.float32), m)
             ans = batch_query_1d(syn.x, syn.h, jnp.asarray(a), jnp.asarray(b),
                                  jnp.asarray(ops_np), scale, backend=backend)
+            mom = moments_1d(syn.x, syn.h, jnp.asarray(a), jnp.asarray(b))
+            se = se_from_moments(ops_np, mom, plan.scale, n_eff)
+            q_ci = norm_ppf(p)
             path = "range1d" if backend == "jnp" else f"range1d:{backend}"
         else:
             lo = _pad_rows(np.asarray([c.lo for c in rest], np.float32), m)
@@ -613,10 +714,16 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
             ans = batch_query_box(x, syn.h_diag(), jnp.asarray(lo),
                                   jnp.asarray(hi), jnp.asarray(tgt),
                                   jnp.asarray(ops_np), scale, backend=backend)
+            mom = moments_box(x, syn.h_diag(), jnp.asarray(lo),
+                              jnp.asarray(hi), jnp.asarray(tgt))
+            se = se_from_moments(ops_np, mom, plan.scale, n_eff)
+            q_ci = norm_ppf(p)
             path = "box" if backend == "jnp" else f"box:{backend}"
         ans_np = np.asarray(ans, np.float64)[:n]
-        for c, est in zip(rest, ans_np):
-            out[id(c)] = (float(est), path)
+        se_np = np.asarray(se, np.float64)[:n]
+        for c, est, s in zip(rest, ans_np, se_np):
+            est = float(est)
+            out[id(c)] = (est, path, est - q_ci * s, est + q_ci * s, n_eff)
 
     for fam in families:
         g_axis = fam[0].group_axis
@@ -629,14 +736,28 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
             x, syn.h_diag(), fam[0].lo, fam[0].hi, glo, ghi,
             g_axis=g_axis, tgt=fam[0].tgt, op=fam[0].op, scale=scale)
         ans_np = np.asarray(ans, np.float64)[:len(fam)]
-        for c, est in zip(fam, ans_np):
-            out[id(c)] = (float(est), "box:grouped")
+        # family moments run on the per-entry FULL boxes (each entry's box
+        # already carries its group window from _compile)
+        flo = _pad_rows(np.asarray([c.lo for c in fam], np.float32), gm)
+        fhi = _pad_rows(np.asarray([c.hi for c in fam], np.float32), gm)
+        ftgt = _pad_rows(np.asarray([c.tgt for c in fam], np.int32), gm)
+        fops = np.full(gm, fam[0].op, np.int32)
+        mom = moments_box(x, syn.h_diag(), jnp.asarray(flo),
+                          jnp.asarray(fhi), jnp.asarray(ftgt))
+        se_np = np.asarray(se_from_moments(fops, mom, plan.scale, n_eff),
+                           np.float64)[:len(fam)]
+        q_ci = norm_ppf(p)
+        for c, est, s in zip(fam, ans_np, se_np):
+            est = float(est)
+            out[id(c)] = (est, "box:grouped",
+                          est - q_ci * s, est + q_ci * s, n_eff)
 
     return [out[id(c)] for c in entries]
 
 
 def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
-             backend: str = "jnp", n_qmc: int = 4096) -> List[AqpResult]:
+             backend: str = "jnp", n_qmc: int = 4096,
+             ci_level: float = DEFAULT_CI_LEVEL) -> List[AqpResult]:
     """Answer compiled queries: exact categorical sketches first (when the
     resolver offers them), then group the rest by resolved synopsis, answer
     each group in batched passes on its execution path, and scatter back to
@@ -647,10 +768,15 @@ def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
     for c in compiled:
         hit = try_exact(c) if try_exact is not None else None
         if hit is not None:
-            est, version, path = hit
+            est, version, path, ci_lo, ci_hi, n_eff = hit
+            # rel_width=0.0: an exact answer has NO smoothing — the proxy
+            # must rank it best, not worst (inf is reserved for genuinely
+            # unconstrained estimates)
             results[c.slot] = AqpResult(
-                estimate=est, path=path, rel_width=float("inf"),
-                synopsis_version=version, group=c.group, query=c.query)
+                estimate=est, path=path, rel_width=0.0,
+                synopsis_version=version, group=c.group, query=c.query,
+                ci_lo=ci_lo, ci_hi=ci_hi, ci_level=ci_level,
+                n_effective=n_eff)
         else:
             remaining.append(c)
 
@@ -664,12 +790,15 @@ def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
     for key, g in groups.items():
         plan: _GroupPlan = g["plan"]
         entries: List[_Compiled] = g["entries"]
-        answered = _run_group(key, plan, entries, backend, n_qmc)
-        for c, (est, path) in zip(entries, answered):
+        answered = _run_group(key, plan, entries, backend, n_qmc,
+                              ci_level=ci_level)
+        for c, (est, path, ci_lo, ci_hi, n_eff) in zip(entries, answered):
             results[c.slot] = AqpResult(
                 estimate=est, path=path,
                 rel_width=_rel_width(c, plan.h_axes),
-                synopsis_version=g["version"], group=c.group, query=c.query)
+                synopsis_version=g["version"], group=c.group, query=c.query,
+                ci_lo=ci_lo, ci_hi=ci_hi, ci_level=ci_level,
+                n_effective=n_eff)
     return results
 
 
@@ -694,12 +823,14 @@ class QueryEngine:
     """
 
     def __init__(self, store, selector: str = "plugin", backend: str = "jnp",
-                 n_qmc: int = 4096, max_groups: int = 64):
+                 n_qmc: int = 4096, max_groups: int = 64,
+                 ci_level: float = DEFAULT_CI_LEVEL):
         self.store = store
         self.selector = selector
         self.backend = backend
         self.n_qmc = n_qmc
         self.max_groups = max_groups
+        self.ci_level = ci_level
         self.plans = PlanCache()
 
     # -- planning core (shared by the synchronous path and the admission
@@ -720,28 +851,68 @@ class QueryEngine:
                 compiled.append(_compile(q, len(compiled), group_value=gv))
         return compiled
 
-    def resolver(self, selector: Optional[str] = None) -> _StoreResolver:
-        """Store resolver wired to this engine's version-keyed plan cache."""
+    def resolver(self, selector: Optional[str] = None,
+                 tier: Optional[int] = None) -> _StoreResolver:
+        """Store resolver wired to this engine's version-keyed plan cache.
+        `tier` budgets resolution to one tier of a `TieredReservoir` (None =
+        the full sample; plain reservoirs ignore it)."""
         return _StoreResolver(self.store, selector or self.selector,
-                              plans=self.plans)
+                              plans=self.plans, tier=tier)
 
     def run_compiled(self, compiled: Sequence[_Compiled],
                      selector: Optional[str] = None,
-                     backend: Optional[str] = None) -> List[AqpResult]:
+                     backend: Optional[str] = None,
+                     tier: Optional[int] = None) -> List[AqpResult]:
         """Execute pre-compiled units (slots must be 0..n-1) — the admission
         layer's flush entry point; identical execution to `execute`."""
-        return _execute(compiled, len(compiled), self.resolver(selector),
-                        backend=backend or self.backend, n_qmc=self.n_qmc)
+        return _execute(compiled, len(compiled),
+                        self.resolver(selector, tier=tier),
+                        backend=backend or self.backend, n_qmc=self.n_qmc,
+                        ci_level=self.ci_level)
 
     # -- the synchronous shell ----------------------------------------------
 
     def execute(self, queries: Union[AqpQuery, Sequence[AqpQuery]],
                 selector: Optional[str] = None,
-                backend: Optional[str] = None) -> List[AqpResult]:
+                backend: Optional[str] = None, mode: str = "batch"):
         """Answer a batch of AqpQuery specs; one AqpResult per query (one per
-        group value for GROUP BY queries, in discovered/declared order)."""
+        group value for GROUP BY queries, in discovered/declared order).
+
+        `mode="batch"` (default) returns the List[AqpResult] directly;
+        `mode="progressive"` returns the `progressive` generator instead —
+        (tier, results) rounds with tightening confidence intervals."""
+        if mode == "progressive":
+            return self.progressive(queries, selector=selector,
+                                    backend=backend)
+        if mode != "batch":
+            raise ValueError(f"unknown mode {mode!r}; "
+                             f"expected 'batch' or 'progressive'")
         return self.run_compiled(self.compile(queries), selector=selector,
                                  backend=backend)
+
+    def progressive(self, queries: Union[AqpQuery, Sequence[AqpQuery]],
+                    selector: Optional[str] = None,
+                    backend: Optional[str] = None):
+        """Anytime execution over `TieredReservoir` tiers: yields
+        (tier, List[AqpResult]) rounds, answering from the smallest tier
+        first and refining on successively larger tiers.  The final round
+        runs on the full sample and is bit-identical to `execute` — callers
+        can stop consuming as soon as the intervals are tight enough.
+        Against stores with no tiered reservoirs this degenerates to one
+        full-accuracy round."""
+        compiled = self.compile(queries)
+        res = self.resolver(selector)
+        n_tiers = 1
+        for c in compiled:
+            key, _c2, _version = res.key_for(c)
+            col = key[0]
+            reg = self.store.joints if isinstance(col, tuple) \
+                else self.store.columns
+            n_tiers = max(n_tiers, getattr(reg.get(col), "n_tiers", 1))
+        for t in range(n_tiers):
+            tier = t if t < n_tiers - 1 else None
+            yield t, self.run_compiled(compiled, selector=selector,
+                                       backend=backend, tier=tier)
 
     def answers(self, queries, **kw) -> np.ndarray:
         """`execute`, reduced to the estimates (submission order)."""
@@ -767,6 +938,12 @@ class QueryEngine:
             raise KeyError(f"unknown group_by column {gb.column!r}; "
                            f"have {sorted(self.store.columns)}")
         codes = np.unique(np.round(res.sample().astype(np.float64)))
+        strata = getattr(res, "codes", None)
+        if callable(strata):
+            # stratified TieredReservoir: union in codes whose last uniform
+            # representative was displaced — rare groups keep a result row
+            codes = np.unique(np.concatenate(
+                [codes, np.round(np.asarray(strata(), np.float64))]))
         if codes.size == 0:
             raise ValueError(f"group_by column {gb.column!r} has no data")
         if codes.size > self.max_groups:

@@ -1,3 +1,4 @@
 from .aqp_store import (CategoricalSketch, CountMinSketch, MultiReservoir,
-                        Reservoir, SynopsisCache, TelemetryStore)
+                        Reservoir, SynopsisCache, TelemetryStore,
+                        TieredReservoir)
 from .pipeline import TokenPipeline

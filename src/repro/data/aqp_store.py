@@ -207,6 +207,198 @@ class MultiReservoir(Reservoir):
         self.backfilled = bool(meta.get("backfilled", False))
 
 
+class TieredReservoir:
+    """Verdict-style tiered sample: a geometric ladder of reservoirs.
+
+    Tier i holds `capacity >> (n_tiers-1-i)` rows, so tier 0 is 1/2^(n-1) of
+    the full sample and the top tier IS the full-capacity sample.  Every
+    incoming row is offered to every tier independently, so each tier is a
+    uniform sample of the whole stream on its own — a query answered from
+    tier 0 is a cheap, coarse, *unbiased* answer, and progressive execution
+    re-answers on successively larger tiers until the top tier reproduces
+    the untiered result bit-for-bit.  Members share the versioned algorithm-R
+    acceptance and weighted-merge core of `Reservoir`/`MultiReservoir`.
+
+    Optional per-dictionary-code stratification (`strat_column`): a small
+    side reservoir per distinct code of one column, so rare GROUP BY groups
+    whose representatives would be displaced from the uniform tiers keep
+    coverage.  Strata feed group *discovery* and worst-case retention
+    (`codes()`/`stratum()`); aggregate estimates still come from the uniform
+    tiers, which keeps them unbiased.
+
+    `columns=None` samples scalars (1-D column); a tuple samples whole rows
+    like `MultiReservoir`.  `version`/`n_seen`/`n_filled` delegate to the
+    top tier, so synopsis caches and admission re-keying work unchanged.
+    """
+
+    backfilled = False   # tiered joints are never seeded from marginals
+
+    def __init__(self, capacity: int = 4096, n_tiers: int = 4, seed: int = 0,
+                 columns: Optional[Sequence[str]] = None,
+                 strat_column: Optional[str] = None,
+                 strata_capacity: int = 64, max_strata: int = 256):
+        if n_tiers < 1:
+            raise ValueError(f"n_tiers must be >= 1, got {n_tiers}")
+        if capacity >> (n_tiers - 1) < 1:
+            raise ValueError(f"capacity {capacity} too small for {n_tiers} "
+                             f"tiers (tier 0 would be empty)")
+        self.capacity = capacity
+        self.n_tiers = n_tiers
+        self.seed = seed
+        self.columns = tuple(columns) if columns is not None else None
+        self.strat_column = strat_column
+        self.strata_capacity = strata_capacity
+        self.max_strata = max_strata
+        self._strat_axis: Optional[int] = None
+        if strat_column is not None and self.columns is not None:
+            if strat_column not in self.columns:
+                raise ValueError(f"strat_column {strat_column!r} not in "
+                                 f"columns {self.columns}")
+            self._strat_axis = self.columns.index(strat_column)
+        self.tiers = [self._spawn_member(capacity >> (n_tiers - 1 - i),
+                                         seed + i)
+                      for i in range(n_tiers)]
+        self.strata: Dict[float, Reservoir] = {}
+        self.strata_overflow = False
+
+    def _spawn_member(self, cap: int, seed: int) -> Reservoir:
+        if self.columns is None:
+            return Reservoir(cap, seed=seed)
+        return MultiReservoir(self.columns, cap, seed=seed)
+
+    # synopsis caching / admission re-keying key on these; the top tier is
+    # the authoritative (full) sample, so its counters speak for the whole
+    @property
+    def version(self) -> int:
+        return self.tiers[-1].version
+
+    @property
+    def n_seen(self) -> int:
+        return self.tiers[-1].n_seen
+
+    @property
+    def n_filled(self) -> int:
+        return self.tiers[-1].n_filled
+
+    def _stratum_seed(self, code: float) -> int:
+        return (self.seed + 7919
+                + zlib.crc32(np.float32(code).tobytes()) % 100003)
+
+    def add(self, values: np.ndarray) -> None:
+        values = self.tiers[-1]._coerce(np.asarray(values, np.float32))
+        if values.shape[0] == 0:
+            return
+        for tier in self.tiers[:-1]:
+            tier.add(values)
+        if self.strat_column is not None:
+            codes = values if self._strat_axis is None \
+                else values[:, self._strat_axis]
+            for code in np.unique(codes):
+                if np.isnan(code):
+                    continue
+                key = float(code)
+                res = self.strata.get(key)
+                if res is None:
+                    if len(self.strata) >= self.max_strata:
+                        # stop opening NEW strata; existing ones keep updating
+                        self.strata_overflow = True
+                        continue
+                    res = self._spawn_member(self.strata_capacity,
+                                             self._stratum_seed(key))
+                    self.strata[key] = res
+                res.add(values[codes == code])
+        self.tiers[-1].add(values)
+
+    def sample(self, tier: Optional[int] = None) -> np.ndarray:
+        """The retained sample of one tier (default: the full top tier)."""
+        if tier is None:
+            return self.tiers[-1].sample()
+        tier = max(0, min(int(tier), self.n_tiers - 1))
+        return self.tiers[tier].sample()
+
+    def tier_sizes(self) -> List[int]:
+        return [t.n_filled for t in self.tiers]
+
+    def codes(self) -> List[float]:
+        """Distinct stratification codes seen so far (sorted) — the GROUP BY
+        discovery set; unions with the uniform sample's codes so rare groups
+        displaced from the tiers still get result rows."""
+        return sorted(self.strata)
+
+    def stratum(self, code: float) -> Optional[np.ndarray]:
+        res = self.strata.get(float(np.float32(code)))
+        return None if res is None else res.sample()
+
+    def merge(self, other: "TieredReservoir") -> "TieredReservoir":
+        if not isinstance(other, TieredReservoir) \
+                or other.n_tiers != self.n_tiers \
+                or other.columns != self.columns \
+                or other.strat_column != self.strat_column:
+            raise ValueError(
+                f"cannot merge tiered reservoirs with different shape: "
+                f"{(self.n_tiers, self.columns, self.strat_column)} vs "
+                f"{(getattr(other, 'n_tiers', None), getattr(other, 'columns', None), getattr(other, 'strat_column', None))}")
+        out = TieredReservoir(
+            self.capacity, self.n_tiers,
+            seed=int(self.tiers[-1].rng.integers(1 << 31)),
+            columns=self.columns, strat_column=self.strat_column,
+            strata_capacity=self.strata_capacity,
+            max_strata=self.max_strata)
+        out.tiers = [a.merge(b) for a, b in zip(self.tiers, other.tiers)]
+        for key in set(self.strata) | set(other.strata):
+            a, b = self.strata.get(key), other.strata.get(key)
+            out.strata[key] = a.merge(b) if a is not None and b is not None \
+                else copy.deepcopy(a if a is not None else b)
+        out.strata_overflow = self.strata_overflow or other.strata_overflow
+        return out
+
+    def state(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
+        """(arrays, JSON-safe metadata) for checkpointing — every tier and
+        stratum rides along with its RNG state, so a restored ladder accepts
+        future rows bit-identically to the never-checkpointed one."""
+        arrays: Dict[str, np.ndarray] = {}
+        tier_meta = []
+        for i, tier in enumerate(self.tiers):
+            buf, m = tier.state()
+            arrays[f"tier{i}/buf"] = buf
+            tier_meta.append(m)
+        strata_meta = []
+        for j, code in enumerate(sorted(self.strata)):
+            buf, m = self.strata[code].state()
+            arrays[f"strata/{j}/buf"] = buf
+            strata_meta.append({"code": float(code), "meta": m})
+        meta = {"kind": "tiered", "n_tiers": int(self.n_tiers),
+                "capacity": int(self.capacity), "seed": int(self.seed),
+                "columns": list(self.columns) if self.columns else None,
+                "strat_column": self.strat_column,
+                "strata_capacity": int(self.strata_capacity),
+                "max_strata": int(self.max_strata),
+                "strata_overflow": bool(self.strata_overflow),
+                "tiers": tier_meta, "strata": strata_meta}
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, arrays: Dict[str, np.ndarray],
+                   meta: Dict[str, object]) -> "TieredReservoir":
+        cols = meta.get("columns")
+        out = cls(capacity=int(meta["capacity"]),
+                  n_tiers=int(meta["n_tiers"]), seed=int(meta["seed"]),
+                  columns=tuple(cols) if cols else None,
+                  strat_column=meta.get("strat_column"),
+                  strata_capacity=int(meta["strata_capacity"]),
+                  max_strata=int(meta["max_strata"]))
+        for i, m in enumerate(meta["tiers"]):
+            out.tiers[i].load_state(arrays[f"tier{i}/buf"], m)
+        for j, ent in enumerate(meta["strata"]):
+            code = float(ent["code"])
+            res = out._spawn_member(out.strata_capacity,
+                                    out._stratum_seed(code))
+            res.load_state(arrays[f"strata/{j}/buf"], ent["meta"])
+            out.strata[code] = res
+        out.strata_overflow = bool(meta.get("strata_overflow", False))
+        return out
+
+
 class CategoricalSketch:
     """Exact per-code frequency sketch for a dictionary column.
 
@@ -404,6 +596,37 @@ class CountMinSketch:
         """Counts overshoot by at most this many rows, w.p. >= 1-exp(-depth)."""
         return int(np.ceil(np.e / self.width * self.n_rows))
 
+    def range_err(self, lo: float, hi: float
+                  ) -> Optional[Tuple[int, float, float]]:
+        """Worst-case over-count mass for a `range_terms(lo, hi)` answer:
+        (count error, positive sum error, negative sum error), or None when
+        the window is too wide to enumerate.  Count-min only over-counts, so
+        COUNT truth lies in [est - count_err, est] and SUM truth in
+        [est - sum_pos_err, est + sum_neg_err] (over-counted negative codes
+        push the estimated sum DOWN, so truth can sit above it)."""
+        first = int(np.ceil(lo))
+        last = int(np.floor(hi))
+        if last < first:
+            return 0, 0.0, 0.0
+        if last - first + 1 > self.max_enumerate:
+            return None
+        eb = self.err_bound()
+        cnt_err = 0
+        sum_pos = 0.0
+        sum_neg = 0.0
+        seen = set()
+        for code in range(first, last + 1):
+            code32 = float(np.float32(code))
+            if code32 in seen:
+                continue
+            seen.add(code32)
+            cnt_err += eb
+            if code32 >= 0:
+                sum_pos += eb * code32
+            else:
+                sum_neg += eb * (-code32)
+        return cnt_err, sum_pos, sum_neg
+
     def merge(self, other: "CountMinSketch") -> "CountMinSketch":
         # compare the actual hash parameters, not just the seed: a sketch
         # restored from a snapshot keeps its persisted multipliers even if
@@ -577,6 +800,10 @@ class TelemetryStore:
                                    max_bytes=cache_bytes)
         self._listeners: List[Callable[[Dict[ColumnKey, int]], None]] = []
         self._sessions: List["weakref.ref"] = []
+        # shared engines keyed (selector, backend): query()/session() route
+        # through these so PlanCache entries persist across calls and can be
+        # checkpointed/restored (warm starts skip replanning)
+        self._engines: Dict[Tuple[str, str], object] = {}
         # serializes mutation (add_batch/restore_state) against snapshots
         # (to_state): a snapshot taken mid-add_batch could otherwise persist
         # a sketch whose n_rows exceeds its reservoir's n_seen — a restored
@@ -616,6 +843,45 @@ class TelemetryStore:
             res.n_seen = min(self.columns[c].n_seen for c in key)
             res.backfilled = True
         self.joints[key] = res
+
+    def track_tiered(self, columns: ColumnKey, n_tiers: int = 4,
+                     strat_column: Optional[str] = None,
+                     strata_capacity: int = 64,
+                     max_strata: int = 256) -> None:
+        """Upgrade a column (str) or joint tuple to a `TieredReservoir` so
+        queries can trade accuracy for latency: tier 0 answers from a
+        1/2^(n_tiers-1) sample, progressive mode refines tier by tier, and
+        the top tier reproduces untiered answers bit-for-bit.  Register
+        *before* the first `add_batch` — an existing reservoir with data
+        cannot be converted (its stream is gone).  `strat_column` keeps a
+        small per-code side sample for rare GROUP BY groups."""
+        if isinstance(columns, str):
+            name: ColumnKey = columns
+            registry: Dict = self.columns
+            seed = self._col_seed(columns)
+            if strat_column is not None and strat_column != columns:
+                raise ValueError(f"strat_column {strat_column!r} must equal "
+                                 f"the tracked column {columns!r} for 1-D "
+                                 f"tiered reservoirs")
+            member_cols = None
+            strat = columns if strat_column is not None else None
+        else:
+            name = tuple(columns)
+            registry = self.joints
+            seed = self._col_seed("|".join(name))
+            member_cols = name
+            strat = strat_column
+        existing = registry.get(name)
+        if isinstance(existing, TieredReservoir):
+            return
+        if existing is not None and existing.n_seen > 0:
+            raise ValueError(f"cannot convert reservoir {name!r} with "
+                             f"{existing.n_seen} rows seen to tiered; "
+                             f"call track_tiered before add_batch")
+        registry[name] = TieredReservoir(
+            self.capacity, n_tiers=n_tiers, seed=seed, columns=member_cols,
+            strat_column=strat, strata_capacity=strata_capacity,
+            max_strata=max_strata)
 
     def track_categorical(self, column: str, max_codes: int = 4096,
                           kind: str = "exact", width: int = 2048,
@@ -699,15 +965,17 @@ class TelemetryStore:
                 for fn in list(self._listeners):
                     fn(bumped)
 
-    def synopsis(self, column: str, selector: str = "plugin") -> KDESynopsis:
+    def synopsis(self, column: str, selector: str = "plugin",
+                 tier: Optional[int] = None) -> KDESynopsis:
         res = self.columns.get(column)
         if res is None:
             raise KeyError(f"unknown column {column!r}; "
                            f"have {sorted(self.columns)}")
-        return self._fit_cached(column, res, selector)
+        return self._fit_cached(column, res, selector, tier=tier)
 
     def joint_synopsis(self, columns: Sequence[str],
-                       selector: str = "plugin") -> KDESynopsis:
+                       selector: str = "plugin",
+                       tier: Optional[int] = None) -> KDESynopsis:
         """Joint synopsis over a tracked column tuple: per-axis diagonal
         bandwidths (plugin/silverman), scalar LSCV_h, or full-H LSCV_H."""
         key = tuple(columns)
@@ -716,16 +984,25 @@ class TelemetryStore:
             raise KeyError(f"no joint reservoir for columns {key!r}; call "
                            f"track_joint({key!r}) before add_batch "
                            f"(have {sorted(self.joints)})")
-        return self._fit_cached(key, res, selector)
+        return self._fit_cached(key, res, selector, tier=tier)
 
-    def _fit_cached(self, key: ColumnKey, res: Reservoir, selector: str) -> KDESynopsis:
+    def _fit_cached(self, key: ColumnKey, res: Reservoir, selector: str,
+                    tier: Optional[int] = None) -> KDESynopsis:
+        # lazy import: aqp_query imports this module's types at top level
+        from repro.core.aqp_query import _effective_tier, _tier_key
+
         selector = canonical_selector(selector)
-        syn = self.cache.get(key, selector, res.version)
+        tier = _effective_tier(res, tier)
+        ckey = _tier_key(key, tier)
+        syn = self.cache.get(ckey, selector, res.version)
         if syn is None:
-            syn = KDESynopsis.fit(res.sample(), selector=selector,
+            data = res.sample() if tier is None else res.sample(tier)
+            syn = KDESynopsis.fit(data, selector=selector,
                                   max_sample=self.capacity)
+            # scale against the FULL stream: every tier is a uniform sample
+            # of it, so tier answers are unbiased for the same relation
             syn.n_source = res.n_seen
-            self.cache.put(key, selector, res.version, syn)
+            self.cache.put(ckey, selector, res.version, syn)
         return syn
 
     # -- queries ------------------------------------------------------------
@@ -737,9 +1014,24 @@ class TelemetryStore:
     # BoxQuery types; they compile to the same engine.
 
     def engine(self, **kwargs) -> "QueryEngine":
-        """A QueryEngine facade over this store (see repro.core.aqp_query)."""
+        """A fresh QueryEngine facade over this store (repro.core.aqp_query).
+        Prefer `shared_engine` for repeated querying — it keeps one PlanCache
+        per (selector, backend) that checkpoints ride along with."""
         from repro.core.aqp_query import QueryEngine
         return QueryEngine(self, **kwargs)
+
+    def shared_engine(self, selector: str = "plugin",
+                      backend: str = "jnp") -> "QueryEngine":
+        """The store-owned engine for (selector, backend), created on first
+        use.  Its PlanCache persists across `query()` calls and through
+        `to_state`/`restore_state`, so a warm-started store replays cached
+        plans instead of replanning on its first flush."""
+        key = (canonical_selector(selector), backend)
+        eng = self._engines.get(key)
+        if eng is None:
+            eng = self.engine(selector=key[0], backend=backend)
+            self._engines[key] = eng
+        return eng
 
     def session(self, selector: str = "plugin", backend: str = "jnp",
                 **kwargs) -> "AqpSession":
@@ -747,14 +1039,17 @@ class TelemetryStore:
         specs from many logical clients, micro-batches coalesce across
         callers and flush on watermark/deadline (repro.core.aqp_admission).
         Remaining kwargs (watermark, max_delay, ...) go to AqpSession."""
-        return self.engine(selector=selector, backend=backend).session(**kwargs)
+        return self.shared_engine(selector, backend).session(**kwargs)
 
     def query(self, queries, selector: str = "plugin",
-              backend: str = "jnp") -> List["AqpResult"]:
+              backend: str = "jnp", mode: str = "batch"):
         """Answer a mixed batch of AqpQuery specs in one engine call; returns
-        AqpResult rows (estimate + execution path + accuracy proxy +
-        synopsis version) in submission order."""
-        return self.engine(selector=selector, backend=backend).execute(queries)
+        AqpResult rows (estimate + path + confidence interval + synopsis
+        version) in submission order.  `mode="progressive"` returns the
+        engine's (tier, results) generator instead (see
+        `QueryEngine.progressive`)."""
+        return self.shared_engine(selector, backend).execute(queries,
+                                                             mode=mode)
 
     def count(self, column: str, a: float, b: float, selector: str = "plugin") -> float:
         return float(self.synopsis(column, selector).count(a, b))
@@ -891,13 +1186,23 @@ class TelemetryStore:
                                      f"which state keys reserve as a "
                                      f"separator")
             for name, res in self.columns.items():
-                buf, m = res.state()
-                tree[f"columns/{name}/buf"] = buf
+                if isinstance(res, TieredReservoir):
+                    arrays, m = res.state()
+                    for k, arr in arrays.items():
+                        tree[f"columns/{name}/{k}"] = arr
+                else:
+                    buf, m = res.state()
+                    tree[f"columns/{name}/buf"] = buf
                 meta["columns"][name] = m
             for i, (cols, res) in enumerate(self.joints.items()):
-                buf, m = res.state()
+                if isinstance(res, TieredReservoir):
+                    arrays, m = res.state()
+                    for k, arr in arrays.items():
+                        tree[f"joints/{i}/{k}"] = arr
+                else:
+                    buf, m = res.state()
+                    tree[f"joints/{i}/buf"] = buf
                 m["columns"] = list(cols)
-                tree[f"joints/{i}/buf"] = buf
                 meta["joints"].append(m)
             for name, sketch in self.categoricals.items():
                 arrays, m = sketch.state()
@@ -917,6 +1222,26 @@ class TelemetryStore:
                     tree[f"cache/{i}/h"] = np.asarray(syn.h)
                 if syn.H is not None:
                     tree[f"cache/{i}/H"] = np.asarray(syn.H)
+            # shared engines' plan-cache keys ride along: plans rebuild from
+            # the persisted synopses on restore, so warm starts skip the
+            # compile-and-plan pass too (not just the bandwidth fits)
+            meta["plans"] = []
+            for (sel_eng, backend), eng in self._engines.items():
+                entries = []
+                for key, version in eng.plans.entries():
+                    if not (isinstance(key, tuple) and len(key) == 3):
+                        continue      # mapping-resolver keys: not durable
+                    col, sel, tier = key
+                    entries.append({
+                        "column": list(col) if isinstance(col, tuple)
+                        else col,
+                        "is_tuple": isinstance(col, tuple),
+                        "selector": sel, "tier": tier,
+                        "version": int(version)})
+                if entries:
+                    meta["plans"].append({"selector": sel_eng,
+                                          "backend": backend,
+                                          "entries": entries})
             return tree, meta
 
     def restore_state(self, tree: Dict[str, np.ndarray],
@@ -932,14 +1257,27 @@ class TelemetryStore:
                              f"{meta.get('format')!r} (want {STATE_FORMAT})")
         with self._write_lock:
             self.capacity = int(meta["capacity"])
+
+            def _subtree(prefix: str) -> Dict[str, np.ndarray]:
+                return {k[len(prefix):]: v for k, v in tree.items()
+                        if k.startswith(prefix)}
+
             columns: Dict[str, Reservoir] = {}
             for name, m in meta["columns"].items():
+                if m.get("kind") == "tiered":
+                    columns[name] = TieredReservoir.from_state(
+                        _subtree(f"columns/{name}/"), m)
+                    continue
                 res = Reservoir(self.capacity, seed=self._col_seed(name))
                 res.load_state(tree[f"columns/{name}/buf"], m)
                 columns[name] = res
             joints: Dict[Tuple[str, ...], MultiReservoir] = {}
             for i, m in enumerate(meta["joints"]):
                 cols = tuple(m["columns"])
+                if m.get("kind") == "tiered":
+                    joints[cols] = TieredReservoir.from_state(
+                        _subtree(f"joints/{i}/"), m)
+                    continue
                 res = MultiReservoir(cols, self.capacity,
                                      seed=self._col_seed("|".join(cols)))
                 res.load_state(tree[f"joints/{i}/buf"], m)
@@ -976,6 +1314,29 @@ class TelemetryStore:
                     else ent["column"]
                 self.cache.put(col, str(ent["selector"]),
                                int(ent["version"]), syn)
+            # rebuild shared-engine plans eagerly from the restored synopses
+            # (NOT through SynopsisCache.get — priming must not count as
+            # misses, the warm-start contract is zero cache misses)
+            self._engines = {}
+            if meta.get("plans"):
+                from repro.core.aqp_query import _make_plan, _tier_key
+
+                index = {key: (v, syn)
+                         for key, v, syn in self.cache.entries()}
+                for peng in meta["plans"]:
+                    eng = self.shared_engine(str(peng["selector"]),
+                                             str(peng["backend"]))
+                    for ent in peng["entries"]:
+                        col = tuple(ent["column"]) if ent["is_tuple"] \
+                            else ent["column"]
+                        tier = ent["tier"]
+                        tier = None if tier is None else int(tier)
+                        hit = index.get((_tier_key(col, tier),
+                                         str(ent["selector"])))
+                        if hit is not None and hit[0] == int(ent["version"]):
+                            eng.plans.put((col, str(ent["selector"]), tier),
+                                          int(ent["version"]),
+                                          _make_plan(hit[1]))
             if self._listeners:
                 bumped: Dict[ColumnKey, int] = {
                     name: res.version for name, res in self.columns.items()}

@@ -194,7 +194,11 @@ def run_aqp(args) -> None:
     else:
         telemetry = _make_telemetry(rng, n)
         store = TelemetryStore(capacity=args.capacity, seed=0)
-        store.track_joint(joint_cols)       # before add_batch: joints sample rows
+        # tiered ladders (before add_batch, like joints): tier 0 serves the
+        # "coarse" priority class, the top tier IS the full sample
+        store.track_tiered("loss", n_tiers=4)
+        store.track_tiered("latency_ms", n_tiers=4)
+        store.track_tiered(joint_cols, n_tiers=4)   # joints sample whole rows
         store.track_categorical("model_id")  # exact per-code counts for Eq terms
         store.add_batch(telemetry)
         # registering after add_batch backfills from the per-column reservoirs
@@ -221,6 +225,9 @@ def run_aqp(args) -> None:
         max(watermark, 64), ranges, joint_cols, "model_id",
         (0.0, 1.0, 2.0, 3.0), seed=99)
     engine.execute(warm)
+    if args.coarse_frac > 0:
+        # coarse traffic answers from tier 0: fit those synopses too
+        engine.run_compiled(engine.compile(warm), tier=0)
 
     session = engine.session(watermark=watermark,
                              max_delay=args.max_delay_ms / 1e3,
@@ -241,9 +248,12 @@ def run_aqp(args) -> None:
         specs = make_mixed_aqp_queries(
             args.per_client, ranges, joint_cols, "model_id",
             (0.0, 1.0, 2.0, 3.0), seed=10 + ci)
+        crng = np.random.default_rng(500 + ci)
         got = []
         for q in specs:                       # closed loop: 1 outstanding
-            got.append(session.submit(q).result())
+            priority = "coarse" if crng.random() < args.coarse_frac \
+                else None                     # None -> the session default
+            got.append(session.submit(q, priority=priority).result())
         with results_lock:
             per_client[ci] = got
 
@@ -304,7 +314,10 @@ def run_aqp(args) -> None:
           f"{st['invalidations']} version invalidations"
           + (f", backpressure: {st['blocked']} blocked, {st['shed']} shed "
              f"(max_pending={st['max_pending']})"
-             if st["max_pending"] is not None else ""))
+             if st["max_pending"] is not None else "")
+          + (", priorities: " + ", ".join(
+              f"{k}={v}" for k, v in sorted(st["priorities"].items()))
+             if st["priorities"] else ""))
     if depth_samples:
         print(f"[serve:aqp] queue depth: max {max(depth_samples)}, "
               f"mean {sum(depth_samples) / len(depth_samples):.1f} "
@@ -331,8 +344,10 @@ def run_aqp(args) -> None:
                   else " & ".join(f"{a:.1f}<={c}<={b:.1f}"
                                   for c, a, b in zip(t.columns, t.lo, t.hi)))
             for t in q.predicates)
+        ci = "exact" if r.ci_lo == r.ci_hi \
+            else f"±{(r.ci_hi - r.ci_lo) / 2:,.1f} @{r.ci_level:.0%}"
         print(f"  {q.aggregate.upper():5s} WHERE {terms} ~= {r.estimate:,.2f} "
-              f"[{r.path}, rel_width {r.rel_width:.1f}]")
+              f"[{r.path}, {ci}, n_eff {r.n_effective:,}]")
 
     # GROUP BY over the dictionary column: one spec, one result per category,
     # answered by the factored grouped kernel (shared box terms once per flush)
@@ -380,6 +395,10 @@ def main() -> None:
                     help="warm-start from the latest snapshot in "
                          "--snapshot-dir instead of re-seeding (reservoirs, "
                          "sketch coverage, and fitted synopses all survive)")
+    ap.add_argument("--coarse-frac", type=float, default=0.0,
+                    help="fraction of client queries submitted with "
+                         "priority='coarse' (answered from the smallest "
+                         "reservoir tier: faster, wider intervals)")
     ap.add_argument("--max-pending", type=int, default=None,
                     help="bound the admission queue depth (default: "
                          "unbounded)")
@@ -392,6 +411,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.snapshot_every < 1:
         ap.error(f"--snapshot-every must be >= 1, got {args.snapshot_every}")
+    if not 0.0 <= args.coarse_frac <= 1.0:
+        ap.error(f"--coarse-frac must be in [0, 1], got {args.coarse_frac}")
 
     if args.mode == "aqp":
         run_aqp(args)

@@ -120,6 +120,27 @@ def test_deadline_flush_via_poll_with_fake_clock(rng):
     sess.close()
 
 
+def test_deadline_flush_runs_on_next_unrelated_submit(rng):
+    """A bucket past its deadline must flush when ANY later submit() arrives,
+    even for an unrelated bucket — admissions are the natural poll points, so
+    a ticket never waits on the flusher thread (or a manual poll) once fresh
+    traffic proves the clock has advanced."""
+    store = _store(rng)
+    clock = FakeClock()
+    sess = store.session(watermark=None, max_delay=1.0, auto_flush=False,
+                         time_fn=clock)
+    stale = sess.submit(AqpQuery("count", (Range("a", -1, 1),)))
+    clock.now = 0.5
+    sess.submit(AqpQuery("count", (Range("b", -1, 1),)))
+    assert not stale.done()                      # deadline not reached yet
+    clock.now = 1.2                              # "a" bucket now past deadline
+    fresh = sess.submit(AqpQuery("count", (Range("b", -2, 2),)))
+    assert stale.done()                          # flushed by unrelated submit
+    assert not fresh.done()                      # "b" deadline is still ahead
+    assert sess.stats()["flush_reasons"] == {FLUSH_DEADLINE: 1}
+    sess.close()
+
+
 def test_flush_on_close_resolves_everything(rng):
     store = _store(rng)
     sess = store.session(watermark=None, max_delay=None, auto_flush=False)
@@ -151,6 +172,58 @@ def test_out_of_order_future_resolution(rng):
     st = sess.stats()
     assert st["flush_reasons"] == {FLUSH_WATERMARK: 1, FLUSH_MANUAL: 1}
     sess.close()
+
+
+# --- priority classes --------------------------------------------------------
+
+def _tiered_store(rng, n=20_000, capacity=512, n_tiers=4):
+    store = TelemetryStore(capacity=capacity, seed=0)
+    store.track_tiered("a", n_tiers=n_tiers)
+    store.add_batch({"a": rng.normal(0, 1, n).astype(np.float32)})
+    return store
+
+
+def test_priority_classes_map_to_tier_budgets(rng):
+    """"coarse" answers from the smallest tier (fewer effective rows, wider
+    CI), "full" from the complete reservoir — bit-identical to the plain
+    synchronous engine — and the two classes never share a micro-batch."""
+    store = _tiered_store(rng)
+    engine = store.engine()
+    spec = AqpQuery("count", (Range("a", -1.0, 1.0),))
+    want = engine.execute(spec)[0]
+    with _manual_session(engine) as sess:
+        f_coarse = sess.submit(spec, priority="coarse")
+        f_full = sess.submit(spec)               # default_priority == "full"
+        assert sess.pending == 2                 # distinct tier-keyed buckets
+        sess.flush()
+        coarse, full = f_coarse.result(timeout=5), f_full.result(timeout=5)
+        st = sess.stats()
+    assert full.estimate == want.estimate        # full == untiered, bit-exact
+    assert full.ci_lo == want.ci_lo and full.ci_hi == want.ci_hi
+    assert coarse.n_effective == 512 >> 3        # tier-0 sample
+    assert full.n_effective == 512
+    assert coarse.ci_width > full.ci_width       # less data -> wider interval
+    assert st["flush_reasons"] == {FLUSH_MANUAL: 2}   # one per class bucket
+    assert st["priorities"] == {"coarse": 1, "full": 1}
+
+
+def test_priority_validation_and_custom_classes(rng):
+    store = _tiered_store(rng, n=2000, capacity=256)
+    engine = store.engine()
+    with _manual_session(engine) as sess:
+        with pytest.raises(ValueError, match="unknown priority"):
+            sess.submit(AqpQuery("count", (Range("a", -1, 1),)),
+                        priority="turbo")
+        assert sess.pending == 0
+    with pytest.raises(ValueError, match="default_priority"):
+        engine.session(priority_tiers={"full": None}, default_priority="fast",
+                       auto_flush=False)
+    with _manual_session(engine, priority_tiers={"fast": 1, "exactish": None},
+                         default_priority="fast") as sess:
+        fut = sess.submit(AqpQuery("count", (Range("a", -1, 1),)))
+        sess.flush()
+        assert fut.result(timeout=5).n_effective == 256 >> 2  # tier 1 of 4
+        assert sess.stats()["priorities"] == {"fast": 1}
 
 
 # --- version invalidation ----------------------------------------------------

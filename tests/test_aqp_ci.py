@@ -1,0 +1,173 @@
+"""Empirical confidence-interval coverage (core/aqp_ci.py) — the PR's
+acceptance criterion: over 350+ synthetic range/box/GROUP BY/QMC queries
+against 200k-row ground truth, the 95% CI reported by every non-exact
+execution path must cover the truth at a rate inside [90%, 99%], exact paths
+must report zero-width intervals, and exact:cm must report a bounded-error
+interval that always contains the truth.
+
+The windows are placed where kernel-smoothing bias is small relative to the
+reservoir sampling error the CIs quantify (band and half-line windows, not
+narrow mode-centred ones): the analytic/subsample CIs capture *sampling*
+variance only, which is the documented contract (docs/aqp.md).  Seeds are
+fixed — this is a statistical acceptance test, deterministic by design."""
+import numpy as np
+import pytest
+
+from repro.core import AqpQuery, Box, Eq, GroupBy, Range
+from repro.data import TelemetryStore
+
+N = 200_000
+N_SEEDS = 8
+
+# window placement: |smoothing bias| << sampling SE (see module docstring)
+COUNT_WINDOWS = [(0.0, 3.0), (-3.0, 0.0), (0.4, 1.8), (-1.8, -0.4),
+                 (0.25, 2.2), (-2.2, -0.25)]
+SUM_WINDOWS = [(0.4, 1.8), (-1.8, -0.4), (0.25, 2.2), (-2.2, -0.25),
+               (-2.5, 2.5)]
+BOXES = [((0.0, -6.0), (3.0, 6.0)), ((-6.0, 0.0), (6.0, 3.0)),
+         ((0.4, -6.0), (1.8, 6.0)), ((-6.0, 0.25), (6.0, 2.2))]
+GROUP_WINDOWS = [(0.0, 3.0), (-1.8, -0.4)]
+QMC_BOXES = [((0.0, -6.0), (3.0, 6.0)), ((-6.0, 0.0), (6.0, 3.0)),
+             ((0.4, -6.0), (1.8, 6.0)), ((-2.2, -6.0), (-0.25, 6.0)),
+             ((0.0, 0.0), (1.5, 1.5)), ((0.25, -1.0), (2.2, 1.0))]
+
+
+def _one_seed(seed):
+    """All four non-exact paths against one independent 200k-row dataset;
+    returns {path: [(covered, result, truth), ...]}."""
+    rng = np.random.default_rng(9000 + seed)
+    x = rng.normal(0, 1, N).astype(np.float32)
+    y = (0.6 * x + 0.8 * rng.normal(0, 1, N)).astype(np.float32)
+    code = rng.integers(0, 4, N).astype(np.float32)
+
+    store = TelemetryStore(capacity=1024, seed=seed)
+    store.track_joint(("x", "y"))
+    store.add_batch({"x": x, "y": y})
+    # smaller reservoir: LSCV full-H fits are O(m^2), and the grouped path's
+    # per-group effective sample should dominate the dictionary smoothing
+    small = TelemetryStore(capacity=256, seed=seed)
+    small.track_joint(("x", "y"))
+    small.track_joint(("code", "x"))
+    small.add_batch({"x": x, "y": y, "code": code})
+
+    events = {"range1d": [], "box": [], "box:grouped": [], "qmc": []}
+
+    specs, truths = [], []
+    for col, data in (("x", x), ("y", y)):
+        for a, b in COUNT_WINDOWS:
+            specs.append(AqpQuery("count", (Range(col, a, b),)))
+            truths.append(float(((data > a) & (data <= b)).sum()))
+        for a, b in SUM_WINDOWS:
+            specs.append(AqpQuery("sum", (Range(col, a, b),), target=col))
+            truths.append(float(data[(data > a) & (data <= b)].sum()))
+    for lo, hi in BOXES:
+        m = (x > lo[0]) & (x <= hi[0]) & (y > lo[1]) & (y <= hi[1])
+        specs.append(AqpQuery("count", (Box(("x", "y"), lo, hi),)))
+        truths.append(float(m.sum()))
+        specs.append(AqpQuery("sum", (Box(("x", "y"), lo, hi),), target="y"))
+        truths.append(float(y[m].sum()))
+    for r, t in zip(store.query(specs), truths):
+        assert r.path in ("range1d", "box"), r.path
+        events[r.path].append((r.ci_lo <= t <= r.ci_hi, r, t))
+
+    gspecs, gtruths = [], []
+    for a, b in GROUP_WINDOWS:
+        gspecs.append(AqpQuery("count", (Range("x", a, b),),
+                               group_by=GroupBy("code",
+                                                values=(0., 1., 2., 3.))))
+        gtruths.append({g: float(((code == g) & (x > a) & (x <= b)).sum())
+                        for g in (0., 1., 2., 3.)})
+    rows = iter(small.query(gspecs))
+    for gt in gtruths:
+        for _ in range(4):
+            r = next(rows)
+            assert r.path == "box:grouped", r.path
+            events["box:grouped"].append(
+                (r.ci_lo <= gt[r.group] <= r.ci_hi, r, gt[r.group]))
+
+    qspecs, qtruths = [], []
+    for lo, hi in QMC_BOXES:
+        m = (x > lo[0]) & (x <= hi[0]) & (y > lo[1]) & (y <= hi[1])
+        qspecs.append(AqpQuery("count", (Box(("x", "y"), lo, hi),),
+                               selector="lscv_H"))
+        qtruths.append(float(m.sum()))
+    for r, t in zip(small.query(qspecs), qtruths):
+        assert r.path == "qmc", r.path
+        events["qmc"].append((r.ci_lo <= t <= r.ci_hi, r, t))
+    return events
+
+
+@pytest.fixture(scope="module")
+def coverage_events():
+    total = {}
+    for seed in range(N_SEEDS):
+        for path, ev in _one_seed(seed).items():
+            total.setdefault(path, []).extend(ev)
+    return total
+
+
+def _coverage(events):
+    return sum(c for c, _, _ in events) / len(events)
+
+
+def test_workload_is_large_enough(coverage_events):
+    assert sum(len(v) for v in coverage_events.values()) >= 200
+
+
+@pytest.mark.parametrize("path,min_events", [
+    ("range1d", 160), ("box", 60), ("box:grouped", 60), ("qmc", 40)])
+def test_ci_coverage_within_band(coverage_events, path, min_events):
+    """95% CIs behave like 95% CIs: neither permissive (under-coverage would
+    mean the reported intervals lie) nor vacuous (100% coverage would mean
+    they are uselessly wide)."""
+    events = coverage_events[path]
+    assert len(events) >= min_events
+    cov = _coverage(events)
+    assert 0.90 <= cov <= 0.99, f"{path}: coverage {cov:.3f} of {len(events)}"
+
+
+def test_ci_fields_are_well_formed(coverage_events):
+    """Every non-exact result carries a finite, ordered interval around its
+    estimate at the default 95% level, with the effective sample reported."""
+    for path, events in coverage_events.items():
+        for _, r, _ in events:
+            assert np.isfinite(r.ci_lo) and np.isfinite(r.ci_hi), (path, r)
+            assert r.ci_lo <= r.estimate <= r.ci_hi, (path, r)
+            assert r.ci_level == 0.95
+            assert r.n_effective > 0
+
+
+# --- exact paths: zero-width / bounded-error intervals ------------------------
+
+def test_exact_path_reports_zero_width_and_exact_truth(rng):
+    store = TelemetryStore(capacity=512, seed=0)
+    store.track_categorical("code")
+    code = rng.integers(0, 4, 50_000).astype(np.float32)
+    store.add_batch({"code": code})
+    for g in (0.0, 1.0, 2.0, 3.0):
+        r = store.query([AqpQuery("count", (Eq("code", g),))])[0]
+        assert r.path == "exact"
+        truth = float((code == g).sum())
+        assert r.estimate == truth                    # exact, not approximate
+        assert r.ci_lo == r.estimate == r.ci_hi       # zero-width interval
+        assert r.rel_width == 0.0
+        assert r.n_effective == 50_000
+
+
+def test_exact_cm_reports_bounded_interval_containing_truth(rng):
+    """Count-min over-counts by at most the sketch's error bound: the
+    reported interval [est - err, est] must contain the truth, with width
+    bounded by depth * err_bound."""
+    store = TelemetryStore(capacity=512, seed=0)
+    store.track_categorical("wide", kind="cm")
+    values = rng.integers(0, 5_000, 100_000).astype(np.float32)
+    store.add_batch({"wide": values})
+    sketch = store.categoricals["wide"]
+    for c in (0.0, 137.0, 4_999.0):
+        r = store.query([AqpQuery("count", (Eq("wide", c),))])[0]
+        assert r.path == "exact:cm"
+        truth = float((values == c).sum())
+        assert r.ci_lo <= truth <= r.ci_hi
+        assert truth <= r.estimate == r.ci_hi         # over-count only
+        assert r.ci_hi - r.ci_lo <= sketch.depth * sketch.err_bound()
+        assert r.rel_width == 0.0

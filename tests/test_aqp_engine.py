@@ -264,7 +264,8 @@ def test_grouped_kernel_with_group_column_target(rng):
 
 def test_exact_eq_path_count_sum_avg(rng):
     """Eq terms on a tracked dictionary column answer from the per-code
-    frequency sketch: exact, path=="exact", rel_width==inf."""
+    frequency sketch: exact, path=="exact", rel_width==0.0 (no smoothing),
+    zero-width confidence intervals."""
     n = 25_000
     code = rng.choice([0, 1, 2, 3], size=n,
                       p=[0.4, 0.3, 0.2, 0.1]).astype(np.float32)
@@ -283,8 +284,32 @@ def test_exact_eq_path_count_sum_avg(rng):
     assert res[1].estimate == 2.0 * n2
     assert res[2].estimate == 2.0
     assert res[3].estimate == 0.0
-    assert all(r.rel_width == np.inf for r in res)
+    assert all(r.rel_width == 0.0 for r in res)
+    assert all(r.ci_lo == r.estimate == r.ci_hi for r in res)
+    assert all(r.n_effective == n for r in res)
     assert res[0].synopsis_version == store.columns["code"].version
+
+
+def test_rel_width_ordering_exact_best(rng):
+    """The deprecated accuracy proxy must rank exact answers BEST (0.0),
+    constrained KDE answers in between (finite), and genuinely unconstrained
+    estimates worst (inf) — regression for the old rel_width=inf-on-exact
+    bug."""
+    n = 20_000
+    store = TelemetryStore(capacity=512, seed=0)
+    store.track_categorical("code")
+    store.add_batch({"code": rng.integers(0, 4, n).astype(np.float32),
+                     "val": rng.normal(0.0, 1.0, n).astype(np.float32)})
+    exact, ranged, uncon = store.query([
+        AqpQuery("count", (Eq("code", 2.0),)),           # exact sketch
+        AqpQuery("count", (Range("val", -1.0, 1.0),)),   # constrained KDE
+        AqpQuery("sum", (), target="val"),               # whole-table SUM
+    ])
+    assert exact.path == "exact" and exact.rel_width == 0.0
+    assert ranged.path == "range1d" and np.isfinite(ranged.rel_width) \
+        and ranged.rel_width > 0.0
+    assert uncon.rel_width == np.inf
+    assert exact.rel_width < ranged.rel_width < uncon.rel_width
 
 
 def test_exact_eq_falls_back_without_full_coverage(rng):

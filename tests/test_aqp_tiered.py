@@ -1,0 +1,309 @@
+"""TieredReservoir (data/aqp_store.py) and progressive execution
+(core/aqp_query.py): geometric tier ladder invariants, chained weighted
+merges, per-code stratification keeping rare GROUP BY groups alive, the
+checkpoint round-trip (save -> load -> add_batch bit-identity, mirroring
+test_aqp_durability.py), and progressive mode whose final round reproduces
+plain execute bit-for-bit while CI widths tighten tier over tier."""
+import numpy as np
+import pytest
+
+from repro.core import AqpQuery, Box, GroupBy, Range
+from repro.data import TelemetryStore, TieredReservoir
+
+
+def _tiered_store(rng, n=30_000, capacity=1024, n_tiers=4):
+    """Tiered 1-D column (stratified), tiered joint, plain column, exact
+    sketch — every durable shape the tiered checkpoint format covers."""
+    store = TelemetryStore(capacity=capacity, seed=0)
+    store.track_tiered("loss", n_tiers=n_tiers)
+    store.track_tiered(("a", "b"), n_tiers=n_tiers, strat_column="a")
+    store.track_tiered("code", n_tiers=n_tiers, strat_column="code")
+    store.track_categorical("kind")
+    a = rng.normal(0, 1, n).astype(np.float32)
+    store.add_batch({
+        "loss": rng.gamma(2.0, 1.5, n).astype(np.float32),
+        "a": a,
+        "b": (0.8 * a + 0.6 * rng.normal(0, 1, n)).astype(np.float32),
+        "code": rng.integers(0, 4, n).astype(np.float32),
+        "kind": rng.integers(0, 3, n).astype(np.float32),
+        "plain": rng.normal(2, 1, n).astype(np.float32),
+    })
+    return store
+
+
+def _batch(rng, n=4_000):
+    a = rng.normal(0.3, 1, n).astype(np.float32)
+    return {
+        "loss": rng.gamma(2.0, 1.5, n).astype(np.float32),
+        "a": a,
+        "b": (0.8 * a + 0.6 * rng.normal(0, 1, n)).astype(np.float32),
+        "code": rng.integers(0, 4, n).astype(np.float32),
+        "kind": rng.integers(0, 3, n).astype(np.float32),
+        "plain": rng.normal(2, 1, n).astype(np.float32),
+    }
+
+
+_SPECS = [
+    AqpQuery("count", (Range("loss", 1.0, 4.0),)),
+    AqpQuery("sum", (Range("loss", 0.0, 6.0),), target="loss"),
+    AqpQuery("avg", (Box(("a", "b"), (-1.0, -1.0), (1.0, 1.0)),),
+             target="b"),
+    AqpQuery("count", (Range("plain", 1.0, 3.0),)),
+]
+
+
+def _assert_members_identical(r1, r2):
+    np.testing.assert_array_equal(r1.sample(), r2.sample())
+    assert (r1.n_seen, r1.n_filled, r1.version) == \
+        (r2.n_seen, r2.n_filled, r2.version)
+    assert r1.rng.bit_generator.state == r2.rng.bit_generator.state
+
+
+def _assert_tiered_identical(t1: TieredReservoir, t2: TieredReservoir):
+    assert (t1.n_tiers, t1.capacity, t1.columns, t1.strat_column) == \
+        (t2.n_tiers, t2.capacity, t2.columns, t2.strat_column)
+    for a, b in zip(t1.tiers, t2.tiers):
+        _assert_members_identical(a, b)
+    assert sorted(t1.strata) == sorted(t2.strata)
+    for code in t1.strata:
+        _assert_members_identical(t1.strata[code], t2.strata[code])
+    assert t1.strata_overflow == t2.strata_overflow
+
+
+def _assert_rows_identical(r1, r2):
+    for x, y in zip(r1, r2):
+        assert x.estimate == y.estimate, (x, y)
+        assert x.path == y.path and x.synopsis_version == y.synopsis_version
+        assert (x.ci_lo, x.ci_hi, x.n_effective) == \
+            (y.ci_lo, y.ci_hi, y.n_effective)
+        assert x.group == y.group
+
+
+# --- ladder invariants --------------------------------------------------------
+
+def test_tier_geometry_counters_and_clamping(rng):
+    res = TieredReservoir(capacity=1024, n_tiers=4, seed=0)
+    res.add(rng.normal(0, 1, 5_000).astype(np.float32))
+    assert res.tier_sizes() == [128, 256, 512, 1024]
+    assert res.n_seen == 5_000 and res.n_filled == 1024 and res.version == 1
+    np.testing.assert_array_equal(res.sample(), res.sample(3))
+    np.testing.assert_array_equal(res.sample(99), res.sample(3))  # clamped
+    np.testing.assert_array_equal(res.sample(-7), res.sample(0))
+    assert res.sample(0).shape == (128,)
+    with pytest.raises(ValueError, match="n_tiers"):
+        TieredReservoir(capacity=64, n_tiers=0)
+    with pytest.raises(ValueError, match="too small"):
+        TieredReservoir(capacity=4, n_tiers=8)
+
+
+def test_every_tier_is_a_sample_of_the_whole_stream(rng):
+    """Each tier sees every row (not a partition): tier n_seen counters all
+    equal the stream length, and each tier's retained rows are a subset of
+    the stream's values."""
+    res = TieredReservoir(capacity=256, n_tiers=4, seed=1)
+    x = rng.normal(0, 1, 10_000).astype(np.float32)
+    res.add(x)
+    pool = set(x.tolist())
+    for i, tier in enumerate(res.tiers):
+        assert tier.n_seen == 10_000
+        assert set(res.sample(i).tolist()) <= pool
+
+
+# --- weighted merges ----------------------------------------------------------
+
+def test_chained_weighted_merges_preserve_totals(rng):
+    """Property: merge totals are preserved per tier AND per stratum across a
+    chain of merges — each tier of the merged ladder claims exactly the sum
+    of its parents' streams (the weighted-merge core, tier by tier)."""
+    parts = []
+    for i, (mu, n) in enumerate([(0.0, 8_000), (3.0, 4_000), (6.0, 2_000)]):
+        t = TieredReservoir(capacity=128, n_tiers=3, seed=i,
+                            strat_column="x", columns=None)
+        vals = rng.normal(mu, 1, n).astype(np.float32)
+        codes = rng.integers(0, 3, n).astype(np.float32) + 10.0 * i
+        t.add(np.where(rng.random(n) < 0.5, vals, codes).astype(np.float32))
+        parts.append(t)
+    merged = parts[0].merge(parts[1]).merge(parts[2])
+    for i in range(3):
+        assert merged.tiers[i].n_seen == 14_000
+        assert merged.tiers[i].n_filled == merged.tiers[i].capacity
+    assert merged.n_seen == 14_000
+    # strata union: every parent code present, totals additive
+    want_codes = set()
+    for p in parts:
+        want_codes |= set(p.strata)
+    assert set(merged.strata) == want_codes
+    for code in want_codes:
+        total = sum(p.strata[code].n_seen for p in parts if code in p.strata)
+        assert merged.strata[code].n_seen == total
+
+
+def test_merge_shape_mismatch_raises(rng):
+    base = TieredReservoir(capacity=64, n_tiers=3)
+    with pytest.raises(ValueError, match="different shape"):
+        base.merge(TieredReservoir(capacity=64, n_tiers=2))
+    with pytest.raises(ValueError, match="different shape"):
+        base.merge(TieredReservoir(capacity=64, n_tiers=3,
+                                   columns=("a", "b")))
+
+
+# --- stratification: rare codes never lose their last representative ----------
+
+def test_rare_code_survives_flood_and_one_sided_merge(rng):
+    """A code seen 10 times in a 50k-row stream is (with overwhelming
+    probability) displaced from every uniform tier, but its stratum keeps a
+    representative — including through a merge with a ladder that never saw
+    the code at all."""
+    res = TieredReservoir(capacity=128, n_tiers=4, seed=0, strat_column="x")
+    res.add(np.full(10, 9.0, np.float32))                  # the rare code
+    res.add(rng.integers(0, 3, 50_000).astype(np.float32))  # the flood
+    assert 9.0 not in set(res.sample().tolist())           # displaced
+    assert 9.0 in res.codes()                              # still discovered
+    stratum = res.stratum(9.0)
+    assert stratum is not None and len(stratum) == 10
+    np.testing.assert_array_equal(stratum, np.full(10, 9.0, np.float32))
+
+    other = TieredReservoir(capacity=128, n_tiers=4, seed=5, strat_column="x")
+    other.add(rng.integers(0, 3, 5_000).astype(np.float32))
+    merged = res.merge(other)
+    assert 9.0 in merged.codes()                           # one-sided survive
+    assert len(merged.stratum(9.0)) == 10
+    assert merged.stratum(123.0) is None
+
+
+def test_max_strata_overflow_is_sticky_and_keeps_existing(rng):
+    res = TieredReservoir(capacity=64, n_tiers=2, seed=0, strat_column="x",
+                          max_strata=4)
+    res.add(np.arange(4, dtype=np.float32))
+    assert not res.strata_overflow
+    res.add(np.arange(8, dtype=np.float32))       # 4 new codes rejected
+    assert res.strata_overflow and len(res.strata) == 4
+    assert res.codes() == [0.0, 1.0, 2.0, 3.0]
+    assert res.strata[2.0].n_seen == 2            # existing keep updating
+    # NaN codes are never stratified
+    res.add(np.asarray([np.nan, 1.0], np.float32))
+    assert not any(np.isnan(c) for c in res.codes())
+
+
+# --- checkpoint round-trip (acceptance) ---------------------------------------
+
+def test_tiered_roundtrip_then_add_batch_is_bit_identical(rng, tmp_path):
+    """Acceptance: save -> load -> add_batch(B) equals the un-restored store
+    fed the same batch — every tier buffer, stratum, counter, and RNG state
+    bit-exact, and query answers (estimates AND confidence intervals)
+    identical."""
+    store = _tiered_store(rng)
+    store.save(str(tmp_path))
+    restored = TelemetryStore.load(str(tmp_path))
+    _assert_tiered_identical(store.columns["loss"], restored.columns["loss"])
+    _assert_tiered_identical(store.columns["code"], restored.columns["code"])
+    _assert_tiered_identical(store.joints[("a", "b")],
+                             restored.joints[("a", "b")])
+    _assert_members_identical(store.columns["plain"],
+                              restored.columns["plain"])
+
+    batch = _batch(rng)
+    store.add_batch(batch)
+    restored.add_batch(batch)
+    _assert_tiered_identical(store.columns["loss"], restored.columns["loss"])
+    _assert_tiered_identical(store.columns["code"], restored.columns["code"])
+    _assert_tiered_identical(store.joints[("a", "b")],
+                             restored.joints[("a", "b")])
+    _assert_rows_identical(store.query(_SPECS), restored.query(_SPECS))
+
+
+def test_tiered_restore_warm_starts_synopses_and_plans(rng, tmp_path):
+    """Per-tier fitted synopses ride in the snapshot and the shared engine's
+    plans are primed on restore: a warm-started store answers previously-seen
+    specs (including a tier-0 coarse pass) with zero cache misses and zero
+    plan misses."""
+    store = _tiered_store(rng, n=10_000, capacity=512)
+    engine = store.shared_engine()
+    compiled = engine.compile(_SPECS)
+    engine.run_compiled(compiled, tier=0)          # fit tier-0 synopses
+    want = engine.run_compiled(compiled)           # and the full-tier ones
+    store.save(str(tmp_path))
+
+    restored = TelemetryStore.load(str(tmp_path))
+    r_engine = restored.shared_engine()
+    misses0 = restored.cache.stats()["misses"]
+    plan_misses0 = r_engine.plans.stats()["misses"]
+    r_compiled = r_engine.compile(_SPECS)
+    r_engine.run_compiled(r_compiled, tier=0)
+    got = r_engine.run_compiled(r_compiled)
+    assert restored.cache.stats()["misses"] == misses0
+    assert r_engine.plans.stats()["misses"] == plan_misses0
+    _assert_rows_identical(want, got)
+
+
+def test_track_tiered_validation(rng):
+    store = TelemetryStore(capacity=256, seed=0)
+    with pytest.raises(ValueError, match="strat_column"):
+        store.track_tiered("x", strat_column="y")
+    store.add_batch({"x": rng.normal(0, 1, 100).astype(np.float32)})
+    with pytest.raises(ValueError, match="before add_batch"):
+        store.track_tiered("x")
+    store.track_tiered("y", n_tiers=3)
+    store.track_tiered("y", n_tiers=3)            # idempotent
+
+
+# --- progressive execution ----------------------------------------------------
+
+def test_progressive_final_round_matches_execute_bit_identically(rng):
+    """mode="progressive" yields one result set per tier; the last round must
+    reproduce plain execute() bit-for-bit (estimates, paths, versions, AND
+    confidence intervals), because the top tier IS the full sample."""
+    store = _tiered_store(rng)
+    engine = store.shared_engine()
+    rounds = list(engine.execute(_SPECS, mode="progressive"))
+    assert [t for t, _ in rounds] == [0, 1, 2, 3]
+    want = engine.execute(_SPECS)
+    _assert_rows_identical(rounds[-1][1], want)
+
+
+def test_progressive_ci_widths_tighten_and_n_effective_grows(rng):
+    """Tier over tier, each query's effective sample grows geometrically and
+    the median CI width shrinks; untiered columns stay constant across
+    rounds (they have only the one sample)."""
+    store = _tiered_store(rng)
+    rounds = list(store.shared_engine().execute(_SPECS, mode="progressive"))
+    tiered_q = 0                                   # Range on tiered "loss"
+    plain_q = 3                                    # Range on untiered column
+    n_eff = [r[1][tiered_q].n_effective for r in rounds]
+    assert n_eff == [128, 256, 512, 1024]
+    widths = np.asarray(
+        [[q.ci_width for q in results] for _, results in rounds])
+    assert np.all(np.isfinite(widths))
+    med = np.median(widths, axis=1)
+    assert all(a >= b for a, b in zip(med, med[1:]))          # tightening
+    assert widths[0, tiered_q] > widths[-1, tiered_q]
+    np.testing.assert_array_equal(widths[:, plain_q],
+                                  np.full(4, widths[0, plain_q]))
+
+
+def test_progressive_mode_validation(rng):
+    store = _tiered_store(rng, n=2_000, capacity=256)
+    with pytest.raises(ValueError, match="mode"):
+        store.shared_engine().execute(_SPECS, mode="bogus")
+
+
+# --- rare GROUP BY discovery via strata ---------------------------------------
+
+def test_rare_group_discovered_from_strata_union(rng):
+    """GROUP BY value discovery unions the uniform sample's codes with the
+    strata codes: a 10-in-40k group displaced from every tier still gets a
+    result row (with a real estimate from the KDE), instead of silently
+    vanishing from the answer."""
+    store = TelemetryStore(capacity=128, seed=0)
+    store.track_tiered("code", strat_column="code")
+    store.add_batch({"code": np.full(10, 9.0, np.float32)})
+    store.add_batch(
+        {"code": rng.integers(0, 3, 40_000).astype(np.float32)})
+    res = store.columns["code"]
+    assert 9.0 not in set(np.round(res.sample()).tolist())   # displaced
+    rows = store.query(
+        [AqpQuery("count", (), group_by=GroupBy("code"))])
+    groups = {r.group for r in rows}
+    assert groups == {0.0, 1.0, 2.0, 9.0}
+    rare = next(r for r in rows if r.group == 9.0)
+    assert np.isfinite(rare.estimate) and rare.estimate >= 0.0

@@ -40,5 +40,35 @@ def speedup_limit(ns_slow, t_slow, ns_fast, t_fast) -> float:
     return float(a_s / max(a_f, 1e-30))
 
 
-def emit(name: str, us: float, derived: str = "") -> None:
+#: every `emit()` call of the process, in order — `benchmarks.run --json`
+#: drains this into BENCH_aqp.json
+RESULTS: List[Dict] = []
+
+
+def emit(name: str, us: float, derived: str = "",
+         samples: List[float] = None, **extra) -> None:
+    """Print the CSV line and record the measurement.
+
+    Besides stdout, each call appends a row to `RESULTS` (for the JSON
+    report) and routes the measurement through the process-global metrics
+    registry as a ``bench.us_per_call{bench=name}`` histogram — benchmarks
+    use the same instrument the serving stack exports, so one
+    `obs.export_json` snapshot carries both.  `samples` (raw per-repeat
+    timings, µs) enriches the JSON row with p50/p99; `extra` keys (e.g.
+    ``speedup=3.2``) pass through to the row verbatim.
+    """
     print(f"{name},{us:.1f},{derived}", flush=True)
+    row: Dict = {"name": name, "us_per_call": float(us), "derived": derived}
+    if samples:
+        s = np.sort(np.asarray(samples, np.float64))
+        row["p50_us"] = float(s[len(s) // 2])
+        row["p99_us"] = float(s[min(len(s) - 1, int(len(s) * 0.99))])
+    row.update(extra)
+    RESULTS.append(row)
+    try:
+        from repro import obs
+    except ImportError:        # registry is optional for standalone use
+        return
+    h = obs.get_registry().histogram("bench.us_per_call", bench=name)
+    for v in (samples if samples else (us,)):
+        h.observe(float(v))

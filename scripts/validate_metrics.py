@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Schema-check observability artifacts (CI gate).
+
+    python scripts/validate_metrics.py /tmp/aqp-metrics.json
+    python scripts/validate_metrics.py --bench BENCH_aqp.json
+
+Default mode validates a `serve --mode aqp --metrics-out` snapshot
+(`obs.export_json` format): the required instruments must be present with
+sane values — queue depth gauge, per-path latency histograms, synopsis
+cache hit/miss counters, and flush-reason counters.  `--bench` validates a
+`benchmarks.run --json` report instead.  Exits non-zero with one line per
+violation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List
+
+HIST_KEYS = {"labels", "count", "sum", "mean", "min", "max",
+             "p50", "p95", "p99"}
+
+
+def _entries(doc: dict, kind: str, name: str, errs: List[str]) -> list:
+    entries = doc.get(kind, {}).get(name)
+    if not entries:
+        errs.append(f"missing {kind[:-1]} {name!r}")
+        return []
+    for e in entries:
+        if "labels" not in e or not isinstance(e["labels"], dict):
+            errs.append(f"{name}: entry without labels dict: {e}")
+    return entries
+
+
+def validate_metrics(doc: dict) -> List[str]:
+    errs: List[str] = []
+    for key in ("ts", "counters", "gauges", "histograms"):
+        if key not in doc:
+            errs.append(f"missing top-level key {key!r}")
+    if errs:
+        return errs
+
+    # queue depth gauge, one per session
+    for e in _entries(doc, "gauges", "aqp.admission.depth", errs):
+        if "session" not in e["labels"]:
+            errs.append(f"aqp.admission.depth entry missing session label: "
+                        f"{e['labels']}")
+        if e.get("value", -1) < 0:
+            errs.append(f"aqp.admission.depth negative: {e}")
+
+    # per-path latency histograms with full summaries
+    paths = set()
+    for e in _entries(doc, "histograms", "aqp.query.latency_us", errs):
+        missing = HIST_KEYS - set(e)
+        if missing:
+            errs.append(f"aqp.query.latency_us entry missing {sorted(missing)}")
+            continue
+        paths.add(e["labels"].get("path"))
+        if e["count"] > 0 and not (e["min"] <= e["p50"] <= e["p95"]
+                                   <= e["p99"] <= e["max"]):
+            errs.append(f"aqp.query.latency_us percentiles out of order for "
+                        f"path={e['labels'].get('path')}")
+    if not paths - {None}:
+        errs.append("aqp.query.latency_us has no path-labelled entries")
+
+    # cache hit rates need both counters present (zero values are fine)
+    _entries(doc, "counters", "aqp.cache.hits", errs)
+    _entries(doc, "counters", "aqp.cache.misses", errs)
+
+    # flush reasons, every label from the admission vocabulary
+    known = {"watermark", "deadline", "manual", "close"}
+    for e in _entries(doc, "counters", "aqp.admission.flush_reason", errs):
+        reason = e["labels"].get("reason")
+        if reason not in known:
+            errs.append(f"unknown flush reason {reason!r}")
+    return errs
+
+
+def validate_bench(doc: dict) -> List[str]:
+    errs: List[str] = []
+    for key in ("git_sha", "ts", "config", "results"):
+        if key not in doc:
+            errs.append(f"missing top-level key {key!r}")
+    if errs:
+        return errs
+    if not doc["results"]:
+        errs.append("empty results list")
+    names = set()
+    for r in doc["results"]:
+        for key in ("name", "us_per_call"):
+            if key not in r:
+                errs.append(f"result missing {key!r}: {r}")
+        if r.get("us_per_call", -1) <= 0:
+            errs.append(f"non-positive us_per_call: {r.get('name')}")
+        names.add(r.get("name", ""))
+    if not any(n.startswith("aqp_") for n in names):
+        errs.append("no aqp_* benchmark results present")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="JSON artifact to validate")
+    ap.add_argument("--bench", action="store_true",
+                    help="validate a benchmarks.run --json report instead "
+                         "of a metrics snapshot")
+    args = ap.parse_args()
+    with open(args.path, encoding="utf-8") as f:
+        doc = json.load(f)
+    errs = validate_bench(doc) if args.bench else validate_metrics(doc)
+    for e in errs:
+        print(f"FAIL {args.path}: {e}", file=sys.stderr)
+    if not errs:
+        kind = "bench report" if args.bench else "metrics snapshot"
+        print(f"OK {args.path}: valid {kind}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

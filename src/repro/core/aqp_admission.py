@@ -51,12 +51,16 @@ results always carry the version that actually answered them.
 """
 from __future__ import annotations
 
+import itertools
+import os
 import threading
 import time
 import weakref
 from collections import OrderedDict
 from concurrent.futures import Future
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro import obs
 
 from .aqp_query import AqpQuery, AqpResult, QueryEngine, _Compiled
 
@@ -68,6 +72,16 @@ FLUSH_CLOSE = "close"
 # priority class -> tier budget: "coarse" answers from the smallest tier of
 # a TieredReservoir, "full" from the whole sample (None = no budget)
 DEFAULT_PRIORITY_TIERS: Dict[str, Optional[int]] = {"full": None, "coarse": 0}
+
+# Session ids label each session's registry counters.  The pid component
+# keeps ids distinct across serving restarts: a restored checkpoint carries
+# the previous process's counters, and a new session reusing an old label
+# would silently resume (inflate) the dead session's totals.
+_SESSION_IDS = itertools.count(1)
+
+
+def _new_session_id() -> str:
+    return f"{os.getpid():x}.{next(_SESSION_IDS)}"
 
 
 class AdmissionFull(RuntimeError):
@@ -90,16 +104,19 @@ class _Ticket:
 
 
 class _Pending:
-    """One compiled execution unit awaiting flush."""
+    """One compiled execution unit awaiting flush.  `ctx` carries the submit
+    span's (trace_id, span_id) across the submit->flusher thread hop so the
+    flush span can parent onto it (None when tracing is disabled)."""
 
-    __slots__ = ("compiled", "ticket", "part", "submitted_at")
+    __slots__ = ("compiled", "ticket", "part", "submitted_at", "ctx")
 
     def __init__(self, compiled: _Compiled, ticket: _Ticket, part: int,
-                 submitted_at: float):
+                 submitted_at: float, ctx: Optional[Tuple[int, int]] = None):
         self.compiled = compiled
         self.ticket = ticket
         self.part = part
         self.submitted_at = submitted_at
+        self.ctx = ctx
 
 
 # (column-or-tuple, selector, tier-or-None, version)
@@ -225,19 +242,47 @@ class AqpSession:
         self._queue = AdmissionQueue()
         self._closed = False
         self._thread: Optional[threading.Thread] = None
-        # counters (all mutated under the lock)
-        self.submitted = 0            # queries accepted by submit()
-        self.executed = 0             # compiled units flushed
-        self.flushes = 0
-        self.coalesced = 0            # units flushed in a batch of size > 1
-        self.invalidations = 0        # units re-keyed by a version bump
-        self.blocked = 0              # submits that waited at max_pending
-        self.shed = 0                 # submits refused at max_pending
-        self.max_depth = 0
-        self.flush_reasons: Dict[str, int] = {}
-        self.priority_counts: Dict[str, int] = {}
-        self._batch_total = 0
         store = engine.store
+        # Counters live in the store's metrics registry, labelled with this
+        # session's id — NOT on the session object.  The registry outlives
+        # the session, so `store.stats()["admission"]` aggregates every
+        # session ever opened (the old per-object counters vanished with
+        # each garbage-collected session, silently dropping totals).  The
+        # legacy attribute names (`session.submitted`, ...) remain as
+        # read-only properties below.
+        self.sid = _new_session_id()
+        metrics = getattr(store, "metrics", None)
+        if metrics is None:
+            metrics = obs.MetricsRegistry()     # engine over a bare store
+        self.metrics = metrics
+        sid = self.sid
+        self._c_submitted = metrics.counter("aqp.admission.submitted",
+                                            session=sid)
+        self._c_executed = metrics.counter("aqp.admission.executed",
+                                           session=sid)
+        self._c_flushes = metrics.counter("aqp.admission.flushes",
+                                          session=sid)
+        self._c_coalesced = metrics.counter("aqp.admission.coalesced",
+                                            session=sid)
+        self._c_invalidations = metrics.counter("aqp.admission.invalidations",
+                                                session=sid)
+        self._c_blocked = metrics.counter("aqp.admission.blocked",
+                                          session=sid)
+        self._c_shed = metrics.counter("aqp.admission.shed", session=sid)
+        self._c_batch_rows = metrics.counter("aqp.admission.batch_rows",
+                                             session=sid)
+        self._g_depth = metrics.gauge("aqp.admission.depth", session=sid)
+        self._g_max_depth = metrics.gauge("aqp.admission.max_depth",
+                                          session=sid)
+        self._h_batch = metrics.histogram(
+            "aqp.admission.batch_size",
+            buckets=(1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024),
+            session=sid)
+        # A session abandoned without close() may hold pending entries its
+        # flusher never drains (the thread exits when the weakref dies);
+        # zero its depth gauge at collection so store-level `pending` does
+        # not leak phantom queries forever.
+        weakref.finalize(self, self._g_depth.set, 0.0)
         unsub = getattr(store, "subscribe", None)
         self._unsubscribe = None
         if unsub is not None:
@@ -276,30 +321,37 @@ class AqpSession:
             raise ValueError(f"unknown priority {name!r}; "
                              f"have {sorted(self.priority_tiers)}")
         tier = self.priority_tiers[name]
-        parts = self.engine.compile(query)
-        resolver = self.engine.resolver(self.selector, tier=tier)
-        keyed = []
-        for c in parts:
-            key3, c2, version = resolver.key_for(c)
-            keyed.append((key3 + (version,), c2))
-        ticket = _Ticket(len(parts), single=query.group_by is None)
-        due: List[BucketKey] = []
-        with self._lock:
-            if self._closed:
-                raise RuntimeError("cannot submit to a closed AqpSession")
-            self._admit(len(keyed))
-            now = self.time_fn()
-            for part, (key, c) in enumerate(keyed):
-                size = self._queue.add(key, _Pending(c, ticket, part, now))
-                if self.watermark is not None and size >= self.watermark:
-                    due.append(key)
-            self.submitted += 1
-            self.priority_counts[name] = self.priority_counts.get(name, 0) + 1
-            self.max_depth = max(self.max_depth, self._queue.depth)
-            if self._auto_flush and self.max_delay is not None \
-                    and self._thread is None:
-                self._start_flusher()
-            self._wakeup.notify_all()
+        # The submit span is the root of the query's trace; its ctx rides on
+        # every _Pending so the flush (another thread) can parent onto it.
+        with obs.span("admission.submit", aggregate=query.aggregate,
+                      priority=name, session=self.sid) as sp:
+            parts = self.engine.compile(query)
+            resolver = self.engine.resolver(self.selector, tier=tier)
+            keyed = []
+            for c in parts:
+                key3, c2, version = resolver.key_for(c)
+                keyed.append((key3 + (version,), c2))
+            ticket = _Ticket(len(parts), single=query.group_by is None)
+            due: List[BucketKey] = []
+            with self._lock:
+                if self._closed:
+                    raise RuntimeError("cannot submit to a closed AqpSession")
+                self._admit(len(keyed))
+                now = self.time_fn()
+                for part, (key, c) in enumerate(keyed):
+                    size = self._queue.add(
+                        key, _Pending(c, ticket, part, now, ctx=sp.ctx))
+                    if self.watermark is not None and size >= self.watermark:
+                        due.append(key)
+                self._c_submitted.inc()
+                self.metrics.counter("aqp.admission.priority",
+                                     session=self.sid, priority=name).inc()
+                self._g_depth.set(self._queue.depth)
+                self._g_max_depth.max(self._queue.depth)
+                if self._auto_flush and self.max_delay is not None \
+                        and self._thread is None:
+                    self._start_flusher()
+                self._wakeup.notify_all()
         # Past-deadline buckets flush first (oldest-first, via poll): without
         # this, a lone sub-watermark ticket whose deadline has passed would
         # keep waiting for the background flusher even while fresh submits
@@ -372,26 +424,78 @@ class AqpSession:
         with self._lock:
             return self._queue.depth
 
+    # Legacy counter attributes, now views over this session's registry
+    # instruments (same names and semantics callers relied on).
+
+    @property
+    def submitted(self) -> int:
+        return int(self._c_submitted.value)
+
+    @property
+    def executed(self) -> int:
+        return int(self._c_executed.value)
+
+    @property
+    def flushes(self) -> int:
+        return int(self._c_flushes.value)
+
+    @property
+    def coalesced(self) -> int:
+        return int(self._c_coalesced.value)
+
+    @property
+    def invalidations(self) -> int:
+        return int(self._c_invalidations.value)
+
+    @property
+    def blocked(self) -> int:
+        return int(self._c_blocked.value)
+
+    @property
+    def shed(self) -> int:
+        return int(self._c_shed.value)
+
+    @property
+    def max_depth(self) -> int:
+        return int(self._g_max_depth.value)
+
+    @property
+    def flush_reasons(self) -> Dict[str, int]:
+        return {labels["reason"]: int(n) for labels, n in
+                self.metrics.collect_counters("aqp.admission.flush_reason",
+                                              session=self.sid)}
+
+    @property
+    def priority_counts(self) -> Dict[str, int]:
+        return {labels["priority"]: int(n) for labels, n in
+                self.metrics.collect_counters("aqp.admission.priority",
+                                              session=self.sid)}
+
     def stats(self) -> Dict[str, object]:
+        """This session's counters as the familiar dict — a *view* over the
+        metrics registry (every value below is also queryable there under
+        `aqp.admission.*` with `session=sid` labels)."""
         with self._lock:
-            mean_batch = (self._batch_total / self.flushes
-                          if self.flushes else 0.0)
-            return {
-                "submitted": self.submitted,
-                "executed": self.executed,
-                "pending": self._queue.depth,
-                "flushes": self.flushes,
-                "coalesced": self.coalesced,
-                "mean_batch": mean_batch,
-                "flush_reasons": dict(self.flush_reasons),
-                "invalidations": self.invalidations,
-                "max_pending": self.max_pending,
-                "blocked": self.blocked,
-                "shed": self.shed,
-                "max_depth": self.max_depth,
-                "priorities": dict(self.priority_counts),
-                "plan_cache": self.engine.plans.stats(),
-            }
+            pending = self._queue.depth
+        flushes = self.flushes
+        mean_batch = (self._c_batch_rows.value / flushes
+                      if flushes else 0.0)
+        return {
+            "submitted": self.submitted,
+            "executed": self.executed,
+            "pending": pending,
+            "flushes": flushes,
+            "coalesced": self.coalesced,
+            "mean_batch": mean_batch,
+            "flush_reasons": self.flush_reasons,
+            "invalidations": self.invalidations,
+            "max_pending": self.max_pending,
+            "blocked": self.blocked,
+            "shed": self.shed,
+            "max_depth": self.max_depth,
+            "priorities": self.priority_counts,
+            "plan_cache": self.engine.plans.stats(),
+        }
 
     # -- internals -----------------------------------------------------------
 
@@ -420,11 +524,11 @@ class AqpSession:
         if not over():
             return
         if self.overflow == "shed":
-            self.shed += 1
+            self._c_shed.inc()
             raise AdmissionFull(
                 f"admission queue at max_pending={self.max_pending} "
                 f"({self._queue.depth} pending); resubmit later")
-        self.blocked += 1
+        self._c_blocked.inc()
         while over():
             self._wakeup.wait(timeout=self._BLOCK_TICK)
             if self._closed:
@@ -471,13 +575,14 @@ class AqpSession:
                 colkey, sel, tier, version = key
                 fresh = bumped.get(colkey)
                 if fresh is not None and fresh != version:
-                    self.invalidations += self._queue.rekey(
-                        key, (colkey, sel, tier, fresh))
+                    self._c_invalidations.inc(self._queue.rekey(
+                        key, (colkey, sel, tier, fresh)))
 
     def _flush_key(self, key: BucketKey, reason: str) -> int:
         with self._lock:
             pendings = self._queue.pop(key)
             if pendings:
+                self._g_depth.set(self._queue.depth)
                 self._wakeup.notify_all()     # free submitters at max_pending
         if not pendings:
             return 0
@@ -488,6 +593,7 @@ class AqpSession:
         with self._lock:
             batches = self._queue.pop_all()
             if batches:
+                self._g_depth.set(0)
                 self._wakeup.notify_all()     # free submitters at max_pending
         total = 0
         for key, pendings in batches:
@@ -507,20 +613,33 @@ class AqpSession:
             compiled.append(p.compiled)
         error: Optional[BaseException] = None
         results: List[AqpResult] = []
-        try:
-            results = self.engine.run_compiled(compiled, selector=self.selector,
-                                               backend=self.backend,
-                                               tier=key[2])
-        except BaseException as exc:            # surface through the futures
-            error = exc
+        # Parent the flush span onto the oldest pending's submit span: the
+        # trace started at submit() continues here even though the flush runs
+        # on a different thread (the ctx tuple made the hop explicitly).
+        t0 = time.perf_counter()
+        with obs.span("admission.flush", parent=pendings[0].ctx,
+                      reason=reason, batch=len(pendings), key=key[0],
+                      tier=key[2], session=self.sid):
+            try:
+                results = self.engine.run_compiled(
+                    compiled, selector=self.selector, backend=self.backend,
+                    tier=key[2])
+            except BaseException as exc:        # surface through the futures
+                error = exc
+        if obs.enabled():
+            self.metrics.histogram("aqp.admission.flush_us",
+                                   session=self.sid).observe(
+                (time.perf_counter() - t0) * 1e6)
         done: List[_Ticket] = []
         with self._lock:
-            self.flushes += 1
-            self.flush_reasons[reason] = self.flush_reasons.get(reason, 0) + 1
-            self._batch_total += len(pendings)
-            self.executed += len(pendings)
+            self._c_flushes.inc()
+            self.metrics.counter("aqp.admission.flush_reason",
+                                 session=self.sid, reason=reason).inc()
+            self._c_batch_rows.inc(len(pendings))
+            self._h_batch.observe(len(pendings))
+            self._c_executed.inc(len(pendings))
             if len(pendings) > 1:
-                self.coalesced += len(pendings)
+                self._c_coalesced.inc(len(pendings))
             for p in pendings:
                 t = p.ticket
                 if error is not None:

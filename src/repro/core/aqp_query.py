@@ -34,11 +34,14 @@ through this module, bit-for-bit identical to `QueryEngine.execute`.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from .aqp import (OP_CODES, OP_COUNT, OP_SUM, KDESynopsis,
                   batch_query_1d, canonical_selector)
@@ -411,17 +414,27 @@ class PlanCache:
     (add_batch therefore invalidates implicitly, same contract as the
     SynopsisCache underneath)."""
 
-    def __init__(self):
+    def __init__(self, metrics: Optional[obs.MetricsRegistry] = None):
         self._entries: Dict[object, Tuple[int, _GroupPlan]] = {}
         self.hits = 0
         self.misses = 0
+        # registry mirror (aqp.plan.hits/misses), resolved once
+        if metrics is not None:
+            self._m_hits = metrics.counter("aqp.plan.hits")
+            self._m_misses = metrics.counter("aqp.plan.misses")
+        else:
+            self._m_hits = self._m_misses = None
 
     def get(self, key, version: int) -> Optional[_GroupPlan]:
         ent = self._entries.get(key)
         if ent is not None and ent[0] == version:
             self.hits += 1
+            if self._m_hits is not None:
+                self._m_hits.inc()
             return ent[1]
         self.misses += 1
+        if self._m_misses is not None:
+            self._m_misses.inc()
         return None
 
     def put(self, key, version: int, plan: _GroupPlan) -> None:
@@ -636,7 +649,9 @@ def _pad_rows(arr: np.ndarray, m: int) -> np.ndarray:
 
 def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
                backend: str, n_qmc: int,
-               ci_level: float = DEFAULT_CI_LEVEL
+               ci_level: float = DEFAULT_CI_LEVEL,
+               metrics: Optional[obs.MetricsRegistry] = None,
+               tier: Optional[int] = None
                ) -> List[Tuple[float, str, float, float, int]]:
     """Answer one resolved group in batched passes; returns one
     (estimate, path label, ci_lo, ci_hi, n_effective) per entry, in entry
@@ -683,44 +698,71 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
     n_eff = int(x.shape[0])
     p = 0.5 + ci_level / 2.0
 
+    # Instrumentation below (spans, fences, histograms) only fires with
+    # `repro.obs` enabled: the NOOP span costs one call, `obs.fence` returns
+    # immediately, and the kernel invocations themselves are untouched — so
+    # disabled-mode execution stays bit-identical with no extra jit traces
+    # (both test-enforced).  Fencing inside the kernel/CI spans makes their
+    # durations device-true instead of async-dispatch artifacts.
+    enabled = obs.enabled()
+
     out: Dict[int, Tuple[float, str, float, float, int]] = {}
     if rest:
         n = len(rest)
         m = _pad_count(n)
+        t_grp = time.perf_counter() if enabled else 0.0
         ops_np = _pad_rows(np.asarray([c.op for c in rest], np.int32), m)
         if plan.kind == "qmc":
             lo = _pad_rows(np.asarray([c.lo for c in rest], np.float64), m)
             hi = _pad_rows(np.asarray([c.hi for c in rest], np.float64), m)
             tgt = _pad_rows(np.asarray([c.tgt for c in rest], np.int32), m)
-            ans = batch_query_qmc(x, syn.H, lo, hi, tgt, ops_np, scale,
-                                  n_qmc=n_qmc)
-            se, dof = qmc_subsample_se(x, syn.H, lo, hi, tgt, ops_np,
-                                       syn.n_source, n_qmc)
+            with obs.span("engine.kernel", path="qmc", n=n, tier=tier):
+                ans = batch_query_qmc(x, syn.H, lo, hi, tgt, ops_np, scale,
+                                      n_qmc=n_qmc)
+                obs.fence(ans)
+            with obs.span("engine.ci", path="qmc", n=n):
+                se, dof = qmc_subsample_se(x, syn.H, lo, hi, tgt, ops_np,
+                                           syn.n_source, n_qmc)
+                obs.fence(se)
             q_ci = t_ppf(p, dof)
             path = "qmc"
         elif plan.kind == "range1d":
             a = _pad_rows(np.asarray([c.lo[0] for c in rest], np.float32), m)
             b = _pad_rows(np.asarray([c.hi[0] for c in rest], np.float32), m)
-            ans = batch_query_1d(syn.x, syn.h, jnp.asarray(a), jnp.asarray(b),
-                                 jnp.asarray(ops_np), scale, backend=backend)
-            mom = moments_1d(syn.x, syn.h, jnp.asarray(a), jnp.asarray(b))
-            se = se_from_moments(ops_np, mom, plan.scale, n_eff)
-            q_ci = norm_ppf(p)
             path = "range1d" if backend == "jnp" else f"range1d:{backend}"
+            with obs.span("engine.kernel", path=path, n=n, tier=tier):
+                ans = batch_query_1d(syn.x, syn.h, jnp.asarray(a),
+                                     jnp.asarray(b), jnp.asarray(ops_np),
+                                     scale, backend=backend)
+                obs.fence(ans)
+            with obs.span("engine.ci", path=path, n=n):
+                mom = moments_1d(syn.x, syn.h, jnp.asarray(a), jnp.asarray(b))
+                se = se_from_moments(ops_np, mom, plan.scale, n_eff)
+                obs.fence(se)
+            q_ci = norm_ppf(p)
         else:
             lo = _pad_rows(np.asarray([c.lo for c in rest], np.float32), m)
             hi = _pad_rows(np.asarray([c.hi for c in rest], np.float32), m)
             tgt = _pad_rows(np.asarray([c.tgt for c in rest], np.int32), m)
-            ans = batch_query_box(x, syn.h_diag(), jnp.asarray(lo),
-                                  jnp.asarray(hi), jnp.asarray(tgt),
-                                  jnp.asarray(ops_np), scale, backend=backend)
-            mom = moments_box(x, syn.h_diag(), jnp.asarray(lo),
-                              jnp.asarray(hi), jnp.asarray(tgt))
-            se = se_from_moments(ops_np, mom, plan.scale, n_eff)
-            q_ci = norm_ppf(p)
             path = "box" if backend == "jnp" else f"box:{backend}"
+            with obs.span("engine.kernel", path=path, n=n, tier=tier):
+                ans = batch_query_box(x, syn.h_diag(), jnp.asarray(lo),
+                                      jnp.asarray(hi), jnp.asarray(tgt),
+                                      jnp.asarray(ops_np), scale,
+                                      backend=backend)
+                obs.fence(ans)
+            with obs.span("engine.ci", path=path, n=n):
+                mom = moments_box(x, syn.h_diag(), jnp.asarray(lo),
+                                  jnp.asarray(hi), jnp.asarray(tgt))
+                se = se_from_moments(ops_np, mom, plan.scale, n_eff)
+                obs.fence(se)
+            q_ci = norm_ppf(p)
         ans_np = np.asarray(ans, np.float64)[:n]
         se_np = np.asarray(se, np.float64)[:n]
+        if enabled and metrics is not None:
+            metrics.histogram("aqp.query.latency_us", path=path,
+                              tier=tier).observe(
+                (time.perf_counter() - t_grp) * 1e6)
         for c, est, s in zip(rest, ans_np, se_np):
             est = float(est)
             out[id(c)] = (est, path, est - q_ci * s, est + q_ci * s, n_eff)
@@ -728,13 +770,17 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
     for fam in families:
         g_axis = fam[0].group_axis
         gm = _pad_count(len(fam))
+        t_grp = time.perf_counter() if enabled else 0.0
         glo = _pad_rows(np.asarray([c.lo[g_axis] for c in fam], np.float32),
                         gm)
         ghi = _pad_rows(np.asarray([c.hi[g_axis] for c in fam], np.float32),
                         gm)
-        ans = batch_query_box_grouped(
-            x, syn.h_diag(), fam[0].lo, fam[0].hi, glo, ghi,
-            g_axis=g_axis, tgt=fam[0].tgt, op=fam[0].op, scale=scale)
+        with obs.span("engine.kernel", path="box:grouped", n=len(fam),
+                      tier=tier):
+            ans = batch_query_box_grouped(
+                x, syn.h_diag(), fam[0].lo, fam[0].hi, glo, ghi,
+                g_axis=g_axis, tgt=fam[0].tgt, op=fam[0].op, scale=scale)
+            obs.fence(ans)
         ans_np = np.asarray(ans, np.float64)[:len(fam)]
         # family moments run on the per-entry FULL boxes (each entry's box
         # already carries its group window from _compile)
@@ -742,10 +788,16 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
         fhi = _pad_rows(np.asarray([c.hi for c in fam], np.float32), gm)
         ftgt = _pad_rows(np.asarray([c.tgt for c in fam], np.int32), gm)
         fops = np.full(gm, fam[0].op, np.int32)
-        mom = moments_box(x, syn.h_diag(), jnp.asarray(flo),
-                          jnp.asarray(fhi), jnp.asarray(ftgt))
-        se_np = np.asarray(se_from_moments(fops, mom, plan.scale, n_eff),
-                           np.float64)[:len(fam)]
+        with obs.span("engine.ci", path="box:grouped", n=len(fam)):
+            mom = moments_box(x, syn.h_diag(), jnp.asarray(flo),
+                              jnp.asarray(fhi), jnp.asarray(ftgt))
+            se = se_from_moments(fops, mom, plan.scale, n_eff)
+            obs.fence(se)
+        se_np = np.asarray(se, np.float64)[:len(fam)]
+        if enabled and metrics is not None:
+            metrics.histogram("aqp.query.latency_us", path="box:grouped",
+                              tier=tier).observe(
+                (time.perf_counter() - t_grp) * 1e6)
         q_ci = norm_ppf(p)
         for c, est, s in zip(fam, ans_np, se_np):
             est = float(est)
@@ -780,18 +832,24 @@ def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
         else:
             remaining.append(c)
 
+    # store-backed resolvers expose the owning store's registry and their
+    # tier budget; the mapping resolver (execute_specs) has neither
+    metrics = getattr(getattr(resolver, "store", None), "metrics", None)
+    tier = getattr(resolver, "tier", None)
+
     groups: "Dict[object, dict]" = {}
-    for c in remaining:
-        key, c2, plan, version = resolver(c)
-        g = groups.setdefault(key, {"plan": plan, "version": version,
-                                    "entries": []})
-        g["entries"].append(c2)
+    with obs.span("engine.plan", n=len(remaining), tier=tier):
+        for c in remaining:
+            key, c2, plan, version = resolver(c)
+            g = groups.setdefault(key, {"plan": plan, "version": version,
+                                        "entries": []})
+            g["entries"].append(c2)
 
     for key, g in groups.items():
         plan: _GroupPlan = g["plan"]
         entries: List[_Compiled] = g["entries"]
         answered = _run_group(key, plan, entries, backend, n_qmc,
-                              ci_level=ci_level)
+                              ci_level=ci_level, metrics=metrics, tier=tier)
         for c, (est, path, ci_lo, ci_hi, n_eff) in zip(entries, answered):
             results[c.slot] = AqpResult(
                 estimate=est, path=path,
@@ -831,7 +889,7 @@ class QueryEngine:
         self.n_qmc = n_qmc
         self.max_groups = max_groups
         self.ci_level = ci_level
-        self.plans = PlanCache()
+        self.plans = PlanCache(metrics=getattr(store, "metrics", None))
 
     # -- planning core (shared by the synchronous path and the admission
     #    layer in repro.core.aqp_admission) ----------------------------------
@@ -865,10 +923,12 @@ class QueryEngine:
                      tier: Optional[int] = None) -> List[AqpResult]:
         """Execute pre-compiled units (slots must be 0..n-1) — the admission
         layer's flush entry point; identical execution to `execute`."""
-        return _execute(compiled, len(compiled),
-                        self.resolver(selector, tier=tier),
-                        backend=backend or self.backend, n_qmc=self.n_qmc,
-                        ci_level=self.ci_level)
+        with obs.span("engine.run_compiled", n=len(compiled), tier=tier,
+                      backend=backend or self.backend):
+            return _execute(compiled, len(compiled),
+                            self.resolver(selector, tier=tier),
+                            backend=backend or self.backend, n_qmc=self.n_qmc,
+                            ci_level=self.ci_level)
 
     # -- the synchronous shell ----------------------------------------------
 

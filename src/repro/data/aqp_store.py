@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import copy
 import threading
+import time
 import weakref
 import zlib
 from collections import OrderedDict
@@ -45,6 +46,7 @@ from typing import (Callable, Dict, Hashable, List, Optional, Sequence,
 
 import numpy as np
 
+from repro import obs
 from repro.core.aqp import KDESynopsis, Query, canonical_selector
 from repro.core.aqp_multid import BoxQuery
 
@@ -516,17 +518,31 @@ class CountMinSketch:
     and reported on path "exact:cm" — same coverage gate as the exact sketch
     (the sketch must have seen the whole stream), bounded error instead of
     none.
+
+    `conservative=True` (Estan & Varghese conservative update) raises a
+    code's cells only as far as needed: per distinct code in a batch,
+    `cells = max(cells, estimate(code) + batch_count)`.  Every cell stays an
+    upper bound for every code hashing into it (the estimate >= the code's
+    true pre-batch count by induction, so estimate + batch_count >= its new
+    true count, and no other cell decreases), so the min-estimate still
+    never under-counts — but cells stop absorbing the full collision mass,
+    which cuts realised error well below the standard update on skewed
+    streams (test-enforced).  The analytic `err_bound` is unchanged (a
+    worst-case bound either way).  Merging adds tables cell-wise as before —
+    the per-sketch upper-bound invariant is additive — but the merged sketch
+    is only flagged conservative when both inputs are.
     """
 
     path = "exact:cm"
 
     def __init__(self, width: int = 2048, depth: int = 4, seed: int = 0,
-                 max_enumerate: int = 64):
+                 max_enumerate: int = 64, conservative: bool = False):
         if width < 1 or depth < 1:
             raise ValueError(f"width/depth must be >= 1, got {width}x{depth}")
         self.width = width
         self.depth = depth
         self.seed = seed
+        self.conservative = conservative
         self.max_enumerate = max_enumerate   # widest code window enumerated
         self.table = np.zeros((depth, width), np.int64)
         self.n_rows = 0
@@ -549,8 +565,24 @@ class CountMinSketch:
         values = np.asarray(values, np.float32).ravel()
         if values.shape[0] == 0:
             return
-        for r in range(self.depth):
-            np.add.at(self.table[r], self._hash(values, r), 1)
+        if self.conservative:
+            # conservative update, vectorised per distinct code: read every
+            # code's current min-estimate against the pre-batch table, then
+            # raise its cells to at most estimate + batch count.  Reading all
+            # estimates before any write only makes estimates lower (tighter)
+            # than the sequential formulation — the upper-bound invariant
+            # needs estimate >= the code's own pre-batch count, which the
+            # pre-batch table already guarantees.
+            codes, counts = np.unique(values, return_counts=True)
+            idx = np.stack([self._hash(codes, r) for r in range(self.depth)])
+            cur = np.stack([self.table[r, idx[r]]
+                            for r in range(self.depth)])
+            target = cur.min(axis=0) + counts
+            for r in range(self.depth):
+                np.maximum.at(self.table[r], idx[r], target)
+        else:
+            for r in range(self.depth):
+                np.add.at(self.table[r], self._hash(values, r), 1)
         # n_rows last, same reason as CategoricalSketch.add: a concurrent
         # reader mid-update must see n_rows < n_seen and fall back
         self.n_rows += values.shape[0]
@@ -641,7 +673,9 @@ class CountMinSketch:
                 f"(or unequal hash parameters)")
         out = CountMinSketch(self.width, self.depth, self.seed,
                              max_enumerate=min(self.max_enumerate,
-                                               other.max_enumerate))
+                                               other.max_enumerate),
+                             conservative=self.conservative
+                             and other.conservative)
         out._mul = self._mul.copy()
         out._add = self._add.copy()
         out.table = self.table + other.table
@@ -651,12 +685,14 @@ class CountMinSketch:
     def stats(self) -> Dict[str, object]:
         return {"kind": "cm", "rows": self.n_rows, "overflowed": False,
                 "width": self.width, "depth": self.depth,
+                "conservative": self.conservative,
                 "err_bound": self.err_bound()}
 
     def state(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
         meta = {"kind": "cm", "n_rows": int(self.n_rows),
                 "width": int(self.width), "depth": int(self.depth),
                 "seed": int(self.seed),
+                "conservative": bool(self.conservative),
                 "max_enumerate": int(self.max_enumerate)}
         # the hash multipliers are persisted, not re-derived on load: numpy
         # does not guarantee Generator streams across versions, and a table
@@ -667,8 +703,10 @@ class CountMinSketch:
     @classmethod
     def from_state(cls, arrays: Dict[str, np.ndarray],
                    meta: Dict[str, object]) -> "CountMinSketch":
+        # `conservative` default False: pre-flag snapshots load as standard
         out = cls(int(meta["width"]), int(meta["depth"]), int(meta["seed"]),
-                  max_enumerate=int(meta["max_enumerate"]))
+                  max_enumerate=int(meta["max_enumerate"]),
+                  conservative=bool(meta.get("conservative", False)))
         out._mul = np.asarray(arrays["mul"], np.uint64)
         out._add = np.asarray(arrays["add"], np.uint64)
         out.table = np.asarray(arrays["table"], np.int64).reshape(
@@ -708,7 +746,8 @@ class SynopsisCache:
     internal state is guarded by one lock.
     """
 
-    def __init__(self, max_entries: int = 128, max_bytes: Optional[int] = None):
+    def __init__(self, max_entries: int = 128, max_bytes: Optional[int] = None,
+                 metrics: Optional[obs.MetricsRegistry] = None):
         self.max_entries = max_entries
         self.max_bytes = max_bytes
         self._entries: "OrderedDict[Tuple[Hashable, str], Tuple[int, KDESynopsis, int]]" = \
@@ -719,6 +758,17 @@ class SynopsisCache:
         self.oversize = 0      # entries refused because nbytes > max_bytes
         self._bytes = 0
         self._lock = threading.Lock()
+        # registry mirror (always-on when a registry is supplied — one lock +
+        # add per event): instruments resolved once here, not per lookup
+        if metrics is not None:
+            self._m_hits = metrics.counter("aqp.cache.hits")
+            self._m_misses = metrics.counter("aqp.cache.misses")
+            self._m_evictions = metrics.counter("aqp.cache.evictions")
+            self._m_entries = metrics.gauge("aqp.cache.entries")
+            self._m_bytes = metrics.gauge("aqp.cache.bytes")
+        else:
+            self._m_hits = self._m_misses = self._m_evictions = None
+            self._m_entries = self._m_bytes = None
 
     def __len__(self) -> int:
         with self._lock:
@@ -737,9 +787,13 @@ class SynopsisCache:
             ent = self._entries.get(key)
             if ent is not None and ent[0] == version:
                 self.hits += 1
+                if self._m_hits is not None:
+                    self._m_hits.inc()
                 self._entries.move_to_end(key)        # LRU: refresh recency
                 return ent[1]
             self.misses += 1
+            if self._m_misses is not None:
+                self._m_misses.inc()
             return None
 
     def put(self, column: ColumnKey, selector: str, version: int, syn: KDESynopsis) -> None:
@@ -764,6 +818,11 @@ class SynopsisCache:
                 _, (_, _, ev_nb) = self._entries.popitem(last=False)
                 self._bytes -= ev_nb
                 self.evictions += 1
+                if self._m_evictions is not None:
+                    self._m_evictions.inc()
+            if self._m_entries is not None:
+                self._m_entries.set(len(self._entries))
+                self._m_bytes.set(self._bytes)
 
     def invalidate(self, column: Optional[ColumnKey] = None) -> None:
         with self._lock:
@@ -790,14 +849,21 @@ class SynopsisCache:
 
 class TelemetryStore:
     def __init__(self, capacity: int = 4096, seed: int = 0,
-                 cache_entries: int = 128, cache_bytes: Optional[int] = None):
+                 cache_entries: int = 128, cache_bytes: Optional[int] = None,
+                 metrics: Optional[obs.MetricsRegistry] = None):
         self.columns: Dict[str, Reservoir] = {}
         self.joints: Dict[Tuple[str, ...], MultiReservoir] = {}
         self.categoricals: Dict[str, CategoricalSketch] = {}
         self.capacity = capacity
         self.seed = seed
+        # every store owns a MetricsRegistry (or shares an injected one):
+        # engine/admission/cache instruments all land here, so co-hosted
+        # stores and tests stay isolated while `serve --metrics-out` exports
+        # one store's registry plus the process-global kernel registry
+        self.metrics = metrics if metrics is not None else obs.MetricsRegistry()
         self.cache = SynopsisCache(max_entries=cache_entries,
-                                   max_bytes=cache_bytes)
+                                   max_bytes=cache_bytes,
+                                   metrics=self.metrics)
         self._listeners: List[Callable[[Dict[ColumnKey, int]], None]] = []
         self._sessions: List["weakref.ref"] = []
         # shared engines keyed (selector, backend): query()/session() route
@@ -885,7 +951,7 @@ class TelemetryStore:
 
     def track_categorical(self, column: str, max_codes: int = 4096,
                           kind: str = "exact", width: int = 2048,
-                          depth: int = 4) -> None:
+                          depth: int = 4, conservative: bool = False) -> None:
         """Register a per-code frequency sketch for a dictionary column.
         Register *before* the column's first `add_batch` — the engine's
         exact Eq path requires the sketch to cover the whole stream
@@ -895,10 +961,16 @@ class TelemetryStore:
         kind="exact" (default) keeps one exact counter per code but disables
         itself past `max_codes` distinct codes; kind="cm" keeps a
         (depth x width) count-min table instead — bounded-error counts
-        (path "exact:cm") for columns too wide to enumerate."""
+        (path "exact:cm") for columns too wide to enumerate.
+        `conservative=True` (kind="cm" only) switches the table to
+        conservative updates: same worst-case bound, much lower realised
+        error on skewed streams (see `CountMinSketch`)."""
         if column in self.categoricals:
             return
         if kind == "exact":
+            if conservative:
+                raise ValueError("conservative update is a count-min mode; "
+                                 "kind='exact' counts are already exact")
             self.categoricals[column] = CategoricalSketch(max_codes=max_codes)
         elif kind == "cm":
             # seed from the column name alone (NOT the per-host store seed):
@@ -906,7 +978,8 @@ class TelemetryStore:
             # only meaningful when every host hashes codes identically
             self.categoricals[column] = CountMinSketch(
                 width=width, depth=depth,
-                seed=zlib.crc32(column.encode()) % 1000)
+                seed=zlib.crc32(column.encode()) % 1000,
+                conservative=conservative)
         else:
             raise ValueError(f"unknown sketch kind {kind!r}; "
                              f"expected one of {sorted(_SKETCH_KINDS)}")
@@ -946,17 +1019,29 @@ class TelemetryStore:
                     raise ValueError(f"joint {cols} needs row-aligned columns, "
                                      f"got lengths {sizes}")
                 joint_rows[cols] = np.stack(arrays, axis=1)
+        t_ingest = time.perf_counter() if obs.enabled() else 0.0
         with self._write_lock:      # vs to_state: snapshots see whole batches
             for name, values in stats.items():
                 if name not in self.columns:
                     self.columns[name] = Reservoir(self.capacity,
                                                    seed=self._col_seed(name))
-                self.columns[name].add(values)
+                res = self.columns[name]
+                res.add(values)
+                n_rows = np.asarray(values).size
+                self.metrics.counter("aqp.ingest.rows", column=name).inc(
+                    n_rows)
+                self.metrics.gauge("aqp.reservoir.fill", column=name).set(
+                    res.n_filled / max(res.capacity, 1))
                 sketch = self.categoricals.get(name)
                 if sketch is not None:
                     sketch.add(values)
+                    eb = getattr(sketch, "err_bound", None)
+                    if eb is not None:
+                        self.metrics.gauge("aqp.sketch.err_bound",
+                                           column=name).set(eb())
             for cols, rows in joint_rows.items():
                 self.joints[cols].add(rows)
+            self.metrics.counter("aqp.ingest.batches").inc()
             if self._listeners:
                 bumped: Dict[ColumnKey, int] = {
                     name: self.columns[name].version for name in stats}
@@ -964,6 +1049,9 @@ class TelemetryStore:
                     bumped[cols] = self.joints[cols].version
                 for fn in list(self._listeners):
                     fn(bumped)
+        if t_ingest:
+            self.metrics.histogram("aqp.ingest.us").observe(
+                (time.perf_counter() - t_ingest) * 1e6)
 
     def synopsis(self, column: str, selector: str = "plugin",
                  tier: Optional[int] = None) -> KDESynopsis:
@@ -1107,27 +1195,32 @@ class TelemetryStore:
         }
 
     def _admission_stats(self) -> Dict[str, object]:
-        """Sum the counters of every live admission session opened on this
-        store (flushes, coalesced queries, mean batch size, ...)."""
-        live = [r() for r in self._sessions]
-        live = [s for s in live if s is not None]
-        agg: Dict[str, object] = {
-            "sessions": len(live), "submitted": 0, "executed": 0,
-            "pending": 0, "flushes": 0, "coalesced": 0,
-            "invalidations": 0, "blocked": 0, "shed": 0,
-            "flush_reasons": {},
-        }
-        total_batch = 0
-        for s in live:
-            st = s.stats()
-            for k in ("submitted", "executed", "pending", "flushes",
-                      "coalesced", "invalidations", "blocked", "shed"):
-                agg[k] += st[k]
-            total_batch += st["mean_batch"] * st["flushes"]
-            for reason, n in st["flush_reasons"].items():
-                agg["flush_reasons"][reason] = \
-                    agg["flush_reasons"].get(reason, 0) + n
-        agg["mean_batch"] = (total_batch / agg["flushes"]
+        """Aggregate admission counters across every session ever opened on
+        this store, summed straight from the metrics registry.
+
+        The pre-registry implementation iterated live weakrefs and summed
+        `session.stats()` dicts, so a session that was closed and
+        garbage-collected took its counters with it — the store-level totals
+        silently dropped whole sessions' worth of work (and double-counted
+        nothing only by luck of GC timing).  Registry counters are labelled
+        `session=<id>` and outlive the session object, so the sums here are
+        monotone regardless of session lifetime; only `sessions` (currently
+        registered) and `pending` (live depth gauges) reflect the present.
+        """
+        live = [r for r in self._sessions if r() is not None]
+        reg = self.metrics
+        agg: Dict[str, object] = {"sessions": len(live)}
+        for k in ("submitted", "executed", "flushes", "coalesced",
+                  "invalidations", "blocked", "shed"):
+            agg[k] = int(reg.sum_counter(f"aqp.admission.{k}"))
+        agg["pending"] = int(reg.sum_gauge("aqp.admission.depth"))
+        flush_reasons: Dict[str, int] = {}
+        for labels, n in reg.collect_counters("aqp.admission.flush_reason"):
+            reason = labels.get("reason", "?")
+            flush_reasons[reason] = flush_reasons.get(reason, 0) + int(n)
+        agg["flush_reasons"] = flush_reasons
+        batch_rows = reg.sum_counter("aqp.admission.batch_rows")
+        agg["mean_batch"] = (batch_rows / agg["flushes"]
                              if agg["flushes"] else 0.0)
         return agg
 
@@ -1242,6 +1335,9 @@ class TelemetryStore:
                     meta["plans"].append({"selector": sel_eng,
                                           "backend": backend,
                                           "entries": entries})
+            # the registry rides in the (JSON) manifest so cumulative
+            # counters — ingest rows, admission totals — survive a restart
+            meta["metrics"] = self.metrics.state()
             return tree, meta
 
     def restore_state(self, tree: Dict[str, np.ndarray],
@@ -1337,6 +1433,11 @@ class TelemetryStore:
                             eng.plans.put((col, str(ent["selector"]), tier),
                                           int(ent["version"]),
                                           _make_plan(hit[1]))
+            # optional key: pre-observability snapshots restore fine; the
+            # gauges mirrored from live structures (cache size, reservoir
+            # fill) are restored too but refresh on the next mutation
+            if meta.get("metrics"):
+                self.metrics.load_state(meta["metrics"])
             if self._listeners:
                 bumped: Dict[ColumnKey, int] = {
                     name: res.version for name, res in self.columns.items()}
@@ -1367,8 +1468,11 @@ class TelemetryStore:
         if step is None:
             latest = mgr.latest_step()
             step = 1 if latest is None else latest + 1
+        t0 = time.perf_counter()
         tree, meta = self.to_state()
         mgr.save(step, tree, extra=meta)
+        self.metrics.histogram("aqp.snapshot.us").observe(
+            (time.perf_counter() - t0) * 1e6)
         return step
 
     @classmethod

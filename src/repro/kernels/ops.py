@@ -3,10 +3,18 @@
 On this CPU container, kernels run in interpret mode (the kernel body executes
 in Python on CPU — correctness path); on a TPU runtime `interpret=False`
 compiles through Mosaic.  `INTERPRET` flips automatically on backend.
+
+With `repro.obs` enabled, every wrapper routes through
+`tuning.profiled_call`, which records fenced wall/dispatch timings into the
+process-global metrics registry keyed by (kernel, shape, tile).  Disabled
+(the default), each wrapper takes the direct branch — same jitted callable,
+no fencing, no extra work.
 """
 from __future__ import annotations
 
 import jax
+
+from repro import obs
 
 from . import aqp_batch as _ab
 from . import aqp_boxes as _abx
@@ -15,36 +23,83 @@ from . import kde_eval as _kde
 from . import lscv_grid as _lg
 from . import pairwise_reduce as _pr
 from . import sv_precompute as _sv
+from .tuning import profiled_call
 
 INTERPRET = jax.default_backend() != "tpu"
 
 
 def pairwise_scaled_ksum(x, g, kind="k4", tile=_pr.TILE):
-    return _pr.pairwise_scaled_ksum(x, g, kind=kind, tile=tile, interpret=INTERPRET)
+    if not obs.enabled():
+        return _pr.pairwise_scaled_ksum(x, g, kind=kind, tile=tile,
+                                        interpret=INTERPRET)
+    return profiled_call(
+        "pairwise_scaled_ksum",
+        lambda: _pr.pairwise_scaled_ksum(x, g, kind=kind, tile=tile,
+                                         interpret=INTERPRET),
+        n=x.shape[0], kind=kind, tile=tile)
 
 
 def sv_matrix(x, m, tile=_sv.TILE, algorithm="mxu"):
-    return _sv.sv_matrix(x, m, tile=tile, algorithm=algorithm, interpret=INTERPRET)
+    if not obs.enabled():
+        return _sv.sv_matrix(x, m, tile=tile, algorithm=algorithm,
+                             interpret=INTERPRET)
+    return profiled_call(
+        "sv_matrix",
+        lambda: _sv.sv_matrix(x, m, tile=tile, algorithm=algorithm,
+                              interpret=INTERPRET),
+        n=x.shape[0], d=x.shape[1] if x.ndim > 1 else 1, tile=tile,
+        algorithm=algorithm)
 
 
 def gh_fused_sum(x, h_inv, c_k, c_kk, tile=_gh.TILE):
-    return _gh.gh_fused_sum(x, h_inv, c_k, c_kk, tile=tile, interpret=INTERPRET)
+    if not obs.enabled():
+        return _gh.gh_fused_sum(x, h_inv, c_k, c_kk, tile=tile,
+                                interpret=INTERPRET)
+    return profiled_call(
+        "gh_fused_sum",
+        lambda: _gh.gh_fused_sum(x, h_inv, c_k, c_kk, tile=tile,
+                                 interpret=INTERPRET),
+        n=x.shape[0], d=x.shape[1] if x.ndim > 1 else 1, tile=tile)
 
 
 def lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=_lg.TILE, h_tile=_lg.H_TILE):
-    return _lg.lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=tile,
-                              h_tile=h_tile, interpret=INTERPRET)
+    if not obs.enabled():
+        return _lg.lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=tile,
+                                  h_tile=h_tile, interpret=INTERPRET)
+    return profiled_call(
+        "lscv_grid_sums",
+        lambda: _lg.lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=tile,
+                                   h_tile=h_tile, interpret=INTERPRET),
+        n=x.shape[0], G=h_grid.shape[0], tile=tile, h_tile=h_tile)
 
 
 def kde_eval(points, x, h, tile=_kde.TILE):
-    return _kde.kde_eval(points, x, h, tile=tile, interpret=INTERPRET)
+    if not obs.enabled():
+        return _kde.kde_eval(points, x, h, tile=tile, interpret=INTERPRET)
+    return profiled_call(
+        "kde_eval",
+        lambda: _kde.kde_eval(points, x, h, tile=tile, interpret=INTERPRET),
+        n=x.shape[0], G=points.shape[0], tile=tile)
 
 
 def aqp_batch_sums(x, h, a, b, tile=_ab.TILE, q_tile=_ab.Q_TILE):
-    return _ab.aqp_batch_sums(x, h, a, b, tile=tile, q_tile=q_tile,
-                              interpret=INTERPRET)
+    if not obs.enabled():
+        return _ab.aqp_batch_sums(x, h, a, b, tile=tile, q_tile=q_tile,
+                                  interpret=INTERPRET)
+    return profiled_call(
+        "aqp_batch_sums",
+        lambda: _ab.aqp_batch_sums(x, h, a, b, tile=tile, q_tile=q_tile,
+                                   interpret=INTERPRET),
+        n=x.shape[0], G=a.shape[0], tile=tile, q_tile=q_tile)
 
 
 def aqp_box_sums(x, h_diag, lo, hi, tgt, tile=_abx.TILE, q_tile=_abx.Q_TILE):
-    return _abx.aqp_box_sums(x, h_diag, lo, hi, tgt, tile=tile, q_tile=q_tile,
-                             interpret=INTERPRET)
+    if not obs.enabled():
+        return _abx.aqp_box_sums(x, h_diag, lo, hi, tgt, tile=tile,
+                                 q_tile=q_tile, interpret=INTERPRET)
+    return profiled_call(
+        "aqp_box_sums",
+        lambda: _abx.aqp_box_sums(x, h_diag, lo, hi, tgt, tile=tile,
+                                  q_tile=q_tile, interpret=INTERPRET),
+        n=x.shape[0], d=x.shape[1] if x.ndim > 1 else 1, G=lo.shape[0],
+        tile=tile, q_tile=q_tile)

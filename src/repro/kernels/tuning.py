@@ -1,4 +1,4 @@
-"""Tile-size tuning knobs for the Pallas kernels.
+"""Tile-size tuning knobs and measured-timing hooks for the Pallas kernels.
 
 Every kernel module resolves its default tile sizes through `env_int` at
 import time, so `interpret=False` runs on real TPU can be tuned without
@@ -8,10 +8,20 @@ editing source:
 
 Call-site kwargs (`tile=`, `q_tile=` on the ops.py wrappers) still override
 the environment; the env var only moves the *default*.
+
+`profiled_call` is the measurement side of tuning: with `repro.obs` enabled,
+every kernel dispatch records fenced wall time, dispatch time, and a call
+count into the process-global metrics registry keyed by
+(kernel, n, d, G, tile, ...), so an autotuner can read `measured()` data
+for exactly the shapes the workload runs instead of sweeping blind.
 """
 from __future__ import annotations
 
 import os
+import time
+from typing import Dict, List, Tuple
+
+from repro import obs
 
 
 def env_int(name: str, default: int) -> int:
@@ -27,3 +37,45 @@ def env_int(name: str, default: int) -> int:
     if value <= 0:
         raise ValueError(f"{name} must be a positive integer, got {value}")
     return value
+
+
+def profiled_call(kernel: str, fn, /, *args, **labels):
+    """Run `fn(*args)` recording per-shape timings into the global registry.
+
+    Records three metrics labeled with `kernel` plus whatever shape/tile
+    labels the wrapper passes (n, d, G, tile, ...):
+
+      kernel.calls        counter   dispatches
+      kernel.dispatch_us  histogram time until `fn` returns (async dispatch)
+      kernel.wall_us      histogram time until results are device-ready
+
+    The dispatch/wall split matters on real TPU: jax returns futures, so
+    un-fenced timings measure Python overhead, not the kernel.  Callers use
+    this only on the `obs.enabled()` branch — the disabled path calls the
+    kernel directly and stays bit-and-trace-identical.
+    """
+    reg = obs.get_registry()
+    t0 = time.perf_counter()
+    out = fn(*args)
+    t1 = time.perf_counter()
+    obs.fence(*(out if isinstance(out, tuple) else (out,)))
+    t2 = time.perf_counter()
+    reg.counter("kernel.calls", kernel=kernel, **labels).inc()
+    reg.histogram("kernel.dispatch_us", kernel=kernel, **labels).observe(
+        (t1 - t0) * 1e6)
+    reg.histogram("kernel.wall_us", kernel=kernel, **labels).observe(
+        (t2 - t0) * 1e6)
+    return out
+
+
+def measured(kernel: str = None) -> List[Dict[str, object]]:
+    """Measured kernel timings from the global registry: one row per
+    (kernel, shape, tile) combination with call count and wall-time summary.
+    The read API for a future autotuner and for bench reporting."""
+    reg = obs.get_registry()
+    match = {"kernel": kernel} if kernel is not None else {}
+    rows = []
+    for labels, hist in reg.collect_histograms("kernel.wall_us", **match):
+        rows.append({**labels, **hist.summary()})
+    rows.sort(key=lambda r: (r.get("kernel", ""), -r["count"]))
+    return rows

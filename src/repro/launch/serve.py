@@ -28,6 +28,16 @@ bounds the admission queue (block or shed, `--overflow`).
 
     PYTHONPATH=src python -m repro.launch.serve --mode aqp \
         --snapshot-dir /tmp/aqp-snap --snapshot-every 5 --restore
+
+Observability: `--metrics-out FILE` enables `repro.obs` (span tracing,
+fenced per-path latency histograms, kernel profiling), exports a merged
+JSON snapshot of the store and kernel registries every `--metrics-every`
+seconds (atomic replace — a scraper never reads a torn file), and prints an
+end-of-run summary table; `--trace-out FILE` appends the span ring as JSON
+lines on exit.  See docs/observability.md for the metric catalogue.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode aqp \
+        --metrics-out /tmp/aqp-metrics.json --metrics-every 0.5
 """
 from __future__ import annotations
 
@@ -165,14 +175,47 @@ def _make_telemetry(rng, n):
     }
 
 
+def _print_metrics_summary(store) -> None:
+    """End-of-run metrics table: latency histograms, caches, flush mix."""
+    from repro import obs
+
+    rows = []
+    for labels, h in store.metrics.collect_histograms("aqp.query.latency_us"):
+        tag = labels.get("path", "?")
+        if labels.get("tier") not in (None, "None"):
+            tag += f"@t{labels['tier']}"
+        rows.append((tag, h.summary()))
+    for labels, h in obs.get_registry().collect_histograms("kernel.wall_us"):
+        rows.append((f"kernel:{labels.get('kernel', '?')}", h.summary()))
+    if rows:
+        print(f"[serve:aqp] {'metric':<28s} {'count':>7s} {'p50us':>9s} "
+              f"{'p95us':>9s} {'p99us':>9s} {'maxus':>9s}")
+        for tag, s in sorted(rows, key=lambda r: -r[1]["count"]):
+            print(f"[serve:aqp] {tag:<28s} {s['count']:>7d} {s['p50']:>9.1f} "
+                  f"{s['p95']:>9.1f} {s['p99']:>9.1f} {s['max']:>9.1f}")
+    hits = store.metrics.sum_counter("aqp.cache.hits")
+    misses = store.metrics.sum_counter("aqp.cache.misses")
+    phits = store.metrics.sum_counter("aqp.plan.hits")
+    pmisses = store.metrics.sum_counter("aqp.plan.misses")
+    print(f"[serve:aqp] metrics: synopsis cache hit rate "
+          f"{hits / max(1, hits + misses):.1%}, plan cache hit rate "
+          f"{phits / max(1, phits + pmisses):.1%}, ingested "
+          f"{store.metrics.sum_counter('aqp.ingest.batches')} batches")
+
+
 def run_aqp(args) -> None:
     import threading
     from collections import Counter
 
     import numpy as np
 
+    from repro import obs
     from repro.core import AqpQuery, Range
     from repro.data import TelemetryStore
+
+    if args.metrics_out or args.trace_out:
+        # spans + fenced latency histograms + kernel profiling for this run
+        obs.enable()
 
     rng = np.random.default_rng(0)
     n = args.rows
@@ -238,6 +281,23 @@ def run_aqp(args) -> None:
     stop_producer = threading.Event()
     snapshots = [0]
 
+    stop_metrics = threading.Event()
+    exports = [0]
+
+    def export_metrics() -> None:
+        obs.export_json(args.metrics_out, store.metrics, obs.get_registry(),
+                        extra={"mode": "aqp", "rows": int(n)})
+        exports[0] += 1
+
+    def metrics_writer() -> None:
+        while not stop_metrics.wait(args.metrics_every):
+            export_metrics()
+
+    mthread = None
+    if args.metrics_out:
+        mthread = threading.Thread(target=metrics_writer, daemon=True)
+        mthread.start()
+
     if args.snapshot_dir and not args.restore:
         # a restartable loop snapshots at startup too: --restore works even
         # if the process dies before the producer's first cadence tick
@@ -286,6 +346,13 @@ def run_aqp(args) -> None:
     stop_producer.set()
     prod.join(timeout=2.0)
     session.close()
+    if args.metrics_out:
+        stop_metrics.set()
+        if mthread is not None:
+            mthread.join(timeout=2.0)
+        export_metrics()    # final snapshot includes the closing flush
+    if args.trace_out:
+        obs.get_tracer().export_jsonl(args.trace_out)
 
     # client order (not thread finish order): the sample rows below are
     # reproducible run-to-run when the producer is quiescent
@@ -336,6 +403,12 @@ def run_aqp(args) -> None:
     print(f"[serve:aqp] model_id sketch: {cat.get('codes', 0)} codes, "
           f"{cat.get('rows', 0):,} rows, "
           f"exact={'yes' if cat.get('exact') else 'no (KDE fallback)'}")
+    if args.metrics_out:
+        print(f"[serve:aqp] metrics: {exports[0]} snapshots -> "
+              f"{args.metrics_out} (every {args.metrics_every:g}s)")
+        _print_metrics_summary(store)
+    if args.trace_out:
+        print(f"[serve:aqp] traces: span ring appended to {args.trace_out}")
     for r in results[:6]:
         q = r.query
         terms = " & ".join(
@@ -408,9 +481,20 @@ def main() -> None:
     ap.add_argument("--selector", default="plugin",
                     choices=["plugin", "silverman", "lscv_h"])
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--metrics-out", default=None,
+                    help="enable repro.obs and write a merged JSON metrics "
+                         "snapshot here every --metrics-every seconds "
+                         "(atomic replace; see docs/observability.md)")
+    ap.add_argument("--metrics-every", type=float, default=1.0,
+                    help="seconds between --metrics-out snapshots")
+    ap.add_argument("--trace-out", default=None,
+                    help="append the span ring as JSON lines on exit "
+                         "(enables repro.obs)")
     args = ap.parse_args()
     if args.snapshot_every < 1:
         ap.error(f"--snapshot-every must be >= 1, got {args.snapshot_every}")
+    if args.metrics_every <= 0:
+        ap.error(f"--metrics-every must be > 0, got {args.metrics_every}")
     if not 0.0 <= args.coarse_frac <= 1.0:
         ap.error(f"--coarse-frac must be in [0, 1], got {args.coarse_frac}")
 

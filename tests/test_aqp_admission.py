@@ -353,6 +353,56 @@ def test_store_stats_aggregate_admission_counters(rng):
     assert store.stats()["admission"]["pending"] == 0
 
 
+def test_store_stats_aggregate_two_sessions_flushing_concurrently(rng):
+    """Regression for the multi-session aggregation bug: two sessions
+    flushing from their own threads must aggregate without losing counts,
+    and the totals must survive session close + garbage collection (the
+    counters live in the store's registry, not on the session object)."""
+    import gc
+
+    store = _store(rng)
+    engine = store.engine()
+    # warm both columns so the timed loop below never jit-compiles
+    engine.execute([AqpQuery("count", (Range("a", -1, 1),)),
+                    AqpQuery("count", (Range("b", -1, 1),))])
+    sessions = [store.session(watermark=None, max_delay=None,
+                              auto_flush=False) for _ in range(2)]
+    n_each = 6
+    errs = []
+
+    def work(si):
+        col = "ab"[si]
+        try:
+            for i in range(n_each):
+                fut = sessions[si].submit(
+                    AqpQuery("count", (Range(col, -1.0, 0.1 * i),)))
+                sessions[si].flush()
+                fut.result(timeout=10)
+        except Exception as e:              # surfaced after join
+            errs.append(e)
+
+    threads = [threading.Thread(target=work, args=(si,)) for si in range(2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    agg = store.stats()["admission"]
+    assert agg["sessions"] == 2
+    assert agg["submitted"] == agg["executed"] == 2 * n_each
+    assert agg["flush_reasons"] == {FLUSH_MANUAL: 2 * n_each}
+    assert agg["pending"] == 0
+    # closed + gc'd sessions used to vanish from the totals entirely
+    while sessions:
+        sessions.pop().close()
+    gc.collect()
+    agg = store.stats()["admission"]
+    assert agg["sessions"] == 0
+    assert agg["submitted"] == agg["executed"] == 2 * n_each
+    assert agg["flush_reasons"] == {FLUSH_MANUAL: 2 * n_each}
+    assert agg["pending"] == 0
+
+
 # --- backpressure: the max_pending bound (ROADMAP follow-up) -----------------
 
 def test_max_pending_shed_raises_and_counts(rng):

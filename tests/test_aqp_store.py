@@ -426,6 +426,80 @@ def test_categorical_sketch_overflow_disables_exact(rng):
                        selector="silverman")[0].path == "range1d"
 
 
+def test_cm_conservative_update_never_undercounts_and_beats_standard(rng):
+    """Estan-Varghese conservative update: per-code estimates stay upper
+    bounds, are never looser than the standard update (same seed, so cells
+    line up), and realised total error drops strictly on a skewed stream
+    forced into a tiny table."""
+    from repro.data.aqp_store import CountMinSketch
+
+    codes = (rng.zipf(1.3, 20_000) % 400).astype(np.float32)
+    std = CountMinSketch(width=64, depth=3, seed=1)
+    cu = CountMinSketch(width=64, depth=3, seed=1, conservative=True)
+    for chunk in np.array_split(codes, 16):      # streamed, multi-batch
+        std.add(chunk)
+        cu.add(chunk)
+    assert std.n_rows == cu.n_rows == 20_000
+    err_std = err_cu = 0
+    for c in np.unique(codes):
+        truth = int((codes == c).sum())
+        es, ec = std.estimate(float(c)), cu.estimate(float(c))
+        assert ec >= truth          # CU keeps the upper-bound invariant
+        assert ec <= es             # and is cell-wise <= the standard table
+        err_std += es - truth
+        err_cu += ec - truth
+    assert err_cu < err_std
+    # analytic bound unchanged: both are worst-case e/width * n
+    assert cu.err_bound() == std.err_bound()
+
+
+def test_cm_conservative_merge_flag_and_state_roundtrip(rng):
+    from repro.data.aqp_store import CountMinSketch
+
+    a = rng.integers(0, 50, 3000).astype(np.float32)
+    cu1 = CountMinSketch(width=128, depth=3, seed=2, conservative=True)
+    cu2 = CountMinSketch(width=128, depth=3, seed=2, conservative=True)
+    std = CountMinSketch(width=128, depth=3, seed=2)
+    for sk in (cu1, cu2, std):
+        sk.add(a)
+    # merge is cell-wise additive; conservative only when both inputs are
+    both = cu1.merge(cu2)
+    assert both.conservative and both.n_rows == 6000
+    np.testing.assert_array_equal(both.table, cu1.table + cu2.table)
+    assert not cu1.merge(std).conservative
+    # the flag and table survive the snapshot state round-trip
+    back = CountMinSketch.from_state(*cu1.state())
+    assert back.conservative
+    np.testing.assert_array_equal(back.table, cu1.table)
+    assert back.estimate(7.0) == cu1.estimate(7.0)
+    # pre-flag snapshots (no "conservative" key) load as standard
+    arrays, meta = std.state()
+    meta.pop("conservative")
+    assert not CountMinSketch.from_state(arrays, meta).conservative
+
+
+def test_cm_conservative_via_store_and_err_gauge(rng):
+    store = TelemetryStore(capacity=256, seed=0)
+    store.track_categorical("code", kind="cm", width=128, depth=3,
+                            conservative=True)
+    with pytest.raises(ValueError, match="count-min mode"):
+        store.track_categorical("other", kind="exact", conservative=True)
+    codes = rng.integers(0, 40, 5000).astype(np.float32)
+    store.add_batch({"code": codes})
+    sk = store.categoricals["code"]
+    assert sk.conservative and store.stats()["categoricals"]["code"][
+        "conservative"]
+    # the estimated-error gauge tracks the sketch's analytic bound
+    assert store.metrics.sum_gauge("aqp.sketch.err_bound",
+                                   column="code") == sk.err_bound()
+    # covered stream still answers on the bounded-error path
+    from repro.core import AqpQuery, Eq
+    (r,) = store.query([AqpQuery("count", (Eq("code", 3.0),))],
+                       selector="silverman")
+    assert r.path == "exact:cm"
+    assert r.estimate >= int((codes == np.float32(3.0)).sum())
+
+
 def test_store_merge_with_one_sided_sketch_disables_exact(rng):
     s1 = TelemetryStore(capacity=256, seed=0)
     s2 = TelemetryStore(capacity=256, seed=1)

@@ -1,0 +1,143 @@
+"""Sublinear RFF synopsis backend (repro.synopses) vs the exact full-H path.
+
+One joint full-H group at relation scale (n = 200k fitted rows), answered
+twice through the SAME engine/planning core:
+
+  exact — `kde_backend="exact"`: the reference quasi-MC pass, one chunked
+          O(n_qmc * n) KDE evaluation over the shared Halton nodes
+  rff   — `kde_backend="rff"`: the fitted Random-Fourier synopsis, one
+          O(n_qmc * D) feature pass (D = 2048 by default) plus the
+          feature-block CI — cost independent of n
+
+The acceptance bar is rff >= 5x over exact at n >= 200k (asserted outside
+quick mode), with the RFF answers inside the engine's accuracy envelope:
+the one-shot probe gate must pass (no degraded fallback — every answer
+reports path "qmc:rff"), and each estimate must sit within a few reported
+CI half-widths of the exact answer (the feature-block batch-means CI is
+calibrated the same way test_aqp_ci.py calibrates the exact path's).
+
+The synopsis is hand-built from the sample covariance (selector "lscv_H"
+by label only) — an actual LSCV_H fit is O(n^2) and would dominate the
+benchmark without exercising anything this PR changed.
+
+Set REPRO_BENCH_QUICK=1 (or `python -m benchmarks.run --quick`) for the CI
+smoke configuration (n = 20k, no speedup assertion).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from .common import emit, time_call
+
+N_ROWS = 200_000
+N_QUERIES = 48
+H_SCALE = 0.25       # bandwidth scale on the sample covariance: wide enough
+                     # that the RFF probe gate passes at the default D
+COLS = ("loss", "latency_ms")
+
+
+def _quick() -> bool:
+    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+
+
+def _setup(n: int, seed: int = 0):
+    """Store with one joint reservoir holding the full n rows and a
+    hand-built full-H synopsis primed into the cache (no O(n^2) LSCV)."""
+    import jax.numpy as jnp
+
+    from repro.core import KDESynopsis
+    from repro.data import TelemetryStore
+
+    rng = np.random.default_rng(seed)
+    loss = rng.gamma(2.0, 1.5, n)
+    lat = 10 + 3 * loss + rng.normal(0, 2, n)
+    store = TelemetryStore(capacity=n, seed=0)
+    store.track_joint(COLS)
+    store.add_batch({"loss": loss.astype(np.float32),
+                     "latency_ms": lat.astype(np.float32)})
+    res = store.joints[COLS]
+    x = res.sample()
+    H = (np.cov(x.T) * H_SCALE).astype(np.float32)
+    syn = KDESynopsis(x=jnp.asarray(x), H=jnp.asarray(H),
+                      n_source=res.n_seen, selector="lscv_H")
+    store.cache.put(COLS, "lscv_H", res.version, syn)
+    return store, x
+
+
+def _make_queries(x: np.ndarray, n_queries: int, seed: int = 1):
+    from repro.core.aqp_query import AqpQuery, Box
+
+    rng = np.random.default_rng(seed)
+    mu, sd = x.mean(axis=0), x.std(axis=0)
+    ops = ["count", "sum", "avg"]
+    out = []
+    for i in range(n_queries):
+        lo = mu + sd * rng.uniform(-1.5, 0.0, 2)
+        hi = lo + sd * rng.uniform(1.0, 2.5, 2)
+        tgt = COLS[int(rng.integers(2))]
+        out.append(AqpQuery(ops[i % 3],
+                            (Box(COLS, tuple(lo), tuple(hi)),),
+                            target=None if i % 3 == 0 else tgt))
+    return out
+
+
+def run() -> dict:
+    n = N_ROWS if not _quick() else 20_000
+    n_q = N_QUERIES if not _quick() else 12
+    store, x = _setup(n)
+    engine = store.engine(selector="lscv_H")
+    queries = _make_queries(x, n_q)
+
+    def answers(kde_backend):
+        return engine.execute(queries, kde_backend=kde_backend)
+
+    # warm both paths: compiles the jitted passes and (rff) fits the synopsis
+    t0 = time.perf_counter()
+    r_exact = answers("exact")
+    t_exact_cold = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    r_rff = answers("rff")
+    t_fit_cold = (time.perf_counter() - t0) * 1e6
+
+    # the accuracy envelope: the probe gate must have passed (every answer on
+    # the rff path, none degraded back to exact) ...
+    paths = {r.path for r in r_rff}
+    assert paths == {"qmc:rff"}, (
+        f"RFF fit failed the accuracy gate (paths {sorted(paths)}) — the "
+        f"benchmark bandwidth must keep the probe error inside the gate")
+    assert {r.path for r in r_exact} == {"qmc"}
+    # ... and every estimate must sit within a few reported CI half-widths
+    # of the exact answer (feature-block batch-means, dof = n_blocks - 1)
+    scale_ref = max(abs(r.estimate) for r in r_exact)
+    for re_, rr in zip(r_exact, r_rff):
+        half = max((rr.ci_hi - rr.ci_lo) / 2.0, 0.02 * scale_ref)
+        err = abs(rr.estimate - re_.estimate)
+        assert err <= 4.0 * half, (
+            f"RFF answer outside its CI envelope: exact={re_.estimate:.1f} "
+            f"rff={rr.estimate:.1f} (err {err:.1f} > 4 * {half:.1f})")
+
+    t_exact = time_call(answers, "exact", repeats=3, warmup=1)
+    t_rff = time_call(answers, "rff", repeats=3, warmup=1)
+    speedup = t_exact / t_rff
+    emit(f"aqp_rff_exact_n{n}_q{n_q}", t_exact,
+         f"{n_q / (t_exact * 1e-6):,.0f} q/s, O(n_qmc*n) exact KDE pass")
+    emit(f"aqp_rff_rff_n{n}_q{n_q}", t_rff,
+         f"{n_q / (t_rff * 1e-6):,.0f} q/s, {speedup:.1f}x over exact "
+         f"(O(n_qmc*D) feature pass + block CI)")
+    emit(f"aqp_rff_fit_n{n}", t_fit_cold,
+         "one-shot fit + probe gate + first eval (cold, amortised)")
+    emit(f"aqp_rff_exact_cold_n{n}", t_exact_cold,
+         "exact path cold (compile + first pass)")
+    out = {"rff_speedup": speedup, "n": n}
+    if not _quick():
+        assert speedup >= 5.0, (
+            f"RFF backend must be >= 5x over the exact full-H pass at "
+            f"n={n}, got {speedup:.1f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -5,9 +5,10 @@
 
 Prints ``name,us_per_call,derived`` CSV lines.  --quick sets
 REPRO_BENCH_QUICK=1, which suites honouring it (aqp_boxes, aqp_engine,
-aqp_serve, aqp_restore, aqp_progressive) read at run() time to shrink to a
-CI-smoke configuration.  --json additionally writes a machine-readable
-report (default BENCH_aqp.json): every emitted measurement with name,
+aqp_serve, aqp_restore, aqp_progressive, aqp_rff) read at run() time to
+shrink to a CI-smoke configuration.  Every run also writes the
+machine-readable report to BENCH_aqp.json at the repo root (--json PATH
+overrides the destination): every emitted measurement with name,
 us_per_call, p50/p99 when raw samples were provided, suite-specific extras
 (speedups, batch depths), plus git sha, config, and wall time — CI archives
 it and `scripts/validate_metrics.py --bench` schema-checks it.
@@ -22,8 +23,15 @@ import sys
 import time
 
 SUITES = ("paper_validation", "plugin", "lscv_h", "lscv_H", "table3",
-          "kernels", "aqp_batch", "aqp_boxes", "aqp_engine", "aqp_serve",
-          "aqp_restore", "aqp_progressive", "roofline", "serving")
+          "kernels", "aqp_batch", "aqp_boxes", "aqp_engine", "aqp_rff",
+          "aqp_serve", "aqp_restore", "aqp_progressive", "roofline",
+          "serving")
+
+# the always-on report lands at the repo root regardless of the cwd the
+# harness was launched from, so CI archiving finds one canonical path
+_DEFAULT_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_aqp.json")
 
 
 def _git_sha() -> str:
@@ -41,10 +49,11 @@ def main() -> None:
     ap.add_argument("--only", default="", help=f"one of {SUITES}")
     ap.add_argument("--quick", action="store_true",
                     help="small shapes for CI smoke runs")
-    ap.add_argument("--json", nargs="?", const="BENCH_aqp.json", default=None,
-                    metavar="PATH",
-                    help="write the machine-readable report here "
-                         "(default BENCH_aqp.json when given without a path)")
+    ap.add_argument("--json", nargs="?", const=_DEFAULT_JSON,
+                    default=_DEFAULT_JSON, metavar="PATH",
+                    help="where to write the machine-readable report "
+                         "(always written; default BENCH_aqp.json at the "
+                         "repo root)")
     args = ap.parse_args()
     if args.quick:
         os.environ["REPRO_BENCH_QUICK"] = "1"

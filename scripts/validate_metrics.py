@@ -68,12 +68,30 @@ def validate_metrics(doc: dict) -> List[str]:
     _entries(doc, "counters", "aqp.cache.hits", errs)
     _entries(doc, "counters", "aqp.cache.misses", errs)
 
-    # flush reasons, every label from the admission vocabulary
-    known = {"watermark", "deadline", "manual", "close"}
+    # flush reasons, every label from the admission vocabulary ("fit" is the
+    # offloaded-synopsis-fit re-flush)
+    known = {"watermark", "deadline", "manual", "close", "fit"}
     for e in _entries(doc, "counters", "aqp.admission.flush_reason", errs):
         reason = e["labels"].get("reason")
         if reason not in known:
             errs.append(f"unknown flush reason {reason!r}")
+
+    # synopsis-backend instruments are conditional: they only exist once a
+    # full-H query ran through the pluggable backend layer, but when present
+    # they must be backend-labelled and well-formed
+    for name in ("aqp.synopsis.hits", "aqp.synopsis.fallback"):
+        for e in doc.get("counters", {}).get(name, []):
+            if e.get("labels", {}).get("backend") not in ("exact", "rff"):
+                errs.append(f"{name} entry missing/unknown backend label: "
+                            f"{e.get('labels')}")
+    for name in ("aqp.synopsis.fit_us", "aqp.synopsis.eval_us"):
+        for e in doc.get("histograms", {}).get(name, []):
+            missing = HIST_KEYS - set(e)
+            if missing:
+                errs.append(f"{name} entry missing {sorted(missing)}")
+            elif e.get("labels", {}).get("backend") != "rff":
+                errs.append(f"{name} entry missing backend=rff label: "
+                            f"{e.get('labels')}")
     return errs
 
 
@@ -86,16 +104,19 @@ def validate_bench(doc: dict) -> List[str]:
         return errs
     if not doc["results"]:
         errs.append("empty results list")
-    names = set()
+    timed = set()
     for r in doc["results"]:
         for key in ("name", "us_per_call"):
             if key not in r:
                 errs.append(f"result missing {key!r}: {r}")
-        if r.get("us_per_call", -1) <= 0:
-            errs.append(f"non-positive us_per_call: {r.get('name')}")
-        names.add(r.get("name", ""))
-    if not any(n.startswith("aqp_") for n in names):
-        errs.append("no aqp_* benchmark results present")
+        # us_per_call == 0 marks a non-timing row (parity checks, skipped
+        # suites); negative is always a bug
+        if r.get("us_per_call", -1) < 0:
+            errs.append(f"negative us_per_call: {r.get('name')}")
+        if r.get("us_per_call", 0) > 0:
+            timed.add(r.get("name", ""))
+    if not any(n.startswith("aqp_") for n in timed):
+        errs.append("no timed aqp_* benchmark results present")
     return errs
 
 

@@ -68,6 +68,13 @@ FLUSH_WATERMARK = "watermark"
 FLUSH_DEADLINE = "deadline"
 FLUSH_MANUAL = "manual"
 FLUSH_CLOSE = "close"
+FLUSH_FIT = "fit"        # re-flush after an offloaded synopsis fit lands
+
+# Selectors whose first fit is superlinear (the paper's O(n^2) LSCV passes):
+# with `fit_offload=True` a bucket needing one of these fits hands the fit to
+# a worker thread instead of stalling the flusher (canonical names — see
+# `canonical_selector`; the scalar/full-matrix LSCV pair stays distinct).
+SLOW_SELECTORS = frozenset({"lscv_h", "lscv_H"})
 
 # priority class -> tier budget: "coarse" answers from the smallest tier of
 # a TieredReservoir, "full" from the whole sample (None = no budget)
@@ -152,11 +159,16 @@ class AdmissionQueue:
     def oldest(self, key: BucketKey) -> float:
         return self.buckets[key][0].submitted_at
 
-    def first_due(self, now: float, max_delay: float) -> Optional[BucketKey]:
-        """The longest-waiting bucket whose deadline has passed, if any."""
+    def first_due(self, now: float, max_delay: float,
+                  skip: frozenset = frozenset()) -> Optional[BucketKey]:
+        """The longest-waiting bucket whose deadline has passed, if any.
+        Buckets in `skip` (fit-in-progress) are passed over — their deadline
+        is deliberately on hold until the offloaded fit lands."""
         best = None
         best_ts = None
         for key, bucket in self.buckets.items():
+            if key in skip:
+                continue
             ts = bucket[0].submitted_at
             if now - ts >= max_delay and (best_ts is None or ts < best_ts):
                 best, best_ts = key, ts
@@ -202,6 +214,15 @@ class AqpSession:
     priority_tiers — {class name: tier budget} (default: "full" -> None,
                  "coarse" -> 0); `submit(query, priority=...)` picks one
     default_priority — class used when submit() gets no explicit priority
+    fit_offload — guard against slow first fits: when a due bucket's
+                 selector is in `SLOW_SELECTORS` and its synopsis is not yet
+                 in the store cache (an O(n^2) LSCV fit stands between the
+                 flush and its answers), hand the fit to a worker thread and
+                 leave the bucket queued (skipped by the deadline scan)
+                 instead of stalling the flusher — other buckets keep
+                 flushing on time.  The worker re-flushes the bucket with
+                 reason "fit" once the synopsis lands; deferred queries are
+                 counted in `stats()["fit_requeued"]`.
     """
 
     def __init__(self, engine: QueryEngine, watermark: Optional[int] = 32,
@@ -210,7 +231,8 @@ class AqpSession:
                  max_pending: Optional[int] = None, overflow: str = "block",
                  time_fn: Callable[[], float] = time.monotonic,
                  priority_tiers: Optional[Dict[str, Optional[int]]] = None,
-                 default_priority: str = "full"):
+                 default_priority: str = "full",
+                 fit_offload: bool = False):
         if watermark is not None and watermark < 1:
             raise ValueError(f"watermark must be >= 1, got {watermark}")
         if max_delay is not None and max_delay < 0:
@@ -236,10 +258,12 @@ class AqpSession:
         self.selector = selector or engine.selector
         self.backend = backend or engine.backend
         self.time_fn = time_fn
+        self.fit_offload = fit_offload
         self._auto_flush = auto_flush
         self._lock = threading.RLock()
         self._wakeup = threading.Condition(self._lock)
         self._queue = AdmissionQueue()
+        self._fitting: set = set()          # BucketKeys with a fit in flight
         self._closed = False
         self._thread: Optional[threading.Thread] = None
         store = engine.store
@@ -269,6 +293,8 @@ class AqpSession:
         self._c_blocked = metrics.counter("aqp.admission.blocked",
                                           session=sid)
         self._c_shed = metrics.counter("aqp.admission.shed", session=sid)
+        self._c_fit_requeued = metrics.counter("aqp.admission.fit_requeued",
+                                               session=sid)
         self._c_batch_rows = metrics.counter("aqp.admission.batch_rows",
                                              session=sid)
         self._g_depth = metrics.gauge("aqp.admission.depth", session=sid)
@@ -388,7 +414,8 @@ class AqpSession:
         while True:
             with self._lock:
                 key = self._queue.first_due(
-                    self.time_fn() if now is None else now, self.max_delay)
+                    self.time_fn() if now is None else now, self.max_delay,
+                    skip=frozenset(self._fitting))
             if key is None:
                 return flushed
             flushed += self._flush_key(key, FLUSH_DEADLINE)
@@ -456,6 +483,10 @@ class AqpSession:
         return int(self._c_shed.value)
 
     @property
+    def fit_requeued(self) -> int:
+        return int(self._c_fit_requeued.value)
+
+    @property
     def max_depth(self) -> int:
         return int(self._g_max_depth.value)
 
@@ -492,6 +523,7 @@ class AqpSession:
             "max_pending": self.max_pending,
             "blocked": self.blocked,
             "shed": self.shed,
+            "fit_requeued": self.fit_requeued,
             "max_depth": self.max_depth,
             "priorities": self.priority_counts,
             "plan_cache": self.engine.plans.stats(),
@@ -579,6 +611,9 @@ class AqpSession:
                         key, (colkey, sel, tier, fresh)))
 
     def _flush_key(self, key: BucketKey, reason: str) -> int:
+        if self.fit_offload and reason != FLUSH_FIT \
+                and self._maybe_offload(key):
+            return 0
         with self._lock:
             pendings = self._queue.pop(key)
             if pendings:
@@ -588,6 +623,55 @@ class AqpSession:
             return 0
         self._run_flush(key, pendings, reason)
         return 1
+
+    def _maybe_offload(self, key: BucketKey) -> bool:
+        """True when this bucket's flush would block on a slow synopsis fit
+        and the fit was handed to (or is already with) a worker thread; the
+        bucket stays queued — skipped by the deadline scan — until the
+        worker re-flushes it with reason "fit"."""
+        colkey, sel, tier, version = key
+        if sel not in SLOW_SELECTORS:
+            return False
+        cache = getattr(self.engine.store, "cache", None)
+        peek = getattr(cache, "peek", None)
+        if peek is None:
+            return False
+        from .aqp_query import _tier_key
+        if peek(_tier_key(colkey, tier), sel, version) is not None:
+            return False                      # already fitted: flush inline
+        with self._lock:
+            if self._closed or key not in self._queue.buckets:
+                return False
+            if key in self._fitting:
+                return True                   # a worker is already on it
+            self._fitting.add(key)
+            self._c_fit_requeued.inc(len(self._queue.buckets[key]))
+        threading.Thread(
+            target=AqpSession._fit_worker, args=(weakref.ref(self), key),
+            name="aqp-admission-fit", daemon=True).start()
+        return True
+
+    @staticmethod
+    def _fit_worker(ref: "weakref.ref", key: BucketKey) -> None:
+        """Run one slow synopsis fit off the flusher thread, then re-flush
+        the bucket that was waiting on it (reason "fit").  A fit failure is
+        left for the flush to re-raise — it lands in the tickets' futures
+        through the normal error path rather than dying silently here."""
+        session = ref()
+        if session is None:
+            return
+        colkey, sel, tier, version = key
+        try:
+            resolver = session.engine.resolver(sel, tier=tier)
+            with obs.span("admission.fit", key=colkey, selector=sel,
+                          tier=tier, session=session.sid):
+                resolver.plan_for((colkey, sel, tier), version)
+        except BaseException:
+            pass
+        finally:
+            with session._lock:
+                session._fitting.discard(key)
+            session._flush_key(key, FLUSH_FIT)
 
     def _flush_all(self, reason: str) -> int:
         with self._lock:

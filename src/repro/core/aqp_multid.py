@@ -22,6 +22,7 @@ shim over the unified engine in aqp_query.py.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from functools import lru_cache, partial
 from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
@@ -393,6 +394,105 @@ def batch_query_qmc(x: jax.Array, H: jax.Array, lo: np.ndarray, hi: np.ndarray,
     sums = scale * sum_raw
     return jnp.select([np.asarray(ops) == OP_COUNT, np.asarray(ops) == OP_SUM],
                       [counts, sums], _avg_or_zero(counts, sums))
+
+
+@jax.jit
+def _qmc_indicator_terms(nodes: jax.Array, f: jax.Array, glo: jax.Array,
+                         ghi: jax.Array, lo: jax.Array, hi: jax.Array,
+                         tgt: jax.Array, n: jax.Array):
+    """The indicator half of `_qmc_shared_terms` for precomputed densities —
+    the density evaluation happens outside (a synopsis backend's eval runs
+    at top level so obs fencing sees concrete arrays, not tracers)."""
+    vol_g = jnp.prod(ghi - glo)
+
+    def one(loq, hiq, t):
+        inside = jnp.all((nodes >= loq[None, :]) & (nodes <= hiq[None, :]),
+                         axis=1)
+        w = f * inside
+        cnt = n * vol_g * jnp.mean(w)
+        sm = n * vol_g * jnp.mean(jnp.take(nodes, t, axis=1) * w)
+        return cnt, sm
+
+    return jax.vmap(one)(lo, hi, tgt)
+
+
+def batch_query_qmc_rff(x_host: np.ndarray, H: np.ndarray, rff,
+                        lo: np.ndarray, hi: np.ndarray, tgt: np.ndarray,
+                        ops: np.ndarray, scale: float,
+                        n_qmc: int = 4096) -> jax.Array:
+    """`batch_query_qmc` with the density pass routed through a fitted
+    sublinear synopsis (`repro.synopses.rff.RFFSynopsis`, duck-typed: needs
+    `eval_batch`).  Shares `_qmc_plan` with the exact path, so both reduce
+    over identical support-clipped boxes and Halton nodes — the only
+    difference is O(nodes x D) feature eval vs O(nodes x n) kernel sums.
+
+    x_host is the fitted sample (planning only: support hull + row count);
+    the densities never touch it."""
+    d = x_host.shape[1]
+    plan = _qmc_plan(np.asarray(x_host, np.float64), np.asarray(H), lo, hi,
+                     n_qmc)
+    if plan is None:                       # every box is zero-measure
+        return jnp.zeros((np.asarray(lo).shape[0],), jnp.float32)
+    glo, ghi, clo, chi, n_nodes = plan
+
+    unit = _halton_unit(n_nodes, d)
+    glo_d = jnp.asarray(glo, jnp.float32)
+    ghi_d = jnp.asarray(ghi, jnp.float32)
+    nodes = glo_d[None, :] + unit * (ghi_d - glo_d)[None, :]
+    f = rff.eval_batch(nodes)              # Pallas kernel, top level
+    cnt_raw, sum_raw = _qmc_indicator_terms(
+        nodes, f, glo_d, ghi_d, jnp.asarray(clo, jnp.float32),
+        jnp.asarray(chi, jnp.float32), jnp.asarray(tgt, jnp.int32),
+        jnp.float32(x_host.shape[0]))
+    counts = scale * cnt_raw
+    sums = scale * sum_raw
+    return jnp.select([np.asarray(ops) == OP_COUNT, np.asarray(ops) == OP_SUM],
+                      [counts, sums], _avg_or_zero(counts, sums))
+
+
+def qmc_rff_se(rff, x_host: np.ndarray, H: np.ndarray, lo: np.ndarray,
+               hi: np.ndarray, tgt: np.ndarray, ops: np.ndarray,
+               n_source: int, n_qmc: int,
+               n_blocks: int = 8) -> Tuple[np.ndarray, int]:
+    """(per-query SE, t dof) for the RFF QMC path, by batch-means over
+    feature blocks.  The exact path's `qmc_subsample_se` replicates over
+    sample chunks — O(n x nodes), which would erase the sublinear win.  The
+    RFF synopsis's independent replicates are its *features*: each block of
+    D/B features gives an unbiased density estimate (`block_densities`), and
+    every block reduces over the same plan/nodes, so QMC integration error is
+    common-mode and the spread isolates feature-sampling variance — the
+    dominant error this backend adds."""
+    from .aqp import AVG_MIN_COUNT
+
+    q = np.asarray(lo).shape[0]
+    plan = _qmc_plan(np.asarray(x_host, np.float64), np.asarray(H), lo, hi,
+                     n_qmc)
+    if plan is None:                  # zero-measure boxes: estimate is 0
+        return np.zeros((q,), np.float64), n_blocks - 1
+    glo, ghi, clo, chi, n_nodes = plan
+    unit = _halton_unit(n_nodes, x_host.shape[1])
+    glo_d = jnp.asarray(glo, jnp.float32)
+    ghi_d = jnp.asarray(ghi, jnp.float32)
+    clo_d = jnp.asarray(clo, jnp.float32)
+    chi_d = jnp.asarray(chi, jnp.float32)
+    tgt_d = jnp.asarray(tgt, jnp.int32)
+    ops = np.asarray(ops)
+    nodes = glo_d[None, :] + unit * (ghi_d - glo_d)[None, :]
+    fb = rff.block_densities(nodes, n_blocks)            # (B, m)
+    scale = n_source / x_host.shape[0]
+    n_f = jnp.float32(x_host.shape[0])
+    ests = []
+    for j in range(n_blocks):
+        cnt_raw, sum_raw = _qmc_indicator_terms(nodes, fb[j], glo_d, ghi_d,
+                                                clo_d, chi_d, tgt_d, n_f)
+        counts = scale * np.asarray(cnt_raw, np.float64)
+        sums = scale * np.asarray(sum_raw, np.float64)
+        avgs = np.where(counts > AVG_MIN_COUNT,
+                        sums / np.maximum(counts, 1e-12), 0.0)
+        ests.append(np.select([ops == OP_COUNT, ops == OP_SUM],
+                              [counts, sums], avgs))
+    e = np.stack(ests)
+    return e.std(axis=0, ddof=1) / math.sqrt(n_blocks), n_blocks - 1
 
 
 def _qmc_box_answers(syn: KDESynopsis, qs: Sequence[BoxQuery],

@@ -35,6 +35,7 @@ through this module, bit-for-bit identical to `QueryEngine.execute`.
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -42,18 +43,53 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
+from repro.kernels.tuning import env_int
 
 from .aqp import (OP_CODES, OP_COUNT, OP_SUM, KDESynopsis,
                   batch_query_1d, canonical_selector)
 from .aqp_ci import (DEFAULT_CI_LEVEL, moments_1d, moments_box, norm_ppf,
                      qmc_subsample_se, se_from_moments, t_ppf)
 from .aqp_multid import (batch_query_box, batch_query_box_grouped,
-                         batch_query_qmc)
+                         batch_query_qmc, batch_query_qmc_rff, qmc_rff_se)
 
 ColumnKey = Union[None, str, Tuple[str, ...]]
 
 EQ_HALFWIDTH = 0.5   # dictionary codes are unit-spaced: `== v` is v +- 1/2
 WIDE = 1e30          # "unconstrained axis": Phi saturates to {0,1}, phi to 0
+
+# --- density-synopsis backend selection (repro.synopses) --------------------
+#
+# The quasi-MC path's density pass is pluggable: "exact" is the direct
+# kde_eval_H evaluation (O(n) per node, bit-identical to the pre-backend
+# engine), "rff" the sublinear random-Fourier-feature synopsis (O(D) per
+# node after an O(n*D) once-per-version fit).  "auto" picks by sample size:
+# below the crossover the exact pass is already cheap and the RFF fit would
+# never amortize.
+KDE_BACKENDS = ("auto", "exact", "rff")
+KDE_CROSSOVER = env_int("REPRO_KDE_CROSSOVER", 16384)
+DEFAULT_RFF_FEATURES = env_int("REPRO_RFF_FEATURES", 2048)
+# one-shot empirical accuracy gate at fit time: mean relative density error
+# on probe points from the fitted sample; above tolerance the synopsis is
+# marked degraded and the group falls back to the exact pass (counted)
+RFF_GATE_PROBES = 32
+RFF_GATE_TOL = 0.15
+
+
+def _resolve_kde_backend(requested: Optional[str], default: str,
+                         n: int) -> str:
+    name = requested or default or "auto"
+    if name == "auto":
+        return "rff" if n >= KDE_CROSSOVER else "exact"
+    return name
+
+
+def _rff_cache_key(col, n_features: int):
+    """SynopsisCache column key for a fitted RFF synopsis — suffixed like
+    `_tier_key` so RFF state coexists with the exact synopsis entry and
+    round-trips the checkpoint serializer untouched."""
+    if isinstance(col, tuple):
+        return col + (f"#rff{n_features}",)
+    return f"{col}#rff{n_features}"
 
 
 # --- tier addressing (TieredReservoir, repro.data.aqp_store) ----------------
@@ -161,14 +197,25 @@ class AqpQuery:
     `selector` overrides the engine's bandwidth selector for this query only
     (e.g. one `lscv_H` query inside a `plugin` batch routes to the quasi-MC
     path while the rest stay on the closed forms).
+
+    `kde_backend` overrides the engine's density-synopsis backend for this
+    query only ("auto" | "exact" | "rff"); it matters only on the quasi-MC
+    (full-H) path and is ignored by the closed-form and exact-sketch paths.
     """
     aggregate: str                               # "count" | "sum" | "avg"
     predicates: Tuple[Predicate, ...] = ()
     target: Optional[Union[str, int]] = None     # SUM/AVG column (or axis)
     group_by: Optional[Union[str, "GroupBy"]] = None
     selector: Optional[str] = None               # per-query selector override
+    kde_backend: Optional[str] = None            # per-query density backend
 
     def __post_init__(self):
+        if self.kde_backend is not None:
+            kb = str(self.kde_backend).lower()
+            if kb not in KDE_BACKENDS:
+                raise ValueError(f"unknown kde_backend {self.kde_backend!r}; "
+                                 f"expected one of {KDE_BACKENDS}")
+            object.__setattr__(self, "kde_backend", kb)
         agg = str(self.aggregate).lower()
         if agg not in OP_CODES:
             raise ValueError(f"unknown aggregate {self.aggregate!r}; "
@@ -206,7 +253,9 @@ class AqpResult:
                        kernels ran; "box:grouped" for GROUP BY families
                        answered by the factored grouped kernel; "exact"
                        answers come from a CategoricalSketch, "exact:cm"
-                       from a bounded-error CountMinSketch — not the KDE)
+                       from a bounded-error CountMinSketch — not the KDE;
+                       "qmc:rff" when the full-H density pass ran on the
+                       sublinear random-Fourier-feature synopsis backend)
     ci_lo / ci_hi    — confidence interval at `ci_level`, computed per path:
                        analytic product-kernel variance for range1d/box (and
                        box:grouped), subsample (batch-means) variance for
@@ -265,6 +314,7 @@ class _Compiled:
     selector: Optional[str]
     all_eq: bool = False                 # every interval is a code window
     group_axis: Optional[int] = None     # axis of the group_by column
+    kde_backend: Optional[str] = None    # per-query density backend
 
 
 def _compile(query: AqpQuery, slot: int,
@@ -360,7 +410,8 @@ def _compile(query: AqpQuery, slot: int,
         lo=[e[0] for _, e in items], hi=[e[1] for _, e in items],
         constrained=[e[2] for _, e in items], op=OP_CODES[query.aggregate],
         tgt=tgt, selector=query.selector,
-        all_eq=all(eq_only[k] for k, _ in items), group_axis=group_axis)
+        all_eq=all(eq_only[k] for k, _ in items), group_axis=group_axis,
+        kde_backend=query.kde_backend)
 
 
 def _reorder(c: _Compiled, new_cols: Tuple[str, ...]) -> _Compiled:
@@ -371,7 +422,8 @@ def _reorder(c: _Compiled, new_cols: Tuple[str, ...]) -> _Compiled:
         lo=[c.lo[j] for j in perm], hi=[c.hi[j] for j in perm],
         constrained=[c.constrained[j] for j in perm], op=c.op,
         tgt=perm.index(c.tgt), selector=c.selector, all_eq=c.all_eq,
-        group_axis=None if c.group_axis is None else perm.index(c.group_axis))
+        group_axis=None if c.group_axis is None else perm.index(c.group_axis),
+        kde_backend=c.kde_backend)
 
 
 # --- group plans and synopsis resolution ------------------------------------
@@ -523,6 +575,64 @@ class _StoreResolver:
         key, c2, version = self.key_for(c)
         return key, c2, self.plan_for(key, version), version
 
+    def density_for(self, key, version: int, plan: _GroupPlan):
+        """Fit-or-fetch the sublinear RFF density synopsis for a resolved
+        full-H group; returns the fitted `RFFSynopsis` or None (exact pass).
+
+        Fits live in the store's `SynopsisCache` next to the exact synopsis,
+        keyed (column#rffD, selector) and invalidated by version like every
+        other entry — they also persist through the store checkpoint, so a
+        restored process serves warm.  A fit that fails the one-shot probe
+        accuracy gate is cached *degraded* (no refit churn) and this returns
+        None ever after, with the fallback counted per backend.
+        """
+        from repro.synopses import RFFSynopsis
+
+        col, sel, tier = key
+        syn = plan.syn
+        if syn.H is None:
+            return None
+        ckey = _rff_cache_key(_tier_key(col, tier), DEFAULT_RFF_FEATURES)
+        cache = getattr(self.store, "cache", None)
+        metrics = getattr(self.store, "metrics", None)
+        if cache is not None:
+            hit = cache.get(ckey, sel, version)
+            if hit is not None:
+                if hit.degraded and metrics is not None:
+                    metrics.counter("aqp.synopsis.fallback",
+                                    backend="rff").inc()
+                return None if hit.degraded else hit
+        x = plan.x_rows
+        # the seed is a pure function of the (column, selector) identity so
+        # refits after version bumps — and fits on other hosts — draw the
+        # same frequencies
+        seed = zlib.crc32(repr((ckey, sel)).encode()) & 0x7FFFFFFF
+        t_fit = time.perf_counter()
+        with obs.span("synopsis.fit", backend="rff", n=int(x.shape[0]),
+                      n_features=DEFAULT_RFF_FEATURES):
+            rff = RFFSynopsis.fit(x, syn.H,
+                                  n_features=DEFAULT_RFF_FEATURES, seed=seed)
+            # one-shot gate: mean relative density error on probe points
+            # drawn from the fitted sample itself (where the mass is)
+            from .kde import kde_eval_H
+            probes = x[:RFF_GATE_PROBES]
+            f_exact = np.asarray(kde_eval_H(probes, x, syn.H), np.float64)
+            f_rff = np.asarray(rff.eval_batch(probes), np.float64)
+            denom = max(float(np.mean(f_exact)), 1e-300)
+            rff.probe_rel_err = float(np.mean(np.abs(f_rff - f_exact))
+                                      / denom)
+            rff.degraded = rff.probe_rel_err > RFF_GATE_TOL
+        rff.n_source = syn.n_source
+        rff.selector = sel
+        if metrics is not None:
+            metrics.histogram("aqp.synopsis.fit_us", backend="rff").observe(
+                (time.perf_counter() - t_fit) * 1e6)
+            if rff.degraded:
+                metrics.counter("aqp.synopsis.fallback", backend="rff").inc()
+        if cache is not None:
+            cache.put(ckey, sel, version, rff)
+        return None if rff.degraded else rff
+
     def try_exact(self, c: _Compiled):
         """Sketch answer for an all-Eq single-column query, when the column
         carries a categorical sketch covering its whole stream; returns
@@ -651,7 +761,8 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
                backend: str, n_qmc: int,
                ci_level: float = DEFAULT_CI_LEVEL,
                metrics: Optional[obs.MetricsRegistry] = None,
-               tier: Optional[int] = None
+               tier: Optional[int] = None,
+               kde_backend: str = "auto", rff=None
                ) -> List[Tuple[float, str, float, float, int]]:
     """Answer one resolved group in batched passes; returns one
     (estimate, path label, ci_lo, ci_hi, n_effective) per entry, in entry
@@ -706,6 +817,22 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
     # durations device-true instead of async-dispatch artifacts.
     enabled = obs.enabled()
 
+    # Full-H entries whose resolved density backend is the fitted sublinear
+    # synopsis peel off onto the RFF quasi-MC driver; everything else —
+    # including every entry when the fit is missing or gated off (rff=None)
+    # — continues through the UNTOUCHED legacy pass, so `kde_backend="exact"`
+    # answers stay bit-identical to the pre-backend engine.
+    rff_entries: List[_Compiled] = []
+    if plan.kind == "qmc" and rff is not None:
+        still_exact: List[_Compiled] = []
+        for c in rest:
+            if _resolve_kde_backend(c.kde_backend, kde_backend,
+                                    n_eff) == "rff":
+                rff_entries.append(c)
+            else:
+                still_exact.append(c)
+        rest = still_exact
+
     out: Dict[int, Tuple[float, str, float, float, int]] = {}
     if rest:
         n = len(rest)
@@ -716,6 +843,8 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
             lo = _pad_rows(np.asarray([c.lo for c in rest], np.float64), m)
             hi = _pad_rows(np.asarray([c.hi for c in rest], np.float64), m)
             tgt = _pad_rows(np.asarray([c.tgt for c in rest], np.int32), m)
+            if metrics is not None:
+                metrics.counter("aqp.synopsis.hits", backend="exact").inc(n)
             with obs.span("engine.kernel", path="qmc", n=n, tier=tier):
                 ans = batch_query_qmc(x, syn.H, lo, hi, tgt, ops_np, scale,
                                       n_qmc=n_qmc)
@@ -767,6 +896,43 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
             est = float(est)
             out[id(c)] = (est, path, est - q_ci * s, est + q_ci * s, n_eff)
 
+    if rff_entries:
+        n = len(rff_entries)
+        m = _pad_count(n)
+        t_grp = time.perf_counter() if enabled else 0.0
+        ops_np = _pad_rows(np.asarray([c.op for c in rff_entries], np.int32),
+                           m)
+        lo = _pad_rows(np.asarray([c.lo for c in rff_entries], np.float64), m)
+        hi = _pad_rows(np.asarray([c.hi for c in rff_entries], np.float64), m)
+        tgt = _pad_rows(np.asarray([c.tgt for c in rff_entries], np.int32), m)
+        if metrics is not None:
+            metrics.counter("aqp.synopsis.hits", backend="rff").inc(n)
+        with obs.span("synopsis.eval", backend="rff", n=n,
+                      n_features=rff.n_features):
+            with obs.span("engine.kernel", path="qmc:rff", n=n, tier=tier):
+                ans = batch_query_qmc_rff(x, syn.H, rff, lo, hi, tgt, ops_np,
+                                          scale, n_qmc=n_qmc)
+                obs.fence(ans)
+        # feature-block batch-means SE (O(m*D)) — the sample-chunk subsample
+        # CI of the exact path would cost the O(n) pass this backend avoids
+        with obs.span("engine.ci", path="qmc:rff", n=n):
+            se, dof = qmc_rff_se(rff, x, syn.H, lo, hi, tgt, ops_np,
+                                 syn.n_source, n_qmc)
+            obs.fence(se)
+        q_ci = t_ppf(p, dof)
+        ans_np = np.asarray(ans, np.float64)[:n]
+        se_np = np.asarray(se, np.float64)[:n]
+        if enabled and metrics is not None:
+            lat = (time.perf_counter() - t_grp) * 1e6
+            metrics.histogram("aqp.query.latency_us", path="qmc:rff",
+                              tier=tier).observe(lat)
+            metrics.histogram("aqp.synopsis.eval_us",
+                              backend="rff").observe(lat)
+        for c, est, s in zip(rff_entries, ans_np, se_np):
+            est = float(est)
+            out[id(c)] = (est, "qmc:rff",
+                          est - q_ci * s, est + q_ci * s, n_eff)
+
     for fam in families:
         g_axis = fam[0].group_axis
         gm = _pad_count(len(fam))
@@ -809,7 +975,8 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
 
 def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
              backend: str = "jnp", n_qmc: int = 4096,
-             ci_level: float = DEFAULT_CI_LEVEL) -> List[AqpResult]:
+             ci_level: float = DEFAULT_CI_LEVEL,
+             kde_backend: str = "auto") -> List[AqpResult]:
     """Answer compiled queries: exact categorical sketches first (when the
     resolver offers them), then group the rest by resolved synopsis, answer
     each group in batched passes on its execution path, and scatter back to
@@ -848,8 +1015,21 @@ def _execute(compiled: Sequence[_Compiled], n_out: int, resolver,
     for key, g in groups.items():
         plan: _GroupPlan = g["plan"]
         entries: List[_Compiled] = g["entries"]
+        rff = None
+        if plan.kind == "qmc":
+            # fit-or-fetch the sublinear synopsis only when some entry's
+            # resolved backend wants it (and the resolver is store-backed:
+            # the fit cache and the accuracy-gate counters live there)
+            n_rows = int(plan.x_rows.shape[0])
+            density_for = getattr(resolver, "density_for", None)
+            if density_for is not None and any(
+                    _resolve_kde_backend(c.kde_backend, kde_backend,
+                                         n_rows) == "rff"
+                    for c in entries):
+                rff = density_for(key, g["version"], plan)
         answered = _run_group(key, plan, entries, backend, n_qmc,
-                              ci_level=ci_level, metrics=metrics, tier=tier)
+                              ci_level=ci_level, metrics=metrics, tier=tier,
+                              kde_backend=kde_backend, rff=rff)
         for c, (est, path, ci_lo, ci_hi, n_eff) in zip(entries, answered):
             results[c.slot] = AqpResult(
                 estimate=est, path=path,
@@ -882,13 +1062,18 @@ class QueryEngine:
 
     def __init__(self, store, selector: str = "plugin", backend: str = "jnp",
                  n_qmc: int = 4096, max_groups: int = 64,
-                 ci_level: float = DEFAULT_CI_LEVEL):
+                 ci_level: float = DEFAULT_CI_LEVEL,
+                 kde_backend: str = "auto"):
+        if kde_backend not in KDE_BACKENDS:
+            raise ValueError(f"unknown kde_backend {kde_backend!r}; "
+                             f"expected one of {KDE_BACKENDS}")
         self.store = store
         self.selector = selector
         self.backend = backend
         self.n_qmc = n_qmc
         self.max_groups = max_groups
         self.ci_level = ci_level
+        self.kde_backend = kde_backend
         self.plans = PlanCache(metrics=getattr(store, "metrics", None))
 
     # -- planning core (shared by the synchronous path and the admission
@@ -920,7 +1105,8 @@ class QueryEngine:
     def run_compiled(self, compiled: Sequence[_Compiled],
                      selector: Optional[str] = None,
                      backend: Optional[str] = None,
-                     tier: Optional[int] = None) -> List[AqpResult]:
+                     tier: Optional[int] = None,
+                     kde_backend: Optional[str] = None) -> List[AqpResult]:
         """Execute pre-compiled units (slots must be 0..n-1) — the admission
         layer's flush entry point; identical execution to `execute`."""
         with obs.span("engine.run_compiled", n=len(compiled), tier=tier,
@@ -928,19 +1114,24 @@ class QueryEngine:
             return _execute(compiled, len(compiled),
                             self.resolver(selector, tier=tier),
                             backend=backend or self.backend, n_qmc=self.n_qmc,
-                            ci_level=self.ci_level)
+                            ci_level=self.ci_level,
+                            kde_backend=kde_backend or self.kde_backend)
 
     # -- the synchronous shell ----------------------------------------------
 
     def execute(self, queries: Union[AqpQuery, Sequence[AqpQuery]],
                 selector: Optional[str] = None,
-                backend: Optional[str] = None, mode: str = "batch"):
+                backend: Optional[str] = None, mode: str = "batch",
+                kde_backend: Optional[str] = None):
         """Answer a batch of AqpQuery specs; one AqpResult per query (one per
         group value for GROUP BY queries, in discovered/declared order).
 
         `mode="batch"` (default) returns the List[AqpResult] directly;
         `mode="progressive"` returns the `progressive` generator instead —
-        (tier, results) rounds with tightening confidence intervals."""
+        (tier, results) rounds with tightening confidence intervals.
+
+        `kde_backend` overrides the engine's density-backend default for
+        this batch ("auto" | "exact" | "rff", quasi-MC path only)."""
         if mode == "progressive":
             return self.progressive(queries, selector=selector,
                                     backend=backend)
@@ -948,7 +1139,7 @@ class QueryEngine:
             raise ValueError(f"unknown mode {mode!r}; "
                              f"expected 'batch' or 'progressive'")
         return self.run_compiled(self.compile(queries), selector=selector,
-                                 backend=backend)
+                                 backend=backend, kde_backend=kde_backend)
 
     def progressive(self, queries: Union[AqpQuery, Sequence[AqpQuery]],
                     selector: Optional[str] = None,

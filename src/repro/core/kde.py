@@ -79,8 +79,7 @@ def kde_eval(points: jax.Array, x: jax.Array, h: jax.Array, chunk: int = 256,
 
 
 @partial(jax.jit, static_argnames=("chunk",))
-def kde_eval_H(points: jax.Array, x: jax.Array, H: jax.Array, chunk: int = 256) -> jax.Array:
-    """f^(points; x, H) per eq. (6): n^-1 |H|^-1/2 sum K(H^-1/2 (x - X_i))."""
+def _kde_eval_H(points: jax.Array, x: jax.Array, H: jax.Array, chunk: int) -> jax.Array:
     if x.ndim == 1:
         x = x[:, None]
     if points.ndim == 1:
@@ -95,6 +94,21 @@ def kde_eval_H(points: jax.Array, x: jax.Array, H: jax.Array, chunk: int = 256) 
         return jnp.exp(log_norm - quad)
 
     return _chunked_eval(points, x, kfun, chunk)
+
+
+def kde_eval_H(points: jax.Array, x: jax.Array, H: jax.Array,
+               chunk: int | None = None) -> jax.Array:
+    """f^(points; x, H) per eq. (6): n^-1 |H|^-1/2 sum K(H^-1/2 (x - X_i)).
+
+    chunk=None reads REPRO_KDE_CHUNK (default 256) per call — the env var
+    must be resolved outside the jit, so this wrapper stays un-jitted and
+    delegates to the jitted body (jit-of-jit inlines, so callers that trace
+    this inside their own jit compile identically).
+    """
+    if chunk is None:
+        from repro.kernels.tuning import env_int
+        chunk = env_int("REPRO_KDE_CHUNK", 256)
+    return _kde_eval_H(points, x, H, chunk)
 
 
 def silverman_h(x: jax.Array) -> jax.Array:

@@ -531,19 +531,39 @@ class CountMinSketch:
     worst-case bound either way).  Merging adds tables cell-wise as before —
     the per-sketch upper-bound invariant is additive — but the merged sketch
     is only flagged conservative when both inputs are.
+
+    Code grid: a count-min table cannot enumerate its keys, so range
+    answers walk an assumed code lattice `grid_origin + k * grid_step`
+    (default: the integers).  Before this was explicit, a column whose
+    dictionary codes sit off the integer lattice (half codes, scaled ids)
+    answered range queries from the WRONG enumeration — COUNT missed every
+    off-lattice code and SUM mis-weighted what it did hit, silently, on a
+    path labelled "exact:cm".  Now the sketch verifies each batch against
+    its declared grid: any off-grid value flips `off_grid` and range
+    answers return None forever after (point `estimate` stays valid), so
+    the engine falls back to the KDE instead of serving a wrong exact
+    answer.  Declaring the true grid (`track_categorical(...,
+    grid_step=0.5)`) restores exact-path coverage with correctly weighted
+    sums (regression-tested).
     """
 
     path = "exact:cm"
 
     def __init__(self, width: int = 2048, depth: int = 4, seed: int = 0,
-                 max_enumerate: int = 64, conservative: bool = False):
+                 max_enumerate: int = 64, conservative: bool = False,
+                 grid_step: float = 1.0, grid_origin: float = 0.0):
         if width < 1 or depth < 1:
             raise ValueError(f"width/depth must be >= 1, got {width}x{depth}")
+        if not grid_step > 0:
+            raise ValueError(f"grid_step must be > 0, got {grid_step}")
         self.width = width
         self.depth = depth
         self.seed = seed
         self.conservative = conservative
         self.max_enumerate = max_enumerate   # widest code window enumerated
+        self.grid_step = float(grid_step)
+        self.grid_origin = float(grid_origin)
+        self.off_grid = False                # any value seen off the lattice
         self.table = np.zeros((depth, width), np.int64)
         self.n_rows = 0
         self.overflowed = False              # a CM sketch never overflows
@@ -565,6 +585,18 @@ class CountMinSketch:
         values = np.asarray(values, np.float32).ravel()
         if values.shape[0] == 0:
             return
+        if not self.off_grid:
+            # snap each value to the declared lattice and compare the float32
+            # bit patterns: a mismatch means the column's codes are not where
+            # range enumeration will look for them, so disable range answers
+            # (cell counts and point estimates stay valid)
+            k = np.rint((values.astype(np.float64) - self.grid_origin)
+                        / self.grid_step)
+            snapped = np.asarray(self.grid_origin + k * self.grid_step,
+                                 np.float32)
+            if not np.array_equal(snapped.view(np.uint32),
+                                  values.view(np.uint32)):
+                self.off_grid = True
         if self.conservative:
             # conservative update, vectorised per distinct code: read every
             # code's current min-estimate against the pre-batch table, then
@@ -600,25 +632,45 @@ class CountMinSketch:
         exact — the engine labels them "exact:cm"."""
         return self.n_rows == n_seen
 
-    def range_terms(self, lo: float, hi: float) -> Optional[Tuple[int, float]]:
-        """(COUNT, SUM of code values) over *integer* codes in [lo, hi], or
-        None when the window spans more than `max_enumerate` codes (a
-        count-min sketch cannot enumerate its keys, so wide windows go back
-        to the KDE path rather than summing unbounded collision noise)."""
-        first = int(np.ceil(lo))
-        last = int(np.floor(hi))
+    def _grid_codes(self, lo: float, hi: float) -> Optional[List[float]]:
+        """Deduplicated float32 lattice codes inside [lo, hi], or None when
+        the window spans more than `max_enumerate` grid points.  The small
+        epsilon absorbs float64 division fuzz so a query bound sitting ON a
+        grid point always includes it."""
+        step, origin = self.grid_step, self.grid_origin
+        first = int(np.ceil((lo - origin) / step - 1e-9))
+        last = int(np.floor((hi - origin) / step + 1e-9))
         if last < first:
-            return 0, 0.0
+            return []
         if last - first + 1 > self.max_enumerate:
+            return None
+        out: List[float] = []
+        seen = set()
+        for k in range(first, last + 1):
+            # grid points beyond float32 resolution can alias to one code;
+            # count the shared cell once
+            code32 = float(np.float32(origin + k * step))
+            if code32 not in seen:
+                seen.add(code32)
+                out.append(code32)
+        return out
+
+    def range_terms(self, lo: float, hi: float) -> Optional[Tuple[int, float]]:
+        """(COUNT, SUM of code values) over lattice codes in [lo, hi], each
+        code's count weighted by its actual (possibly fractional) value.
+        None when the window spans more than `max_enumerate` grid points (a
+        count-min sketch cannot enumerate its keys, so wide windows go back
+        to the KDE path rather than summing unbounded collision noise) or
+        when the stream has produced off-grid values — the enumeration would
+        miss them, so the KDE path answers instead."""
+        if self.off_grid:
+            return None
+        codes = self._grid_codes(lo, hi)
+        if codes is None:
             return None
         cnt = 0
         sm = 0.0
-        seen = set()
-        for code in range(first, last + 1):
-            code32 = float(np.float32(code))
-            if code32 in seen:      # ints > 2^24 can alias to one float32
-                continue            # code; count the shared cell once
-            seen.add(code32)
+        for code32 in codes:
             k = self.estimate(code32)
             cnt += k
             sm += code32 * k
@@ -632,26 +684,21 @@ class CountMinSketch:
                   ) -> Optional[Tuple[int, float, float]]:
         """Worst-case over-count mass for a `range_terms(lo, hi)` answer:
         (count error, positive sum error, negative sum error), or None when
-        the window is too wide to enumerate.  Count-min only over-counts, so
-        COUNT truth lies in [est - count_err, est] and SUM truth in
+        the window is too wide to enumerate or the stream went off-grid.
+        Count-min only over-counts, so COUNT truth lies in
+        [est - count_err, est] and SUM truth in
         [est - sum_pos_err, est + sum_neg_err] (over-counted negative codes
         push the estimated sum DOWN, so truth can sit above it)."""
-        first = int(np.ceil(lo))
-        last = int(np.floor(hi))
-        if last < first:
-            return 0, 0.0, 0.0
-        if last - first + 1 > self.max_enumerate:
+        if self.off_grid:
+            return None
+        codes = self._grid_codes(lo, hi)
+        if codes is None:
             return None
         eb = self.err_bound()
         cnt_err = 0
         sum_pos = 0.0
         sum_neg = 0.0
-        seen = set()
-        for code in range(first, last + 1):
-            code32 = float(np.float32(code))
-            if code32 in seen:
-                continue
-            seen.add(code32)
+        for code32 in codes:
             cnt_err += eb
             if code32 >= 0:
                 sum_pos += eb * code32
@@ -671,21 +718,32 @@ class CountMinSketch:
                 f"{(self.width, self.depth, self.seed)} vs "
                 f"{(other.width, other.depth, other.seed)} "
                 f"(or unequal hash parameters)")
+        if (self.grid_step, self.grid_origin) != (other.grid_step,
+                                                  other.grid_origin):
+            raise ValueError(
+                f"cannot merge count-min sketches over different code grids: "
+                f"step/origin {(self.grid_step, self.grid_origin)} vs "
+                f"{(other.grid_step, other.grid_origin)}")
         out = CountMinSketch(self.width, self.depth, self.seed,
                              max_enumerate=min(self.max_enumerate,
                                                other.max_enumerate),
                              conservative=self.conservative
-                             and other.conservative)
+                             and other.conservative,
+                             grid_step=self.grid_step,
+                             grid_origin=self.grid_origin)
         out._mul = self._mul.copy()
         out._add = self._add.copy()
         out.table = self.table + other.table
         out.n_rows = self.n_rows + other.n_rows
+        out.off_grid = self.off_grid or other.off_grid
         return out
 
     def stats(self) -> Dict[str, object]:
         return {"kind": "cm", "rows": self.n_rows, "overflowed": False,
                 "width": self.width, "depth": self.depth,
                 "conservative": self.conservative,
+                "grid_step": self.grid_step, "grid_origin": self.grid_origin,
+                "off_grid": self.off_grid,
                 "err_bound": self.err_bound()}
 
     def state(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
@@ -693,6 +751,9 @@ class CountMinSketch:
                 "width": int(self.width), "depth": int(self.depth),
                 "seed": int(self.seed),
                 "conservative": bool(self.conservative),
+                "grid_step": float(self.grid_step),
+                "grid_origin": float(self.grid_origin),
+                "off_grid": bool(self.off_grid),
                 "max_enumerate": int(self.max_enumerate)}
         # the hash multipliers are persisted, not re-derived on load: numpy
         # does not guarantee Generator streams across versions, and a table
@@ -703,10 +764,14 @@ class CountMinSketch:
     @classmethod
     def from_state(cls, arrays: Dict[str, np.ndarray],
                    meta: Dict[str, object]) -> "CountMinSketch":
-        # `conservative` default False: pre-flag snapshots load as standard
+        # `conservative`/grid defaults: pre-flag snapshots load as standard
+        # sketches on the integer lattice (exactly what they assumed)
         out = cls(int(meta["width"]), int(meta["depth"]), int(meta["seed"]),
                   max_enumerate=int(meta["max_enumerate"]),
-                  conservative=bool(meta.get("conservative", False)))
+                  conservative=bool(meta.get("conservative", False)),
+                  grid_step=float(meta.get("grid_step", 1.0)),
+                  grid_origin=float(meta.get("grid_origin", 0.0)))
+        out.off_grid = bool(meta.get("off_grid", False))
         out._mul = np.asarray(arrays["mul"], np.uint64)
         out._add = np.asarray(arrays["add"], np.uint64)
         out.table = np.asarray(arrays["table"], np.int64).reshape(
@@ -720,8 +785,13 @@ _SKETCH_KINDS = {"exact": CategoricalSketch, "cm": CountMinSketch}
 
 def _entry_nbytes(syn) -> int:
     """Byte footprint of a cached synopsis — the device payload (sample +
-    bandwidth).  Payloads without device arrays size to 0; the entry bound
-    still applies to them."""
+    bandwidth).  `repro.synopses` backends report their own `nbytes` (an RFF
+    synopsis carries no sample, only its (W, b, z) triple); legacy
+    `KDESynopsis` payloads are sized from their arrays.  Payloads without
+    device arrays size to 0; the entry bound still applies to them."""
+    own = getattr(syn, "nbytes", None)
+    if isinstance(own, int):
+        return own
     nb = 0
     for attr in ("x", "h", "H"):
         v = getattr(syn, attr, None)
@@ -823,6 +893,18 @@ class SynopsisCache:
             if self._m_entries is not None:
                 self._m_entries.set(len(self._entries))
                 self._m_bytes.set(self._bytes)
+
+    def peek(self, column: ColumnKey, selector: str,
+             version: int) -> Optional[KDESynopsis]:
+        """Non-counting `get`: no hit/miss counters, no LRU refresh.  The
+        admission fit-offload guard uses this to ask "is the fit already
+        done?" without skewing cache statistics or recency."""
+        key = (column, canonical_selector(selector))
+        with self._lock:
+            ent = self._entries.get(key)
+            if ent is not None and ent[0] == version:
+                return ent[1]
+            return None
 
     def invalidate(self, column: Optional[ColumnKey] = None) -> None:
         with self._lock:
@@ -951,7 +1033,9 @@ class TelemetryStore:
 
     def track_categorical(self, column: str, max_codes: int = 4096,
                           kind: str = "exact", width: int = 2048,
-                          depth: int = 4, conservative: bool = False) -> None:
+                          depth: int = 4, conservative: bool = False,
+                          grid_step: float = 1.0,
+                          grid_origin: float = 0.0) -> None:
         """Register a per-code frequency sketch for a dictionary column.
         Register *before* the column's first `add_batch` — the engine's
         exact Eq path requires the sketch to cover the whole stream
@@ -964,13 +1048,22 @@ class TelemetryStore:
         (path "exact:cm") for columns too wide to enumerate.
         `conservative=True` (kind="cm" only) switches the table to
         conservative updates: same worst-case bound, much lower realised
-        error on skewed streams (see `CountMinSketch`)."""
+        error on skewed streams (see `CountMinSketch`).
+        `grid_step`/`grid_origin` (kind="cm" only) declare the column's code
+        lattice for range enumeration — codes observed off the declared grid
+        disable range answers rather than mis-weighting them (see
+        `CountMinSketch`); the exact sketch keys codes directly and needs no
+        grid."""
         if column in self.categoricals:
             return
         if kind == "exact":
             if conservative:
                 raise ValueError("conservative update is a count-min mode; "
                                  "kind='exact' counts are already exact")
+            if (grid_step, grid_origin) != (1.0, 0.0):
+                raise ValueError("grid_step/grid_origin are count-min "
+                                 "parameters; kind='exact' enumerates its "
+                                 "actual codes and needs no grid")
             self.categoricals[column] = CategoricalSketch(max_codes=max_codes)
         elif kind == "cm":
             # seed from the column name alone (NOT the per-host store seed):
@@ -979,7 +1072,8 @@ class TelemetryStore:
             self.categoricals[column] = CountMinSketch(
                 width=width, depth=depth,
                 seed=zlib.crc32(column.encode()) % 1000,
-                conservative=conservative)
+                conservative=conservative,
+                grid_step=grid_step, grid_origin=grid_origin)
         else:
             raise ValueError(f"unknown sketch kind {kind!r}; "
                              f"expected one of {sorted(_SKETCH_KINDS)}")
@@ -1211,7 +1305,7 @@ class TelemetryStore:
         reg = self.metrics
         agg: Dict[str, object] = {"sessions": len(live)}
         for k in ("submitted", "executed", "flushes", "coalesced",
-                  "invalidations", "blocked", "shed"):
+                  "invalidations", "blocked", "shed", "fit_requeued"):
             agg[k] = int(reg.sum_counter(f"aqp.admission.{k}"))
         agg["pending"] = int(reg.sum_gauge("aqp.admission.depth"))
         flush_reasons: Dict[str, int] = {}
@@ -1304,17 +1398,28 @@ class TelemetryStore:
                 meta["categoricals"][name] = m
             for i, (key, version, syn) in enumerate(self.cache.entries()):
                 col, sel = key
-                meta["cache"].append({
+                ent = {
                     "column": list(col) if isinstance(col, tuple) else col,
                     "is_tuple": isinstance(col, tuple), "selector": sel,
                     "version": int(version), "n_source": int(syn.n_source),
                     "syn_selector": syn.selector,
-                })
-                tree[f"cache/{i}/x"] = np.asarray(syn.x)
-                if syn.h is not None:
-                    tree[f"cache/{i}/h"] = np.asarray(syn.h)
-                if syn.H is not None:
-                    tree[f"cache/{i}/H"] = np.asarray(syn.H)
+                }
+                to_state = getattr(syn, "to_state", None)
+                if to_state is not None:
+                    # pluggable `repro.synopses` backend (e.g. a fitted RFF
+                    # state): it serializes itself; the backend name in the
+                    # meta picks the deserializer on restore
+                    arrays, syn_meta = to_state()
+                    ent["synopsis"] = syn_meta
+                    for k, arr in arrays.items():
+                        tree[f"cache/{i}/{k}"] = np.asarray(arr)
+                else:
+                    tree[f"cache/{i}/x"] = np.asarray(syn.x)
+                    if syn.h is not None:
+                        tree[f"cache/{i}/h"] = np.asarray(syn.h)
+                    if syn.H is not None:
+                        tree[f"cache/{i}/H"] = np.asarray(syn.H)
+                meta["cache"].append(ent)
             # shared engines' plan-cache keys ride along: plans rebuild from
             # the persisted synopses on restore, so warm starts skip the
             # compile-and-plan pass too (not just the bandwidth fits)
@@ -1398,14 +1503,24 @@ class TelemetryStore:
             self.categoricals = categoricals
             self.cache.invalidate()
             for i, ent in enumerate(meta["cache"]):
-                h = tree.get(f"cache/{i}/h")
-                H = tree.get(f"cache/{i}/H")
-                syn = KDESynopsis(
-                    x=jnp.asarray(tree[f"cache/{i}/x"]),
-                    h=None if h is None else jnp.asarray(h),
-                    H=None if H is None else jnp.asarray(H),
-                    n_source=int(ent["n_source"]),
-                    selector=str(ent["syn_selector"]))
+                syn_meta = ent.get("synopsis")
+                if syn_meta is not None:
+                    # pluggable backend entry: round-trip through its own
+                    # (de)serializer, bit-for-bit (test-enforced for RFF)
+                    from repro.synopses import get_backend
+                    syn = get_backend(str(syn_meta["backend"])).from_state(
+                        _subtree(f"cache/{i}/"), syn_meta)
+                    syn.n_source = int(ent["n_source"])
+                    syn.selector = str(ent["syn_selector"])
+                else:
+                    h = tree.get(f"cache/{i}/h")
+                    H = tree.get(f"cache/{i}/H")
+                    syn = KDESynopsis(
+                        x=jnp.asarray(tree[f"cache/{i}/x"]),
+                        h=None if h is None else jnp.asarray(h),
+                        H=None if H is None else jnp.asarray(H),
+                        n_source=int(ent["n_source"]),
+                        selector=str(ent["syn_selector"]))
                 col = tuple(ent["column"]) if ent["is_tuple"] \
                     else ent["column"]
                 self.cache.put(col, str(ent["selector"]),

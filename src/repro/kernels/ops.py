@@ -22,6 +22,7 @@ from . import gh_fused as _gh
 from . import kde_eval as _kde
 from . import lscv_grid as _lg
 from . import pairwise_reduce as _pr
+from . import rff_eval as _rff
 from . import sv_precompute as _sv
 from .tuning import profiled_call
 
@@ -91,6 +92,17 @@ def aqp_batch_sums(x, h, a, b, tile=_ab.TILE, q_tile=_ab.Q_TILE):
         lambda: _ab.aqp_batch_sums(x, h, a, b, tile=tile, q_tile=q_tile,
                                    interpret=INTERPRET),
         n=x.shape[0], G=a.shape[0], tile=tile, q_tile=q_tile)
+
+
+def rff_density(points, w, b, z, tile=_rff.TILE, p_tile=_rff.P_TILE):
+    if not obs.enabled():
+        return _rff.rff_density(points, w, b, z, tile=tile, p_tile=p_tile,
+                                interpret=INTERPRET)
+    return profiled_call(
+        "rff_density",
+        lambda: _rff.rff_density(points, w, b, z, tile=tile, p_tile=p_tile,
+                                 interpret=INTERPRET),
+        n=points.shape[0], D=w.shape[0], tile=tile, p_tile=p_tile)
 
 
 def aqp_box_sums(x, h_diag, lo, hi, tgt, tile=_abx.TILE, q_tile=_abx.Q_TILE):

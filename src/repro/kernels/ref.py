@@ -85,6 +85,13 @@ def aqp_box_sums(x: jnp.ndarray, h_diag: jnp.ndarray, lo: jnp.ndarray,
     return count_raw, sum_raw
 
 
+def rff_density(points: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                z: jnp.ndarray) -> jnp.ndarray:
+    """Un-normalised RFF density dots: cos(points @ W.T + b) @ z.
+    points: (m, d), w: (D, d), b/z: (D,) -> (m,)."""
+    return jnp.cos(points @ w.T + b[None, :]) @ z
+
+
 def aqp_batch_sums(x: jnp.ndarray, h, a: jnp.ndarray, b: jnp.ndarray):
     """Unscaled closed-form integrals of eqs. 9-10 for a query batch.
     x: (n,), a/b: (q,) -> (count_raw, sum_raw), each (q,)."""

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: batched random-Fourier-feature density eval.
+
+One launch evaluates the RFF synopsis dot product for a batch of points:
+
+    raw[p] = sum_j  cos(w_j . x_p + b_j) * z_j
+
+with the fitted state (W, b, z) from `repro.synopses.rff` (z carries the
+2/D feature scale and the sample mean; the caller applies the kernel
+normaliser and the zero clip).  Grid: (point-tile major, feature-tile
+minor) — the (pk,) accumulator block stays resident while feature tiles
+stream through, the same pattern as aqp_boxes.py.  Padded features
+contribute exactly zero because z is zero-padded, so no feature mask is
+needed; padded points are sliced off by the caller.
+
+Tile sizes are env-tunable (REPRO_RFF_TILE feature tile /
+REPRO_RFF_P_TILE point tile) for `interpret=False` runs on real TPU;
+call-site kwargs still win.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tuning import env_int
+
+TILE = env_int("REPRO_RFF_TILE", 512)
+P_TILE = env_int("REPRO_RFF_P_TILE", 256)
+
+
+def _kernel(p_ref, w_ref, b_ref, z_ref, out_ref):
+    j = pl.program_id(1)     # feature-tile index (minor: varies fastest)
+    p = p_ref[...]           # (pk, d) query points (padded rows harmless)
+    w = w_ref[...]           # (fk, d) feature frequencies
+    b = b_ref[...]           # (fk,)  feature phases
+    z = z_ref[...]           # (fk,)  scaled sample feature mean (0 on pad)
+
+    proj = jnp.dot(p, w.T) + b[None, :]          # (pk, fk)
+    partial = jnp.cos(proj) @ z                  # (pk,)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "p_tile", "interpret"))
+def rff_density(points: jax.Array, w: jax.Array, b: jax.Array, z: jax.Array,
+                tile: int = TILE, p_tile: int = P_TILE,
+                interpret: bool = True):
+    """Un-normalised RFF densities: cos(points @ W.T + b) @ z.
+
+    points: (m, d); w: (D, d); b/z: (D,).  Returns (m,) raw feature dots —
+    the caller (`RFFSynopsis.eval_batch`) applies the kernel normaliser and
+    the max(., 0) clip.
+    """
+    m, d = points.shape
+    D = w.shape[0]
+    if m == 0 or D == 0:
+        return jnp.zeros((m,), points.dtype)
+
+    pk = min(p_tile, max(8, 1 << (m - 1).bit_length()))
+    fk = min(tile, max(8, 1 << (D - 1).bit_length()))
+    pp = jnp.pad(points, ((0, (-m) % pk), (0, 0)))
+    wp = jnp.pad(w, ((0, (-D) % fk), (0, 0)))
+    bp = jnp.pad(b, (0, (-D) % fk))
+    zp = jnp.pad(z, (0, (-D) % fk))
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(pp.shape[0] // pk, wp.shape[0] // fk),
+        in_specs=[
+            pl.BlockSpec((pk, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((fk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((fk,), lambda i, j: (j,)),
+            pl.BlockSpec((fk,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((pk,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((pp.shape[0],), points.dtype),
+        interpret=interpret,
+    )(pp, wp.astype(points.dtype), bp.astype(points.dtype),
+      zp.astype(points.dtype))
+    return out[:m]

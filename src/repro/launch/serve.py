@@ -118,10 +118,14 @@ def make_box_query_mix(n_queries: int, columns, ranges, seed: int = 0):
 
 
 def make_mixed_aqp_queries(n_queries: int, ranges, joint_cols, cat_col,
-                           cat_values, n_boxes: int = None, seed: int = 0):
+                           cat_values, n_boxes: int = None, seed: int = 0,
+                           fullh_frac: float = 0.0):
     """Deterministic heterogeneous AqpQuery batch: 1-D ranges over every
     numeric column, eq. 11 boxes over `joint_cols`, and categorical Eq terms
-    on `cat_col`.  Shared by the serving mode and bench_aqp_engine."""
+    on `cat_col`.  `fullh_frac` of the boxes carry a per-query
+    selector="lscv_H" override, routing them through the full-H QMC path
+    (and the engine's density backend).  Shared by the serving mode and
+    bench_aqp_engine."""
     import numpy as np
 
     from repro.core import AqpQuery, Box, Eq, Range
@@ -146,7 +150,8 @@ def make_mixed_aqp_queries(n_queries: int, ranges, joint_cols, cat_col,
             tgt = joint_cols[int(rng.integers(len(joint_cols)))]
             queries.append(AqpQuery(
                 op, (Box(tuple(joint_cols), tuple(lo), tuple(hi)),),
-                target=None if op == "count" else tgt))
+                target=None if op == "count" else tgt,
+                selector="lscv_H" if rng.random() < fullh_frac else None))
         elif i % 8 == 3 and n_eq > 0:
             n_eq -= 1
             queries.append(AqpQuery(
@@ -255,6 +260,10 @@ def run_aqp(args) -> None:
               for c, s in ((c, store.columns[c].sample())
                            for c in store.columns if c != "model_id")}
     engine = store.engine(selector=args.selector, backend=args.backend)
+    # per-engine default for full-H density evaluation: "exact" pins the
+    # reference path, "rff" forces the sublinear synopsis, "auto" crosses
+    # over by fitted-sample size (REPRO_KDE_CROSSOVER)
+    engine.kde_backend = args.kde_backend
 
     # Closed-loop clients hold one outstanding query each, so a bucket can
     # never exceed the client count: a deeper watermark would leave every
@@ -266,7 +275,7 @@ def run_aqp(args) -> None:
     # near the flush shapes, so the timed loop measures steady state.
     warm = make_mixed_aqp_queries(
         max(watermark, 64), ranges, joint_cols, "model_id",
-        (0.0, 1.0, 2.0, 3.0), seed=99)
+        (0.0, 1.0, 2.0, 3.0), seed=99, fullh_frac=args.fullh_frac)
     engine.execute(warm)
     if args.coarse_frac > 0:
         # coarse traffic answers from tier 0: fit those synopses too
@@ -307,7 +316,8 @@ def run_aqp(args) -> None:
     def client(ci: int) -> None:
         specs = make_mixed_aqp_queries(
             args.per_client, ranges, joint_cols, "model_id",
-            (0.0, 1.0, 2.0, 3.0), seed=10 + ci)
+            (0.0, 1.0, 2.0, 3.0), seed=10 + ci,
+            fullh_frac=args.fullh_frac)
         crng = np.random.default_rng(500 + ci)
         got = []
         for q in specs:                       # closed loop: 1 outstanding
@@ -481,6 +491,16 @@ def main() -> None:
     ap.add_argument("--selector", default="plugin",
                     choices=["plugin", "silverman", "lscv_h"])
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--fullh-frac", type=float, default=0.0,
+                    help="fraction of box queries carrying a per-query "
+                         "selector='lscv_H' override: routed through the "
+                         "full-H QMC path and the --kde-backend density "
+                         "backend")
+    ap.add_argument("--kde-backend", default="auto",
+                    choices=["auto", "exact", "rff"],
+                    help="density backend for full-H queries: exact KDE, "
+                         "the sublinear RFF synopsis, or size-based auto "
+                         "crossover (default)")
     ap.add_argument("--metrics-out", default=None,
                     help="enable repro.obs and write a merged JSON metrics "
                          "snapshot here every --metrics-every seconds "
@@ -497,6 +517,8 @@ def main() -> None:
         ap.error(f"--metrics-every must be > 0, got {args.metrics_every}")
     if not 0.0 <= args.coarse_frac <= 1.0:
         ap.error(f"--coarse-frac must be in [0, 1], got {args.coarse_frac}")
+    if not 0.0 <= args.fullh_frac <= 1.0:
+        ap.error(f"--fullh-frac must be in [0, 1], got {args.fullh_frac}")
 
     if args.mode == "aqp":
         run_aqp(args)

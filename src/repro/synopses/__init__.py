@@ -1,0 +1,17 @@
+"""Pluggable density-synopsis backends (see `base` for the contract).
+
+Importing this package registers the built-in backends, so
+`available()` reflects everything usable after `import repro.synopses`.
+"""
+from .base import DensitySynopsis, available, get_backend, register
+from .exact import ExactSynopsis
+from .rff import RFFSynopsis
+
+__all__ = [
+    "DensitySynopsis",
+    "ExactSynopsis",
+    "RFFSynopsis",
+    "available",
+    "get_backend",
+    "register",
+]

@@ -1,0 +1,107 @@
+"""Pluggable density-synopsis backends for the engine's full-H path.
+
+The quasi-MC fallback is the one execution path that still scales linearly
+in reservoir size: every query batch pays a `kde_eval_H` pass over the whole
+retained sample (eq. 6, O(n * nodes)).  ROADMAP item 3 makes the density
+evaluator *selectable*: a `DensitySynopsis` backend is anything that can be
+fitted once per synopsis version and then evaluate batched densities —
+exactly (the reference `"exact"` backend wraps `kde_eval_H`) or sublinearly
+(`"rff"` compresses the sample into a fixed-size random-Fourier-feature
+state whose eval cost is independent of n; hashing/ANN estimators from
+PAPERS.md slot in as future backends).
+
+The contract every backend implements:
+
+  fit(sample, H, ...) -> synopsis   one-time fit against the retained rows
+                                    and the full bandwidth matrix
+  eval_batch(points) -> densities   batched f^(points), shape (m,)
+  to_state() / from_state(...)      checkpointable (arrays, JSON-safe meta)
+                                    payload — fitted synopses ride the
+                                    TelemetryStore snapshot format
+  n_fitted                          rows the fit consumed
+  error_metadata()                  backend-specific accuracy facts (probe
+                                    error, feature count, degraded flag)
+                                    for observability and the engine's
+                                    accuracy gate
+
+Backends register by name; the engine resolves `kde_backend=` requests
+through `get_backend`.  Registration is import-time (`repro.synopses`
+imports the built-in backends), so `available()` is the authoritative list.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register(name: str):
+    """Class decorator: publish a backend under `name` (used by cache keys
+    and checkpoint metadata, so renaming a registered backend breaks old
+    snapshots — don't)."""
+
+    def deco(cls: type) -> type:
+        existing = _REGISTRY.get(name)
+        if existing is not None and existing is not cls:
+            raise ValueError(f"density backend {name!r} already registered "
+                             f"to {existing.__name__}")
+        _REGISTRY[name] = cls
+        cls.backend = name
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> type:
+    cls = _REGISTRY.get(name)
+    if cls is None:
+        raise KeyError(f"unknown density backend {name!r}; "
+                       f"have {available()}")
+    return cls
+
+
+def available() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+class DensitySynopsis:
+    """Base class for density-synopsis backends (see module docstring).
+
+    Subclasses must implement `fit`, `eval_batch`, `to_state`, `from_state`
+    and set `n_fitted`; `error_metadata` has a sensible default.  The
+    `n_source`/`selector` attributes mirror `KDESynopsis` so fitted backends
+    ride the `SynopsisCache` and the checkpoint serializer unchanged.
+    """
+
+    backend: str = "?"
+    n_fitted: int = 0
+    n_source: int = 0
+    selector: str = "plugin"
+    degraded: bool = False      # accuracy gate failed -> engine uses exact
+
+    @classmethod
+    def fit(cls, sample, H, **kwargs) -> "DensitySynopsis":
+        raise NotImplementedError
+
+    def eval_batch(self, points):
+        raise NotImplementedError
+
+    def to_state(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
+        raise NotImplementedError
+
+    @classmethod
+    def from_state(cls, arrays: Dict[str, np.ndarray],
+                   meta: Dict[str, object]) -> "DensitySynopsis":
+        raise NotImplementedError
+
+    @property
+    def nbytes(self) -> int:
+        """Byte footprint for the SynopsisCache's byte bound."""
+        return 0
+
+    def error_metadata(self) -> Dict[str, object]:
+        """Backend-specific accuracy facts (merged into observability
+        labels and checkpoint metadata)."""
+        return {"backend": self.backend, "degraded": bool(self.degraded)}

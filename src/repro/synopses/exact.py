@@ -1,0 +1,62 @@
+"""The reference `"exact"` density backend: eq. 6 via `kde_eval_H`.
+
+This is the O(n * m) direct evaluation every full-H query paid before the
+backend split.  It exists as a registered backend for three reasons: the
+protocol needs a ground-truth implementation to gate sublinear backends
+against (the engine's probe-point accuracy gate evaluates both), tests
+exercise the registry through it, and `kde_backend="exact"` stays an
+explicit, first-class choice rather than the absence of one.
+
+NOTE the engine's exact *query* path does not route through this class —
+`batch_query_qmc` keeps `kde_eval_H` inlined in its single jitted pass so
+exact answers stay bit-identical to the pre-backend engine (test-enforced).
+`ExactSynopsis.eval_batch` is the protocol-level evaluator (gates, tests,
+ad-hoc density reads).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kde import kde_eval_H
+
+from .base import DensitySynopsis, register
+
+
+@register("exact")
+class ExactSynopsis(DensitySynopsis):
+    """Wraps the retained sample + full bandwidth matrix; eval is eq. 6."""
+
+    def __init__(self, x, H):
+        self.x = x if x.ndim == 2 else x[:, None]
+        self.H = H
+        self.n_fitted = int(self.x.shape[0])
+
+    @classmethod
+    def fit(cls, sample, H, **kwargs) -> "ExactSynopsis":
+        return cls(jnp.asarray(sample), jnp.asarray(H))
+
+    def eval_batch(self, points):
+        return kde_eval_H(jnp.asarray(points), self.x, self.H)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.asarray(self.x).nbytes) + int(np.asarray(self.H).nbytes)
+
+    def to_state(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
+        return ({"x": np.asarray(self.x), "H": np.asarray(self.H)},
+                {"backend": "exact", "n_fitted": int(self.n_fitted),
+                 "degraded": bool(self.degraded)})
+
+    @classmethod
+    def from_state(cls, arrays: Dict[str, np.ndarray],
+                   meta: Dict[str, object]) -> "ExactSynopsis":
+        out = cls(jnp.asarray(arrays["x"]), jnp.asarray(arrays["H"]))
+        out.n_fitted = int(meta.get("n_fitted", out.n_fitted))
+        out.degraded = bool(meta.get("degraded", False))
+        return out
+
+    def error_metadata(self) -> Dict[str, object]:
+        return {"backend": "exact", "degraded": False, "exact": True}

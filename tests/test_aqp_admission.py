@@ -507,3 +507,60 @@ def test_store_stats_aggregate_backpressure_counters(rng):
     agg = store.stats()["admission"]
     assert agg["shed"] == 1 and agg["blocked"] == 0
     sess.close()
+
+
+# --- fit offload: slow first fits must not stall the flusher ------------------
+
+def test_fit_offload_requeues_and_resolves(rng):
+    """With fit_offload=True, a due bucket whose lscv_H synopsis is not
+    cached hands the O(n^2) fit to a worker thread: poll() flushes nothing
+    inline, the ticket counts as fit_requeued, and the worker re-flushes
+    the bucket (reason "fit") once the synopsis lands — resolving the
+    future to the same answer the synchronous engine gives."""
+    from repro.core.aqp_admission import FLUSH_FIT
+
+    store = _store(rng, n=256, capacity=256)
+    engine = store.engine()
+    sess = _manual_session(engine, max_delay=0.0, fit_offload=True)
+    q = AqpQuery("count", (Box(("a", "b"), (-1.0, -1.0), (1.0, 1.0)),),
+                 selector="lscv_H")
+    fut = sess.submit(q)
+    assert sess.poll() == 0                      # offloaded, not flushed
+    assert sess.fit_requeued == 1
+    r = fut.result(timeout=60)
+    want = engine.execute([q])[0]                # synopsis now cached
+    assert r.estimate == want.estimate and r.path == want.path
+    st = sess.stats()
+    assert st["flush_reasons"].get(FLUSH_FIT) == 1
+    assert st["fit_requeued"] == 1
+    # fit spans were recorded for the offloaded fit
+    assert store.metrics.sum_counter("aqp.admission.fit_requeued") == 1
+    # second ticket on the same key: synopsis cached -> the due bucket
+    # flushes inline (submit's opportunistic deadline pass), no new requeue
+    fut2 = sess.submit(AqpQuery(
+        "count", (Box(("a", "b"), (-2.0, -2.0), (0.0, 0.0)),),
+        selector="lscv_H"))
+    sess.poll()
+    assert fut2.done()
+    assert sess.fit_requeued == 1                # no new requeue
+    sess.close()
+    assert store.stats()["admission"]["fit_requeued"] == 1
+
+
+def test_fit_offload_disabled_by_default_and_fast_selectors_inline(rng):
+    """Without the opt-in, a due lscv_H bucket flushes inline (the old
+    behaviour); with it, fast selectors are never offloaded."""
+    store = _store(rng, n=256, capacity=256)
+    sess = _manual_session(store.engine(), max_delay=0.0)
+    fut = sess.submit(AqpQuery("count", (Range("a", -1.0, 1.0),),
+                               selector="lscv_H"))
+    sess.poll()
+    assert fut.done()                            # flushed inline, fit and all
+    assert sess.fit_requeued == 0
+    sess.close()
+    sess2 = _manual_session(store.engine(), max_delay=0.0, fit_offload=True)
+    fut2 = sess2.submit(AqpQuery("count", (Range("a", -1.0, 1.0),)))
+    sess2.poll()
+    assert fut2.done()                           # default selector: inline
+    assert sess2.fit_requeued == 0
+    sess2.close()

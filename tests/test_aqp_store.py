@@ -538,3 +538,116 @@ def test_subscribe_notifies_bumped_versions(rng):
     store.add_batch({"x": rng.normal(0, 1, 10).astype(np.float32)})
     assert len(seen) == 1                        # unsubscribed: no more calls
     unsubscribe()                                # idempotent
+
+
+# --- count-min code grids (non-integer lattices) ------------------------------
+
+def test_cm_off_grid_codes_disable_range_answers(rng):
+    """A count-min sketch fed codes off its declared lattice must refuse
+    range answers (None -> KDE fallback) instead of silently enumerating
+    integer codes and mis-weighting the SUM — the pre-fix behaviour."""
+    from repro.data.aqp_store import CountMinSketch
+
+    sk = CountMinSketch(width=512, depth=3, seed=0)     # default 1.0 grid
+    sk.add(np.array([0.5, 1.0, 1.5, 2.0], np.float32))
+    assert sk.off_grid
+    assert sk.range_terms(0.0, 2.0) is None
+    assert sk.range_err(0.0, 2.0) is None
+    assert sk.stats()["off_grid"] is True
+    # point estimates are grid-free and keep working
+    assert sk.estimate(0.5) >= 1
+    # on-grid streams never flip the flag
+    ok = CountMinSketch(width=512, depth=3, seed=0)
+    ok.add(np.arange(8, dtype=np.float32))
+    assert not ok.off_grid and ok.range_terms(0.0, 7.0) is not None
+
+
+def test_cm_declared_grid_weights_range_sums_correctly(rng):
+    """Declaring the actual lattice (grid_step=0.5) restores exact-path
+    range coverage with each code's count weighted by its fractional
+    value, not a rounded integer."""
+    from repro.data.aqp_store import CountMinSketch
+
+    sk = CountMinSketch(width=512, depth=3, seed=0, grid_step=0.5)
+    vals = np.repeat(np.array([0.5, 1.0, 1.5, 2.0], np.float32),
+                     [3, 5, 7, 2])
+    sk.add(rng.permutation(vals))
+    assert not sk.off_grid
+    cnt, sm = sk.range_terms(0.4, 1.6)          # {0.5, 1.0, 1.5}
+    assert cnt == 15
+    assert sm == pytest.approx(0.5 * 3 + 1.0 * 5 + 1.5 * 7)
+    # a bound sitting ON a grid point includes it
+    cnt_all, _sm_all = sk.range_terms(0.5, 2.0)
+    assert cnt_all == 17
+    # windows wider than max_enumerate still decline (unchanged contract)
+    tiny = CountMinSketch(width=64, depth=2, seed=1, grid_step=0.5,
+                          max_enumerate=4)
+    tiny.add(vals)
+    assert tiny.range_terms(0.0, 10.0) is None
+
+
+def test_cm_grid_merge_and_state_roundtrip(rng):
+    from repro.data.aqp_store import CountMinSketch
+
+    a = CountMinSketch(width=128, depth=3, seed=2, grid_step=0.5,
+                       grid_origin=0.25)
+    b = CountMinSketch(width=128, depth=3, seed=2, grid_step=0.5,
+                       grid_origin=0.25)
+    a.add(np.array([0.25, 0.75], np.float32))
+    b.add(np.array([1.25, 9.0], np.float32))    # 9.0 is off this lattice
+    assert not a.off_grid and b.off_grid
+    m = a.merge(b)
+    assert (m.grid_step, m.grid_origin) == (0.5, 0.25)
+    assert m.off_grid                           # poisoned side wins
+    with pytest.raises(ValueError, match="grid"):
+        a.merge(CountMinSketch(width=128, depth=3, seed=2))
+    back = CountMinSketch.from_state(*b.state())
+    assert (back.grid_step, back.grid_origin, back.off_grid) == \
+        (0.5, 0.25, True)
+    # pre-grid snapshots (no grid keys) load on the default integer lattice
+    arrays, meta = CountMinSketch(width=64, depth=2, seed=0).state()
+    for k in ("grid_step", "grid_origin", "off_grid"):
+        meta.pop(k)
+    legacy = CountMinSketch.from_state(arrays, meta)
+    assert (legacy.grid_step, legacy.grid_origin, legacy.off_grid) == \
+        (1.0, 0.0, False)
+
+
+def test_cm_grid_via_store_eq_query(rng):
+    """End to end: Eq on a half-step code column answers on the
+    bounded-error sketch path when its grid is declared, and falls back to
+    a density path (not exact:cm) when the stream goes off-grid — the
+    pre-fix behaviour silently enumerated integer codes and answered 0."""
+    from repro.core import AqpQuery, Eq
+
+    store = TelemetryStore(capacity=512, seed=0)
+    store.track_categorical("code", kind="cm", width=512, depth=3,
+                            grid_step=0.5)
+    with pytest.raises(ValueError, match="count-min"):
+        store.track_categorical("other", kind="exact", grid_step=0.5)
+    codes = (rng.integers(1, 9, 4000) * 0.5).astype(np.float32)
+    store.add_batch({"code": codes})
+    # Eq's halfwidth matches the code spacing: +-0.25 captures one code
+    (r,) = store.query([AqpQuery("count", (Eq("code", 1.5,
+                                              halfwidth=0.25),))],
+                       selector="silverman")
+    assert r.path == "exact:cm"
+    truth = int((codes == np.float32(1.5)).sum())
+    assert truth <= r.estimate <= truth + store.categoricals[
+        "code"].err_bound()
+    (rs,) = store.query([AqpQuery("sum", (Eq("code", 1.5,
+                                             halfwidth=0.25),),
+                                  target="code")], selector="silverman")
+    assert rs.estimate == pytest.approx(1.5 * r.estimate)
+    st = store.stats()["categoricals"]["code"]
+    assert st["grid_step"] == 0.5 and st["off_grid"] is False
+    # off-grid stream: sketch declines, the engine answers on a KDE path
+    store2 = TelemetryStore(capacity=512, seed=0)
+    store2.track_categorical("code", kind="cm", width=512, depth=3)
+    store2.add_batch({"code": codes})            # halves on an integer grid
+    assert store2.categoricals["code"].off_grid
+    assert store2.stats()["categoricals"]["code"]["off_grid"] is True
+    (r2,) = store2.query([AqpQuery("count", (Eq("code", 1.5,
+                                                halfwidth=0.25),))],
+                         selector="silverman")
+    assert r2.path != "exact:cm"

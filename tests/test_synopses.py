@@ -1,0 +1,307 @@
+"""Pluggable density-synopsis backends (repro.synopses) and their engine
+integration: registry protocol, RFF convergence to the exact full-H KDE,
+the Pallas feature-map kernel, the accuracy gate's exact fallback, checkpoint
+round-trips, and the exact path's bit-identity guarantee."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.kde import kde_eval_H
+
+
+def _joint_data(rng, n):
+    loss = rng.gamma(2.0, 1.5, n)
+    lat = 10 + 3 * loss + rng.normal(0, 2, n)
+    return np.stack([loss, lat], 1).astype(np.float32)
+
+
+def _fullh_store(rng, n, h_scale, capacity=None):
+    """Store with one joint reservoir plus a hand-built full-H synopsis in
+    the cache (selector label "lscv_H", no O(n^2) fit)."""
+    from repro.core import KDESynopsis
+    from repro.data import TelemetryStore
+
+    x = _joint_data(rng, n)
+    store = TelemetryStore(capacity=capacity or n, seed=0)
+    store.track_joint(("loss", "latency_ms"))
+    store.add_batch({"loss": x[:, 0], "latency_ms": x[:, 1]})
+    res = store.joints[("loss", "latency_ms")]
+    xs = res.sample()
+    H = (np.cov(xs.T) * h_scale).astype(np.float32)
+    syn = KDESynopsis(x=jnp.asarray(xs), H=jnp.asarray(H),
+                      n_source=res.n_seen, selector="lscv_H")
+    store.cache.put(("loss", "latency_ms"), "lscv_H", res.version, syn)
+    return store, xs, H
+
+
+def _box_queries(x, k=6, seed=3):
+    from repro.core.aqp_query import AqpQuery, Box
+
+    rng = np.random.default_rng(seed)
+    mu, sd = x.mean(axis=0), x.std(axis=0)
+    cols = ("loss", "latency_ms")
+    out = []
+    for i in range(k):
+        lo = mu + sd * rng.uniform(-1.5, 0.0, 2)
+        hi = lo + sd * rng.uniform(1.0, 2.5, 2)
+        out.append(AqpQuery(["count", "sum", "avg"][i % 3],
+                            (Box(cols, tuple(lo), tuple(hi)),),
+                            target=None if i % 3 == 0 else cols[i % 2]))
+    return out
+
+
+# --- registry / protocol ---------------------------------------------------
+
+def test_registry_exposes_builtin_backends():
+    from repro import synopses
+
+    assert {"exact", "rff"} <= set(synopses.available())
+    assert synopses.get_backend("rff") is synopses.RFFSynopsis
+    assert synopses.get_backend("exact") is synopses.ExactSynopsis
+    with pytest.raises(KeyError):
+        synopses.get_backend("nope")
+
+
+def test_register_refuses_name_collision():
+    from repro import synopses
+
+    with pytest.raises(ValueError):
+        @synopses.register("rff")
+        class Impostor(synopses.DensitySynopsis):
+            pass
+    # re-registering the SAME class is an idempotent no-op (module reloads)
+    synopses.register("rff")(synopses.RFFSynopsis)
+    assert synopses.get_backend("rff") is synopses.RFFSynopsis
+
+
+def test_protocol_base_raises_and_metadata(rng):
+    from repro import synopses
+
+    base = synopses.DensitySynopsis()
+    with pytest.raises(NotImplementedError):
+        base.eval_batch(np.zeros((3, 2)))
+    with pytest.raises(NotImplementedError):
+        base.to_state()
+    assert base.nbytes == 0
+    md = base.error_metadata()
+    assert md["backend"] == "?" and md["degraded"] is False
+
+
+def test_exact_backend_wraps_kde_eval_H(rng):
+    from repro.synopses import ExactSynopsis
+
+    x = _joint_data(rng, 500)
+    H = np.cov(x.T).astype(np.float32) * 0.3
+    syn = ExactSynopsis.fit(x, H)
+    pts = x[:40]
+    got = np.asarray(syn.eval_batch(pts))
+    want = np.asarray(kde_eval_H(jnp.asarray(pts), jnp.asarray(x),
+                                 jnp.asarray(H)))
+    assert np.array_equal(got, want)
+    assert syn.error_metadata()["exact"] is True
+    assert syn.n_fitted == 500
+
+
+# --- RFF backend -----------------------------------------------------------
+
+@pytest.mark.parametrize("m,D,d", [(1, 16, 1), (7, 130, 3), (300, 64, 2)])
+def test_rff_pallas_kernel_matches_oracle(rng, m, D, d):
+    from repro.kernels import ops as kops
+    from repro.kernels import ref
+
+    p = rng.normal(0, 1, (m, d)).astype(np.float32)
+    w = rng.normal(0, 1, (D, d)).astype(np.float32)
+    b = rng.uniform(0, 2 * np.pi, D).astype(np.float32)
+    z = rng.normal(0, 1, D).astype(np.float32)
+    got = np.asarray(kops.rff_density(jnp.asarray(p), jnp.asarray(w),
+                                      jnp.asarray(b), jnp.asarray(z)))
+    want = np.asarray(ref.rff_density(jnp.asarray(p), jnp.asarray(w),
+                                      jnp.asarray(b), jnp.asarray(z)))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,d,h_scale", [(1500, 1, 1.0), (1500, 2, 0.5),
+                                         (2500, 3, 1.0)])
+def test_rff_converges_to_kde_with_features(rng, n, d, h_scale):
+    """Pointwise density error shrinks as D grows; at D=2048 the fit sits
+    inside the engine's gate tolerance for these bandwidths (~1/sqrt(D))."""
+    from repro.synopses import RFFSynopsis
+
+    x = rng.normal(0, 1, (n, d)).astype(np.float32)
+    x[:, 0] = rng.gamma(2.0, 1.0, n)          # non-Gaussian marginal
+    H = (np.atleast_2d(np.cov(x.T)) * h_scale).astype(np.float32)
+    probes = x[:64]
+    f_exact = np.asarray(kde_eval_H(jnp.asarray(probes), jnp.asarray(x),
+                                    jnp.asarray(H)), np.float64)
+    denom = float(np.mean(f_exact))
+
+    def rel(D):
+        syn = RFFSynopsis.fit(x, H, n_features=D, seed=5)
+        f = np.asarray(syn.eval_batch(probes), np.float64)
+        return float(np.mean(np.abs(f - f_exact)) / denom)
+
+    r_small, r_big = rel(128), rel(2048)
+    assert r_big < 0.05, f"D=2048 rel err {r_big:.3f} exceeds gate headroom"
+    # 16x the features should cut the error ~4x; allow generous slack for
+    # the randomness of any single frequency draw
+    assert r_big < 0.6 * r_small, (r_small, r_big)
+
+
+def test_rff_fit_is_seed_deterministic(rng):
+    from repro.synopses import RFFSynopsis
+
+    x = _joint_data(rng, 800)
+    H = np.cov(x.T).astype(np.float32) * 0.4
+    a = RFFSynopsis.fit(x, H, n_features=256, seed=9)
+    b = RFFSynopsis.fit(x, H, n_features=256, seed=9)
+    c = RFFSynopsis.fit(x, H, n_features=256, seed=10)
+    assert np.array_equal(np.asarray(a.w), np.asarray(b.w))
+    assert np.array_equal(np.asarray(a.z), np.asarray(b.z))
+    assert not np.array_equal(np.asarray(a.w), np.asarray(c.w))
+
+
+def test_kde_chunk_env_override(rng, monkeypatch):
+    """REPRO_KDE_CHUNK retunes kde_eval_H's eval chunking per call."""
+    x = _joint_data(rng, 600)
+    H = np.cov(x.T).astype(np.float32) * 0.4
+    pts = jnp.asarray(x[:100])
+    xj, Hj = jnp.asarray(x), jnp.asarray(H)
+    monkeypatch.setenv("REPRO_KDE_CHUNK", "64")
+    via_env = np.asarray(kde_eval_H(pts, xj, Hj))
+    explicit = np.asarray(kde_eval_H(pts, xj, Hj, chunk=64))
+    assert np.array_equal(via_env, explicit)
+    monkeypatch.delenv("REPRO_KDE_CHUNK")
+    default = np.asarray(kde_eval_H(pts, xj, Hj))
+    np.testing.assert_allclose(via_env, default, rtol=1e-6)
+
+
+# --- engine integration ----------------------------------------------------
+
+def test_engine_rff_backend_within_ci_of_exact(rng):
+    store, x, _H = _fullh_store(rng, 4000, h_scale=0.4)
+    engine = store.engine(selector="lscv_H")
+    queries = _box_queries(x)
+    r_exact = engine.execute(queries, kde_backend="exact")
+    r_rff = engine.execute(queries, kde_backend="rff")
+    assert {r.path for r in r_exact} == {"qmc"}
+    assert {r.path for r in r_rff} == {"qmc:rff"}
+    scale_ref = max(abs(r.estimate) for r in r_exact)
+    for re_, rr in zip(r_exact, r_rff):
+        assert rr.ci_lo <= rr.estimate <= rr.ci_hi
+        half = max((rr.ci_hi - rr.ci_lo) / 2.0, 0.02 * scale_ref)
+        assert abs(rr.estimate - re_.estimate) <= 4.0 * half
+    # per-backend hit counters moved with the traffic
+    assert store.metrics.sum_counter("aqp.synopsis.hits", backend="rff") > 0
+    assert store.metrics.sum_counter("aqp.synopsis.hits", backend="exact") > 0
+
+
+def test_engine_exact_backend_bit_identical_to_default(rng):
+    """backend="exact" must reproduce the legacy (pre-backend) answers bit
+    for bit: same jitted pass, same reductions, no RFF anywhere near it."""
+    store, x, _H = _fullh_store(rng, 3000, h_scale=0.4)
+    engine = store.engine(selector="lscv_H")
+    queries = _box_queries(x)
+    base = np.asarray([r.estimate
+                       for r in engine.execute(queries)])          # auto < crossover
+    again = np.asarray([r.estimate
+                        for r in engine.execute(queries, kde_backend="exact")])
+    third = np.asarray([r.estimate
+                        for r in engine.execute(queries, kde_backend="exact")])
+    assert np.array_equal(base, again)
+    assert np.array_equal(again, third)
+
+
+def test_auto_crossover_picks_backend_by_size(rng, monkeypatch):
+    from repro.core import aqp_query
+
+    store, x, _H = _fullh_store(rng, 2000, h_scale=0.4)
+    engine = store.engine(selector="lscv_H")
+    queries = _box_queries(x, k=3)
+    monkeypatch.setattr(aqp_query, "KDE_CROSSOVER", 10 ** 9)
+    assert {r.path for r in engine.execute(queries)} == {"qmc"}
+    monkeypatch.setattr(aqp_query, "KDE_CROSSOVER", 100)
+    assert {r.path for r in engine.execute(queries)} == {"qmc:rff"}
+
+
+def test_accuracy_gate_falls_back_and_counts(rng):
+    """A bandwidth far too narrow for the default feature budget must trip
+    the probe gate: answers stay on the exact path, the fallback counter
+    moves, and the degraded fit is cached (no refit churn)."""
+    store, x, _H = _fullh_store(rng, 3000, h_scale=0.002)
+    engine = store.engine(selector="lscv_H")
+    queries = _box_queries(x, k=3)
+    r1 = engine.execute(queries, kde_backend="rff")
+    assert {r.path for r in r1} == {"qmc"}          # exact answered
+    fb1 = store.metrics.sum_counter("aqp.synopsis.fallback", backend="rff")
+    assert fb1 >= 1
+    fits1 = sum(h.count for _lbl, h in
+                store.metrics.collect_histograms("aqp.synopsis.fit_us"))
+    r2 = engine.execute(queries, kde_backend="rff")
+    assert {r.path for r in r2} == {"qmc"}
+    fb2 = store.metrics.sum_counter("aqp.synopsis.fallback", backend="rff")
+    assert fb2 > fb1                                # degraded hit counted
+    fits2 = sum(h.count for _lbl, h in
+                store.metrics.collect_histograms("aqp.synopsis.fit_us"))
+    assert fits2 == fits1                           # cached, not refitted
+
+
+def test_rff_query_override_beats_engine_default(rng):
+    store, x, _H = _fullh_store(rng, 2000, h_scale=0.4)
+    engine = store.engine(selector="lscv_H")
+    q = _box_queries(x, k=1)[0]
+    from dataclasses import replace
+    forced = replace(q, kde_backend="rff")
+    assert engine.execute([q], kde_backend="exact")[0].path == "qmc"
+    assert engine.execute([forced], kde_backend="exact")[0].path == "qmc:rff"
+    with pytest.raises(ValueError):
+        replace(q, kde_backend="warp")
+    with pytest.raises(ValueError):
+        store.engine(selector="lscv_H", kde_backend="warp")
+
+
+# --- durability ------------------------------------------------------------
+
+def test_rff_checkpoint_roundtrip_bit_identical(rng, tmp_path):
+    """A fitted RFF synopsis persists through the store checkpoint and the
+    restored copy reproduces densities — and engine answers — bit for bit."""
+    from repro.data import TelemetryStore
+
+    store, x, _H = _fullh_store(rng, 2500, h_scale=0.4)
+    engine = store.engine(selector="lscv_H")
+    queries = _box_queries(x, k=4)
+    before = np.asarray([r.estimate
+                         for r in engine.execute(queries, kde_backend="rff")])
+    ckey = next(k for k, _v, s in store.cache.entries()
+                if getattr(s, "backend", "") == "rff")
+    rff = store.cache.peek(ckey[0], ckey[1],
+                           store.joints[("loss", "latency_ms")].version)
+    assert rff is not None
+
+    store.save(str(tmp_path / "ck"))
+    restored = TelemetryStore.load(str(tmp_path / "ck"))
+    rff2 = restored.cache.peek(
+        ckey[0], ckey[1], restored.joints[("loss", "latency_ms")].version)
+    assert rff2 is not None and rff2.backend == "rff"
+    for attr in ("w", "b", "z"):
+        assert np.array_equal(np.asarray(getattr(rff, attr)),
+                              np.asarray(getattr(rff2, attr)))
+    assert rff2.norm == rff.norm and rff2.seed == rff.seed
+    probes = jnp.asarray(x[:50])
+    assert np.array_equal(np.asarray(rff.eval_batch(probes)),
+                          np.asarray(rff2.eval_batch(probes)))
+    engine2 = restored.engine(selector="lscv_H")
+    after = np.asarray([
+        r.estimate for r in engine2.execute(queries, kde_backend="rff")])
+    assert np.array_equal(before, after)
+
+
+def test_cache_sizes_rff_entries_by_own_nbytes(rng):
+    from repro.synopses import RFFSynopsis
+    from repro.data.aqp_store import _entry_nbytes
+
+    x = _joint_data(rng, 400)
+    H = np.cov(x.T).astype(np.float32) * 0.4
+    syn = RFFSynopsis.fit(x, H, n_features=128, seed=0)
+    # (W: 128x2 + b: 128 + z: 128) float32
+    assert _entry_nbytes(syn) == syn.nbytes == 4 * (128 * 2 + 128 + 128)

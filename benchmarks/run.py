@@ -23,7 +23,8 @@ import sys
 import time
 
 SUITES = ("paper_validation", "plugin", "lscv_h", "lscv_H", "table3",
-          "kernels", "aqp_batch", "aqp_boxes", "aqp_engine", "aqp_rff",
+          "kernels", "aqp_batch", "aqp_boxes", "aqp_grouped", "aqp_engine",
+          "aqp_rff",
           "aqp_serve", "aqp_restore", "aqp_progressive", "roofline",
           "serving")
 

@@ -1,0 +1,139 @@
+#!/usr/bin/env python
+"""Measurement-driven tile sweep CLI (kernels/autotune.py front end).
+
+    PYTHONPATH=src python scripts/autotune.py --shape aqp_grouped_sums:n=16384,d=6,G=64
+    PYTHONPATH=src python scripts/autotune.py --metrics /tmp/aqp-metrics.json
+    PYTHONPATH=src REPRO_TUNING_CACHE=tiles.json python scripts/autotune.py ...
+
+Sweeps candidate tile configurations for the shapes the workload actually
+ran — from a `serve --metrics-out` snapshot's `kernel.wall_us` labels
+(--metrics), from the live process registry (`tuning.measured()`, the
+default when any tunable kernel already ran in-process), or from explicit
+--shape specs — and records the winners in the tile cache.  With --cache
+(or REPRO_TUNING_CACHE already set) the winners persist to the tile-cache
+JSON that `scripts/validate_metrics.py --tuning` schema-checks and a fresh
+process loads with zero re-sweeps.
+
+--assert-no-regress exits non-zero if any swept winner timed slower than
+the env/default configuration it was measured against (the sweep times the
+default as candidate #0, so this only trips on measurement pathology —
+CI runs it as a tripwire).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+SHAPE_LABELS = ("n", "d", "G", "m")
+
+
+def parse_shape(spec: str):
+    """'kernel:n=16384,d=6,G=64' -> (kernel, {'n': 16384, 'd': 6, 'G': 64})"""
+    kernel, _, rest = spec.partition(":")
+    if not kernel or not rest:
+        raise ValueError(f"malformed --shape {spec!r}; expected "
+                         f"kernel:n=...,d=...[,G=...,m=...]")
+    shape = {}
+    for part in rest.split(","):
+        k, _, v = part.partition("=")
+        if k not in SHAPE_LABELS:
+            raise ValueError(f"--shape {spec!r}: unknown axis {k!r} "
+                             f"(have {SHAPE_LABELS})")
+        shape[k] = int(v)
+    return kernel, shape
+
+
+def shapes_from_rows(rows, known):
+    """(kernel, shape) specs from measured kernel.wall_us label rows,
+    deduped by cache key; sweep-generated rows are excluded (they describe
+    the sweep itself, not the workload)."""
+    from repro.kernels import autotune
+
+    out, seen = [], set()
+    for row in rows:
+        kernel = row.get("kernel")
+        if kernel not in known or row.get("autotune") == "sweep":
+            continue
+        shape = {k: int(row[k]) for k in SHAPE_LABELS if k in row}
+        if not shape:
+            continue
+        key = autotune.shape_key(kernel, shape)
+        if key not in seen:
+            seen.add(key)
+            out.append((kernel, shape))
+    return out
+
+
+def shapes_from_snapshot(path: str, known):
+    with open(path, encoding="utf-8") as f:
+        doc = json.load(f)
+    rows = [e.get("labels", {})
+            for e in doc.get("histograms", {}).get("kernel.wall_us", [])]
+    return shapes_from_rows(rows, known)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--shape", action="append", default=[],
+                    metavar="KERNEL:n=..,d=..",
+                    help="explicit sweep spec (repeatable); e.g. "
+                         "aqp_grouped_sums:n=16384,d=6,G=64")
+    ap.add_argument("--metrics", metavar="PATH",
+                    help="obs.export_json snapshot: sweep every shape its "
+                         "kernel.wall_us entries measured")
+    ap.add_argument("--cache", metavar="PATH",
+                    help="persist winners here (sets REPRO_TUNING_CACHE)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--quick", action="store_true",
+                    help="per-axis extremes only (CI smoke)")
+    ap.add_argument("--assert-no-regress", action="store_true",
+                    help="exit non-zero if any winner timed slower than the "
+                         "default tiles")
+    args = ap.parse_args()
+    if args.cache:
+        os.environ["REPRO_TUNING_CACHE"] = args.cache
+
+    from repro.kernels import autotune
+    from repro.kernels.tuning import measured
+
+    targets = [parse_shape(s) for s in args.shape]
+    if args.metrics:
+        targets += shapes_from_snapshot(args.metrics, autotune.SWEEPS)
+    if not args.shape and not args.metrics:
+        targets += shapes_from_rows(measured(), autotune.SWEEPS)
+    if not targets:
+        print("nothing to sweep: no --shape given and no measured "
+              "kernel.wall_us shapes found", file=sys.stderr)
+        return 2
+
+    regressed = []
+    for kernel, shape in targets:
+        entry = autotune.sweep(kernel, shape, repeats=args.repeats,
+                               quick=args.quick)
+        gain = entry["default_us"] / entry["us"] if entry["us"] else 1.0
+        print(f"{kernel} {shape}: {entry['tiles']} "
+              f"{entry['us']:.1f}us ({gain:.2f}x over default "
+              f"{entry['default_tiles']} {entry['default_us']:.1f}us, "
+              f"{len(entry['swept'])} candidates)")
+        if entry["us"] > entry["default_us"]:
+            regressed.append((kernel, shape))
+
+    path = os.environ.get("REPRO_TUNING_CACHE")
+    if path:
+        print(f"persisted {len(targets)} entr"
+              f"{'y' if len(targets) == 1 else 'ies'} -> {path}")
+    if args.assert_no_regress and regressed:
+        for kernel, shape in regressed:
+            print(f"FAIL: {kernel} {shape} tuned tiles slower than default",
+                  file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,13 +3,16 @@
 
     python scripts/validate_metrics.py /tmp/aqp-metrics.json
     python scripts/validate_metrics.py --bench BENCH_aqp.json
+    python scripts/validate_metrics.py --tuning /tmp/tiles.json
 
 Default mode validates a `serve --mode aqp --metrics-out` snapshot
 (`obs.export_json` format): the required instruments must be present with
 sane values — queue depth gauge, per-path latency histograms, synopsis
 cache hit/miss counters, and flush-reason counters.  `--bench` validates a
-`benchmarks.run --json` report instead.  Exits non-zero with one line per
-violation.
+`benchmarks.run --json` report instead; `--tuning` a persisted tile cache
+(`kernels/autotune.py` REPRO_TUNING_CACHE format), enforcing on top of the
+schema that every swept winner is no slower than the env/default tiles it
+was measured against.  Exits non-zero with one line per violation.
 """
 from __future__ import annotations
 
@@ -120,20 +123,71 @@ def validate_bench(doc: dict) -> List[str]:
     return errs
 
 
+def validate_tuning(doc: dict) -> List[str]:
+    errs: List[str] = []
+    if doc.get("version") != 1:
+        errs.append(f"unsupported tile-cache version {doc.get('version')!r}")
+        return errs
+    if "ts" not in doc:
+        errs.append("missing top-level key 'ts'")
+    entries = doc.get("entries")
+    if not isinstance(entries, list) or not entries:
+        errs.append("empty or missing entries list")
+        return errs
+    for e in entries:
+        name = e.get("kernel", "<unnamed>")
+        for key in ("kernel", "shape", "key", "tiles", "us",
+                    "default_tiles", "default_us", "repeats", "swept"):
+            if key not in e:
+                errs.append(f"{name}: entry missing {key!r}")
+        for field in ("shape", "tiles", "default_tiles"):
+            v = e.get(field)
+            if isinstance(v, dict):
+                bad = {k: x for k, x in v.items()
+                       if not isinstance(x, int) or x <= 0}
+                if bad:
+                    errs.append(f"{name}: non-positive {field} values {bad}")
+        if e.get("us", -1) <= 0:
+            errs.append(f"{name}: non-positive winning time {e.get('us')}")
+        # the invariant the sweep guarantees by construction (the default
+        # config is always candidate #0): tuned tiles never regress
+        if "us" in e and "default_us" in e and e["us"] > e["default_us"]:
+            errs.append(f"{name}: tuned tiles SLOWER than defaults "
+                        f"({e['us']:.1f}us > {e['default_us']:.1f}us)")
+        swept = e.get("swept")
+        if isinstance(swept, list):
+            if not any(s.get("tiles") == e.get("tiles") for s in swept):
+                errs.append(f"{name}: winning tiles absent from swept list")
+            if swept and swept[0].get("tiles") != e.get("default_tiles"):
+                errs.append(f"{name}: candidate #0 is not the default config")
+    return errs
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("path", help="JSON artifact to validate")
     ap.add_argument("--bench", action="store_true",
                     help="validate a benchmarks.run --json report instead "
                          "of a metrics snapshot")
+    ap.add_argument("--tuning", action="store_true",
+                    help="validate a kernels/autotune.py tile cache instead "
+                         "of a metrics snapshot")
     args = ap.parse_args()
     with open(args.path, encoding="utf-8") as f:
         doc = json.load(f)
-    errs = validate_bench(doc) if args.bench else validate_metrics(doc)
+    if args.bench and args.tuning:
+        print("FAIL: --bench and --tuning are mutually exclusive",
+              file=sys.stderr)
+        return 1
+    if args.bench:
+        errs, kind = validate_bench(doc), "bench report"
+    elif args.tuning:
+        errs, kind = validate_tuning(doc), "tile cache"
+    else:
+        errs, kind = validate_metrics(doc), "metrics snapshot"
     for e in errs:
         print(f"FAIL {args.path}: {e}", file=sys.stderr)
     if not errs:
-        kind = "bench report" if args.bench else "metrics snapshot"
         print(f"OK {args.path}: valid {kind}")
     return 1 if errs else 0
 

@@ -273,14 +273,23 @@ def _grouped_box_terms(x: jax.Array, h_diag: jax.Array, lo: jax.Array,
 
 def batch_query_box_grouped(x: jax.Array, h_diag: jax.Array, lo, hi,
                             glo, ghi, g_axis: int, tgt: int, op: int,
-                            scale) -> jax.Array:
+                            scale, backend: str = "jnp") -> jax.Array:
     """Answer one GROUP BY family — a shared box crossed with G per-category
     windows on axis `g_axis` — in a single factored pass (one answer per
-    category, the family shares one aggregate op)."""
-    cnt_raw, sum_raw = _grouped_box_terms(
-        x, h_diag, jnp.asarray(lo, jnp.float32), jnp.asarray(hi, jnp.float32),
-        jnp.asarray(glo, jnp.float32), jnp.asarray(ghi, jnp.float32),
-        jnp.int32(tgt), int(g_axis), bool(tgt == g_axis))
+    category, the family shares one aggregate op).  backend="pallas" routes
+    the factored reduction through the kernels/aqp_grouped.py tile kernel."""
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        cnt_raw, sum_raw = kops.aqp_grouped_sums(
+            x, h_diag, jnp.asarray(lo, jnp.float32),
+            jnp.asarray(hi, jnp.float32), jnp.asarray(glo, jnp.float32),
+            jnp.asarray(ghi, jnp.float32), int(g_axis), int(tgt))
+    else:
+        cnt_raw, sum_raw = _grouped_box_terms(
+            x, h_diag, jnp.asarray(lo, jnp.float32),
+            jnp.asarray(hi, jnp.float32), jnp.asarray(glo, jnp.float32),
+            jnp.asarray(ghi, jnp.float32), jnp.int32(tgt), int(g_axis),
+            bool(tgt == g_axis))
     counts = scale * cnt_raw
     sums = scale * sum_raw
     if op == OP_COUNT:
@@ -374,11 +383,14 @@ def _qmc_plan(x_host: np.ndarray, H: np.ndarray, lo: np.ndarray,
 
 def batch_query_qmc(x: jax.Array, H: jax.Array, lo: np.ndarray, hi: np.ndarray,
                     tgt: np.ndarray, ops: np.ndarray, scale: float,
-                    n_qmc: int = 4096) -> jax.Array:
+                    n_qmc: int = 4096, backend: str = "jnp") -> jax.Array:
     """Answer a mixed box batch against one full-H synopsis in one KDE pass.
 
     lo/hi: (q, d) host arrays; the bounding box and node budget are planned
     on the host by `_qmc_plan` (support clipping, shared-node budget).
+    backend="pallas" fuses the (nodes x sample) density evaluation with the
+    (boxes x nodes) indicator reduction through kernels/qmc_reduce.py — the
+    shared f vector is never materialized.
     """
     d = x.shape[1]
     plan = _qmc_plan(np.asarray(x, np.float64), np.asarray(H), lo, hi, n_qmc)
@@ -386,10 +398,28 @@ def batch_query_qmc(x: jax.Array, H: jax.Array, lo: np.ndarray, hi: np.ndarray,
         return jnp.zeros((np.asarray(lo).shape[0],), jnp.float32)
     glo, ghi, clo, chi, n_nodes = plan
 
-    cnt_raw, sum_raw = _qmc_shared_terms(
-        x, H, jnp.asarray(glo, jnp.float32), jnp.asarray(ghi, jnp.float32),
-        jnp.asarray(clo, jnp.float32), jnp.asarray(chi, jnp.float32),
-        jnp.asarray(tgt, jnp.int32), _halton_unit(n_nodes, d))
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        glo_d = jnp.asarray(glo, jnp.float32)
+        ghi_d = jnp.asarray(ghi, jnp.float32)
+        nodes = glo_d[None, :] + _halton_unit(n_nodes, d) * (ghi_d - glo_d)[None, :]
+        Hf = jnp.asarray(H, jnp.float32)
+        h_inv = jnp.linalg.inv(Hf)          # same numerics as kde.kde_eval_H
+        log_norm = (-0.5 * d * jnp.log(2.0 * jnp.pi)
+                    - 0.5 * jnp.linalg.slogdet(Hf)[1])
+        cnt_sums, sum_sums = kops.qmc_box_reduce(
+            nodes, x, h_inv, log_norm, jnp.asarray(clo, jnp.float32),
+            jnp.asarray(chi, jnp.float32), jnp.asarray(tgt, jnp.int32))
+        # n vol(G) mean_m(f 1_q) with f = (1/n) sum_i k(...): the n cancels,
+        # leaving vol(G)/m times the kernel's raw double sums.
+        factor = float(np.prod(ghi - glo)) / n_nodes
+        cnt_raw = factor * cnt_sums
+        sum_raw = factor * sum_sums
+    else:
+        cnt_raw, sum_raw = _qmc_shared_terms(
+            x, H, jnp.asarray(glo, jnp.float32), jnp.asarray(ghi, jnp.float32),
+            jnp.asarray(clo, jnp.float32), jnp.asarray(chi, jnp.float32),
+            jnp.asarray(tgt, jnp.int32), _halton_unit(n_nodes, d))
     counts = scale * cnt_raw
     sums = scale * sum_raw
     return jnp.select([np.asarray(ops) == OP_COUNT, np.asarray(ops) == OP_SUM],

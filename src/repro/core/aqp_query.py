@@ -791,7 +791,7 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
 
     families: List[List[_Compiled]] = []
     rest: List[_Compiled] = []
-    if plan.kind == "box" and backend == "jnp":
+    if plan.kind == "box":
         by_query: Dict[int, List[_Compiled]] = {}
         for c in entries:
             if (c.group is not None and c.group_axis is not None):
@@ -845,16 +845,16 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
             tgt = _pad_rows(np.asarray([c.tgt for c in rest], np.int32), m)
             if metrics is not None:
                 metrics.counter("aqp.synopsis.hits", backend="exact").inc(n)
-            with obs.span("engine.kernel", path="qmc", n=n, tier=tier):
+            path = "qmc" if backend == "jnp" else f"qmc:{backend}"
+            with obs.span("engine.kernel", path=path, n=n, tier=tier):
                 ans = batch_query_qmc(x, syn.H, lo, hi, tgt, ops_np, scale,
-                                      n_qmc=n_qmc)
+                                      n_qmc=n_qmc, backend=backend)
                 obs.fence(ans)
-            with obs.span("engine.ci", path="qmc", n=n):
+            with obs.span("engine.ci", path=path, n=n):
                 se, dof = qmc_subsample_se(x, syn.H, lo, hi, tgt, ops_np,
                                            syn.n_source, n_qmc)
                 obs.fence(se)
             q_ci = t_ppf(p, dof)
-            path = "qmc"
         elif plan.kind == "range1d":
             a = _pad_rows(np.asarray([c.lo[0] for c in rest], np.float32), m)
             b = _pad_rows(np.asarray([c.hi[0] for c in rest], np.float32), m)
@@ -933,6 +933,8 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
             out[id(c)] = (est, "qmc:rff",
                           est - q_ci * s, est + q_ci * s, n_eff)
 
+    fam_path = ("box:grouped" if backend == "jnp"
+                else f"box:grouped:{backend}")
     for fam in families:
         g_axis = fam[0].group_axis
         gm = _pad_count(len(fam))
@@ -941,11 +943,12 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
                         gm)
         ghi = _pad_rows(np.asarray([c.hi[g_axis] for c in fam], np.float32),
                         gm)
-        with obs.span("engine.kernel", path="box:grouped", n=len(fam),
+        with obs.span("engine.kernel", path=fam_path, n=len(fam),
                       tier=tier):
             ans = batch_query_box_grouped(
                 x, syn.h_diag(), fam[0].lo, fam[0].hi, glo, ghi,
-                g_axis=g_axis, tgt=fam[0].tgt, op=fam[0].op, scale=scale)
+                g_axis=g_axis, tgt=fam[0].tgt, op=fam[0].op, scale=scale,
+                backend=backend)
             obs.fence(ans)
         ans_np = np.asarray(ans, np.float64)[:len(fam)]
         # family moments run on the per-entry FULL boxes (each entry's box
@@ -954,20 +957,20 @@ def _run_group(key, plan: _GroupPlan, entries: List[_Compiled],
         fhi = _pad_rows(np.asarray([c.hi for c in fam], np.float32), gm)
         ftgt = _pad_rows(np.asarray([c.tgt for c in fam], np.int32), gm)
         fops = np.full(gm, fam[0].op, np.int32)
-        with obs.span("engine.ci", path="box:grouped", n=len(fam)):
+        with obs.span("engine.ci", path=fam_path, n=len(fam)):
             mom = moments_box(x, syn.h_diag(), jnp.asarray(flo),
                               jnp.asarray(fhi), jnp.asarray(ftgt))
             se = se_from_moments(fops, mom, plan.scale, n_eff)
             obs.fence(se)
         se_np = np.asarray(se, np.float64)[:len(fam)]
         if enabled and metrics is not None:
-            metrics.histogram("aqp.query.latency_us", path="box:grouped",
+            metrics.histogram("aqp.query.latency_us", path=fam_path,
                               tier=tier).observe(
                 (time.perf_counter() - t_grp) * 1e6)
         q_ci = norm_ppf(p)
         for c, est, s in zip(fam, ans_np, se_np):
             est = float(est)
-            out[id(c)] = (est, "box:grouped",
+            out[id(c)] = (est, fam_path,
                           est - q_ci * s, est + q_ci * s, n_eff)
 
     return [out[id(c)] for c in entries]

@@ -503,6 +503,9 @@ class CategoricalSketch:
         return out
 
 
+_CM_MAX = (1 << 32) - 1      # uint32 saturation cap for CountMinSketch cells
+
+
 class CountMinSketch:
     """Bounded-error per-code counts for high-cardinality dictionary columns.
 
@@ -531,6 +534,17 @@ class CountMinSketch:
     worst-case bound either way).  Merging adds tables cell-wise as before —
     the per-sketch upper-bound invariant is additive — but the merged sketch
     is only flagged conservative when both inputs are.
+
+    Counters are packed to uint32 (half the checkpoint bytes of the original
+    int64 table) with SATURATING adds: a cell that would pass 2^32 - 1 clips
+    there and bumps `saturated`.  A clipped cell stops being an upper bound
+    for the codes hashing into it — the min-estimate could then under-count —
+    so any saturation drops the coverage gate (`exact_for` returns False) and
+    the engine falls back to KDE smoothing instead of serving a broken bound
+    on an "exact:cm" label.  Reaching the cap takes 4 billion rows into one
+    cell; the counter exists so that if it ever happens the failure is a
+    visible path change, not silent wraparound.  Legacy int64 snapshots load
+    unchanged (values above the cap clip and count as saturations).
 
     Code grid: a count-min table cannot enumerate its keys, so range
     answers walk an assumed code lattice `grid_origin + k * grid_step`
@@ -564,7 +578,8 @@ class CountMinSketch:
         self.grid_step = float(grid_step)
         self.grid_origin = float(grid_origin)
         self.off_grid = False                # any value seen off the lattice
-        self.table = np.zeros((depth, width), np.int64)
+        self.table = np.zeros((depth, width), np.uint32)
+        self.saturated = 0                   # cumulative cell-clip events
         self.n_rows = 0
         self.overflowed = False              # a CM sketch never overflows
         rng = np.random.default_rng(seed)
@@ -609,12 +624,26 @@ class CountMinSketch:
             idx = np.stack([self._hash(codes, r) for r in range(self.depth)])
             cur = np.stack([self.table[r, idx[r]]
                             for r in range(self.depth)])
-            target = cur.min(axis=0) + counts
+            target = cur.astype(np.int64).min(axis=0) + counts
+            over = target > _CM_MAX
+            if over.any():                   # saturate, don't wrap
+                self.saturated += int(over.sum())
+                target = np.minimum(target, _CM_MAX)
+            target = target.astype(np.uint32)
             for r in range(self.depth):
                 np.maximum.at(self.table[r], idx[r], target)
         else:
+            # widen to int64 for the add (np.add.at on uint32 would wrap
+            # silently), then clip back into the packed cells
             for r in range(self.depth):
-                np.add.at(self.table[r], self._hash(values, r), 1)
+                inc = np.bincount(self._hash(values, r),
+                                  minlength=self.width)
+                new = self.table[r].astype(np.int64) + inc
+                over = new > _CM_MAX
+                if over.any():
+                    self.saturated += int(over.sum())
+                    new = np.minimum(new, _CM_MAX)
+                self.table[r] = new.astype(np.uint32)
         # n_rows last, same reason as CategoricalSketch.add: a concurrent
         # reader mid-update must see n_rows < n_seen and fall back
         self.n_rows += values.shape[0]
@@ -629,8 +658,10 @@ class CountMinSketch:
         """Coverage gate, same contract as `CategoricalSketch.exact_for`:
         True when the sketch has seen the column's entire stream.  Covered
         answers are bounded-error (err <= e/width * n_rows w.h.p.), not
-        exact — the engine labels them "exact:cm"."""
-        return self.n_rows == n_seen
+        exact — the engine labels them "exact:cm".  A saturated cell has
+        dropped mass and may UNDER-count, voiding the error bound, so any
+        saturation drops coverage and routes queries back to the KDE."""
+        return self.n_rows == n_seen and self.saturated == 0
 
     def _grid_codes(self, lo: float, hi: float) -> Optional[List[float]]:
         """Deduplicated float32 lattice codes inside [lo, hi], or None when
@@ -733,7 +764,12 @@ class CountMinSketch:
                              grid_origin=self.grid_origin)
         out._mul = self._mul.copy()
         out._add = self._add.copy()
-        out.table = self.table + other.table
+        summed = self.table.astype(np.int64) + other.table.astype(np.int64)
+        over = summed > _CM_MAX
+        out.saturated = self.saturated + other.saturated + int(over.sum())
+        if over.any():
+            summed = np.minimum(summed, _CM_MAX)
+        out.table = summed.astype(np.uint32)
         out.n_rows = self.n_rows + other.n_rows
         out.off_grid = self.off_grid or other.off_grid
         return out
@@ -743,7 +779,7 @@ class CountMinSketch:
                 "width": self.width, "depth": self.depth,
                 "conservative": self.conservative,
                 "grid_step": self.grid_step, "grid_origin": self.grid_origin,
-                "off_grid": self.off_grid,
+                "off_grid": self.off_grid, "saturated": self.saturated,
                 "err_bound": self.err_bound()}
 
     def state(self) -> Tuple[Dict[str, np.ndarray], Dict[str, object]]:
@@ -754,6 +790,7 @@ class CountMinSketch:
                 "grid_step": float(self.grid_step),
                 "grid_origin": float(self.grid_origin),
                 "off_grid": bool(self.off_grid),
+                "saturated": int(self.saturated),
                 "max_enumerate": int(self.max_enumerate)}
         # the hash multipliers are persisted, not re-derived on load: numpy
         # does not guarantee Generator streams across versions, and a table
@@ -774,8 +811,17 @@ class CountMinSketch:
         out.off_grid = bool(meta.get("off_grid", False))
         out._mul = np.asarray(arrays["mul"], np.uint64)
         out._add = np.asarray(arrays["add"], np.uint64)
-        out.table = np.asarray(arrays["table"], np.int64).reshape(
+        out.saturated = int(meta.get("saturated", 0))
+        # legacy snapshots persisted int64 tables; values past the uint32
+        # cap clip on load and register as saturations so the coverage gate
+        # sees the (theoretical) broken bound rather than a wrapped cell
+        raw = np.asarray(arrays["table"], np.int64).reshape(
             out.depth, out.width)
+        over = raw > _CM_MAX
+        if over.any():
+            out.saturated += int(over.sum())
+            raw = np.minimum(raw, _CM_MAX)
+        out.table = raw.astype(np.uint32)
         out.n_rows = int(meta["n_rows"])
         return out
 

@@ -21,12 +21,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tuning import env_int
+from .tuning import resolve_tile
 
-# Env-tunable defaults (REPRO_AQP_TILE / REPRO_AQP_Q_TILE) so interpret=False
-# runs on real TPU can be tuned without editing source; kwargs still win.
-TILE = env_int("REPRO_AQP_TILE", 256)
-Q_TILE = env_int("REPRO_AQP_Q_TILE", 128)
+# Defaults; resolved per CALL against REPRO_AQP_TILE / REPRO_AQP_Q_TILE so a
+# sweep or late env change moves them without a restart; kwargs still win.
+TILE = 256
+Q_TILE = 128
 
 _SQRT1_2 = 1.0 / math.sqrt(2.0)
 _INV_SQRT_2PI = 1.0 / math.sqrt(2.0 * math.pi)
@@ -61,14 +61,7 @@ def _kernel(a_ref, b_ref, x_ref, h_ref, out_ref, *, n: int, qk: int, k: int):
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "q_tile", "interpret"))
-def aqp_batch_sums(x: jax.Array, h: jax.Array, a: jax.Array, b: jax.Array,
-                   tile: int = TILE, q_tile: int = Q_TILE,
-                   interpret: bool = True):
-    """Two-channel (queries x sample) reduction.  x: (n,), a/b: (q,).
-
-    Returns (count_raw, sum_raw), each (q,): the *unscaled* closed-form
-    integrals of eqs. 9-10 summed over the retained sample.
-    """
+def _aqp_batch_sums(x, h, a, b, tile, q_tile, interpret):
     n = x.shape[0]
     q = a.shape[0]
     if n == 0 or q == 0:
@@ -96,3 +89,16 @@ def aqp_batch_sums(x: jax.Array, h: jax.Array, a: jax.Array, b: jax.Array,
         interpret=interpret,
     )(ap, bp, xp, h.reshape(1).astype(x.dtype))
     return out[:q, 0], out[:q, 1]
+
+
+def aqp_batch_sums(x: jax.Array, h: jax.Array, a: jax.Array, b: jax.Array,
+                   tile: int = None, q_tile: int = None,
+                   interpret: bool = True):
+    """Two-channel (queries x sample) reduction.  x: (n,), a/b: (q,).
+
+    Returns (count_raw, sum_raw), each (q,): the *unscaled* closed-form
+    integrals of eqs. 9-10 summed over the retained sample.
+    """
+    tile = resolve_tile("REPRO_AQP_TILE", TILE, tile)
+    q_tile = resolve_tile("REPRO_AQP_Q_TILE", Q_TILE, q_tile)
+    return _aqp_batch_sums(x, h, a, b, tile, q_tile, interpret)

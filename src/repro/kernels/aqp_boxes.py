@@ -17,8 +17,8 @@ registers/VMEM.  COUNT/SUM/AVG selection and the sample->relation scale are
 applied by the caller (core/aqp_multid.py); the kernel is a pure two-channel
 reduction.
 
-Tile sizes are env-tunable (REPRO_AQP_BOXES_TILE / REPRO_AQP_BOXES_Q_TILE)
-for `interpret=False` runs on real TPU; call-site kwargs still win.
+Tile sizes resolve per call (REPRO_AQP_BOXES_TILE / REPRO_AQP_BOXES_Q_TILE,
+see tuning.resolve_tile); call-site kwargs win.
 """
 from __future__ import annotations
 
@@ -29,10 +29,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tuning import env_int
+from .tuning import resolve_tile
 
-TILE = env_int("REPRO_AQP_BOXES_TILE", 128)
-Q_TILE = env_int("REPRO_AQP_BOXES_Q_TILE", 64)
+TILE = 128     # default (env: REPRO_AQP_BOXES_TILE)
+Q_TILE = 64    # default (env: REPRO_AQP_BOXES_Q_TILE)
 
 _SQRT1_2 = 1.0 / math.sqrt(2.0)
 _INV_SQRT_2PI = 1.0 / math.sqrt(2.0 * math.pi)
@@ -77,15 +77,7 @@ def _kernel(lo_ref, hi_ref, tgt_ref, x_ref, h_ref, out_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "q_tile", "interpret"))
-def aqp_box_sums(x: jax.Array, h_diag: jax.Array, lo: jax.Array, hi: jax.Array,
-                 tgt: jax.Array, tile: int = TILE, q_tile: int = Q_TILE,
-                 interpret: bool = True):
-    """Two-channel (queries x samples x dims) reduction.
-
-    x: (n, d) sample rows; h_diag: (d,); lo/hi: (q, d); tgt: (q,) int32.
-    Returns (count_raw, sum_raw), each (q,): the *unscaled* eq. 11 box
-    integrals summed over the retained sample.
-    """
+def _aqp_box_sums(x, h_diag, lo, hi, tgt, tile, q_tile, interpret):
     n, d = x.shape
     q = lo.shape[0]
     if n == 0 or q == 0:
@@ -115,3 +107,17 @@ def aqp_box_sums(x: jax.Array, h_diag: jax.Array, lo: jax.Array, hi: jax.Array,
         interpret=interpret,
     )(lop, hip, tgtp, xp, h_diag.astype(x.dtype))
     return out[:q, 0], out[:q, 1]
+
+
+def aqp_box_sums(x: jax.Array, h_diag: jax.Array, lo: jax.Array, hi: jax.Array,
+                 tgt: jax.Array, tile: int = None, q_tile: int = None,
+                 interpret: bool = True):
+    """Two-channel (queries x samples x dims) reduction.
+
+    x: (n, d) sample rows; h_diag: (d,); lo/hi: (q, d); tgt: (q,) int32.
+    Returns (count_raw, sum_raw), each (q,): the *unscaled* eq. 11 box
+    integrals summed over the retained sample.
+    """
+    tile = resolve_tile("REPRO_AQP_BOXES_TILE", TILE, tile)
+    q_tile = resolve_tile("REPRO_AQP_BOXES_Q_TILE", Q_TILE, q_tile)
+    return _aqp_box_sums(x, h_diag, lo, hi, tgt, tile, q_tile, interpret)

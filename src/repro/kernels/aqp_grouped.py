@@ -1,0 +1,150 @@
+"""Pallas TPU kernel: factored GROUP BY box reduction (paper eq. 11).
+
+A GROUP BY over a dictionary column expands to one box per category that
+differs from its siblings on exactly ONE axis — the group column's code
+window.  Fanning those out through the generic box kernel recomputes the
+shared axes' Phi factors once per category: O(n * d * G).  This kernel is
+the tiled form of `core/aqp_multid.py:_grouped_box_terms`: each data tile
+computes the shared-axes product ONCE and crosses it with all G per-category
+group-axis windows in one sweep, O(n * d + n * G):
+
+    count_raw[g] = sum_i  shared_cnt_i * gPhi_ig
+    sum_raw[g]   = sum_i  shared_sm_i  * gfac_ig
+
+with shared_cnt_i the product of dPhi over the non-group axes, and the
+first-moment factor (eq. 10 per axis) on the target axis — carried by the
+shared product when the target is a kept axis, by the group factor when the
+query aggregates the group column itself (`tgt_is_group`).
+
+Grid: (category-tile major, data-tile minor) — the (gk, 2) accumulator
+block stays resident while data tiles stream through, and the per-tile
+cross term is a (gk, k) @ (k,) matvec on the MXU.  COUNT/SUM/AVG selection
+and the sample->relation scale are applied by the caller
+(core/aqp_multid.py); the kernel is a pure two-channel reduction.
+
+Tile sizes resolve per call (REPRO_AQP_GROUPED_TILE /
+REPRO_AQP_GROUPED_G_TILE, see tuning.resolve_tile); call-site kwargs win.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tuning import resolve_tile
+
+TILE = 128     # data-tile default (env: REPRO_AQP_GROUPED_TILE)
+G_TILE = 64    # category-tile default (env: REPRO_AQP_GROUPED_G_TILE)
+
+_SQRT1_2 = 1.0 / math.sqrt(2.0)
+_INV_SQRT_2PI = 1.0 / math.sqrt(2.0 * math.pi)
+
+
+def _kernel(glo_ref, ghi_ref, x_ref, h_ref, lo_ref, hi_ref, out_ref,
+            *, n: int, gk: int, k: int, d: int, g_axis: int, tgt: int,
+            tgt_is_group: bool):
+    j = pl.program_id(1)     # data-tile index (minor: varies fastest)
+    glo = glo_ref[...]       # (gk,) per-category window on the group axis
+    ghi = ghi_ref[...]
+    x = x_ref[...]           # (k, d) sample rows (padded rows masked below)
+    h = h_ref[...]           # (d,)   diagonal bandwidth
+    lo = lo_ref[...]         # (d,)   shared box (group axis' entry ignored)
+    hi = hi_ref[...]
+
+    inv_h = 1.0 / h
+    za = (lo[None, :] - x) * inv_h[None, :]            # (k, d)
+    zb = (hi[None, :] - x) * inv_h[None, :]
+    d_Phi = 0.5 * (jax.scipy.special.erf(zb * _SQRT1_2)
+                   - jax.scipy.special.erf(za * _SQRT1_2))
+    axis = jax.lax.broadcasted_iota(jnp.int32, (1, d), 1)
+    keep = axis != g_axis
+    shared_cnt = jnp.prod(jnp.where(keep, d_Phi, 1.0), axis=1)   # (k,)
+
+    valid = j * k + jax.lax.broadcasted_iota(jnp.int32, (k,), 0) < n
+    shared_cnt = jnp.where(valid, shared_cnt, 0.0)
+
+    xg = x[:, g_axis]
+    hg = h[g_axis]
+    gza = (glo[:, None] - xg[None, :]) / hg            # (gk, k)
+    gzb = (ghi[:, None] - xg[None, :]) / hg
+    g_Phi = 0.5 * (jax.scipy.special.erf(gzb * _SQRT1_2)
+                   - jax.scipy.special.erf(gza * _SQRT1_2))
+    cnt = g_Phi @ shared_cnt                           # (gk,) MXU matvec
+
+    if tgt_is_group:
+        g_dphi = _INV_SQRT_2PI * (jnp.exp(-0.5 * gzb * gzb)
+                                  - jnp.exp(-0.5 * gza * gza))
+        g_moment = xg[None, :] * g_Phi - hg * g_dphi
+        sm = g_moment @ shared_cnt
+    else:
+        d_phi = _INV_SQRT_2PI * (jnp.exp(-0.5 * zb * zb)
+                                 - jnp.exp(-0.5 * za * za))
+        moment = x * d_Phi - h[None, :] * d_phi
+        factors = jnp.where(axis == tgt, moment, d_Phi)
+        shared_sm = jnp.prod(jnp.where(keep, factors, 1.0), axis=1)
+        shared_sm = jnp.where(valid, shared_sm, 0.0)
+        sm = g_Phi @ shared_sm
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.stack([cnt, sm], axis=1)       # (gk, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("g_axis", "tgt", "tile",
+                                             "g_tile", "interpret"))
+def _aqp_grouped_sums(x, h_diag, lo, hi, glo, ghi, g_axis, tgt, tile,
+                      g_tile, interpret):
+    n, d = x.shape
+    G = glo.shape[0]
+    if n == 0 or G == 0:
+        # zero grid iterations would leave the output buffer uninitialized
+        z = jnp.zeros((G,), x.dtype)
+        return z, z
+
+    k = min(tile, max(8, 1 << (n - 1).bit_length()))
+    gk = min(g_tile, max(8, 1 << (G - 1).bit_length()))
+    xp = jnp.pad(x, ((0, (-n) % k), (0, 0)))
+    glop = jnp.pad(glo, (0, (-G) % gk))
+    ghip = jnp.pad(ghi, (0, (-G) % gk))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n, gk=gk, k=k, d=d, g_axis=g_axis,
+                          tgt=tgt, tgt_is_group=(tgt == g_axis)),
+        grid=(glop.shape[0] // gk, xp.shape[0] // k),
+        in_specs=[
+            pl.BlockSpec((gk,), lambda i, j: (i,)),
+            pl.BlockSpec((gk,), lambda i, j: (i,)),
+            pl.BlockSpec((k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((gk, 2), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((glop.shape[0], 2), x.dtype),
+        interpret=interpret,
+    )(glop, ghip, xp, h_diag.astype(x.dtype), lo.astype(x.dtype),
+      hi.astype(x.dtype))
+    return out[:G, 0], out[:G, 1]
+
+
+def aqp_grouped_sums(x: jax.Array, h_diag: jax.Array, lo: jax.Array,
+                     hi: jax.Array, glo: jax.Array, ghi: jax.Array,
+                     g_axis: int, tgt: int, tile: int = None,
+                     g_tile: int = None, interpret: bool = True):
+    """Two-channel factored GROUP BY reduction.
+
+    x: (n, d) sample rows; h_diag: (d,); lo/hi: (d,) the family's shared
+    box (the group axis' entries are ignored); glo/ghi: (G,) per-category
+    interval on axis `g_axis`; tgt: static target axis.  Returns
+    (count_raw, sum_raw), each (G,): the *unscaled* eq. 11 integrals —
+    identical semantics to `core/aqp_multid.py:_grouped_box_terms`.
+    """
+    tile = resolve_tile("REPRO_AQP_GROUPED_TILE", TILE, tile)
+    g_tile = resolve_tile("REPRO_AQP_GROUPED_G_TILE", G_TILE, g_tile)
+    return _aqp_grouped_sums(x, h_diag, lo, hi, glo, ghi, int(g_axis),
+                             int(tgt), tile, g_tile, interpret)

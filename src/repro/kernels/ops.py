@@ -1,8 +1,15 @@
-"""Jitted public wrappers for the Pallas kernels.
+"""Public wrappers for the Pallas kernels.
 
 On this CPU container, kernels run in interpret mode (the kernel body executes
 in Python on CPU — correctness path); on a TPU runtime `interpret=False`
 compiles through Mosaic.  `INTERPRET` flips automatically on backend.
+
+Tile sizes resolve at CALL time, never at import: explicit kwarg > measured
+tile cache (`kernels/autotune.py`, keyed by kernel + bucketed shape) > env
+var > module default.  Wrappers that sit inside a jitted caller (the 1-D and
+box batch paths) resolve once per traced shape — tile choices are static
+under jit anyway, so per-shape trace-time resolution is exactly as fresh as
+a recompile.
 
 With `repro.obs` enabled, every wrapper routes through
 `tuning.profiled_call`, which records fenced wall/dispatch timings into the
@@ -18,10 +25,13 @@ from repro import obs
 
 from . import aqp_batch as _ab
 from . import aqp_boxes as _abx
+from . import aqp_grouped as _agr
+from . import autotune as _tune
 from . import gh_fused as _gh
 from . import kde_eval as _kde
 from . import lscv_grid as _lg
 from . import pairwise_reduce as _pr
+from . import qmc_reduce as _qmc
 from . import rff_eval as _rff
 from . import sv_precompute as _sv
 from .tuning import profiled_call
@@ -29,7 +39,8 @@ from .tuning import profiled_call
 INTERPRET = jax.default_backend() != "tpu"
 
 
-def pairwise_scaled_ksum(x, g, kind="k4", tile=_pr.TILE):
+def pairwise_scaled_ksum(x, g, kind="k4", tile=None):
+    tile = _pr.TILE if tile is None else int(tile)
     if not obs.enabled():
         return _pr.pairwise_scaled_ksum(x, g, kind=kind, tile=tile,
                                         interpret=INTERPRET)
@@ -40,7 +51,8 @@ def pairwise_scaled_ksum(x, g, kind="k4", tile=_pr.TILE):
         n=x.shape[0], kind=kind, tile=tile)
 
 
-def sv_matrix(x, m, tile=_sv.TILE, algorithm="mxu"):
+def sv_matrix(x, m, tile=None, algorithm="mxu"):
+    tile = _sv.TILE if tile is None else int(tile)
     if not obs.enabled():
         return _sv.sv_matrix(x, m, tile=tile, algorithm=algorithm,
                              interpret=INTERPRET)
@@ -52,7 +64,8 @@ def sv_matrix(x, m, tile=_sv.TILE, algorithm="mxu"):
         algorithm=algorithm)
 
 
-def gh_fused_sum(x, h_inv, c_k, c_kk, tile=_gh.TILE):
+def gh_fused_sum(x, h_inv, c_k, c_kk, tile=None):
+    tile = _gh.TILE if tile is None else int(tile)
     if not obs.enabled():
         return _gh.gh_fused_sum(x, h_inv, c_k, c_kk, tile=tile,
                                 interpret=INTERPRET)
@@ -63,7 +76,9 @@ def gh_fused_sum(x, h_inv, c_k, c_kk, tile=_gh.TILE):
         n=x.shape[0], d=x.shape[1] if x.ndim > 1 else 1, tile=tile)
 
 
-def lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=_lg.TILE, h_tile=_lg.H_TILE):
+def lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=None, h_tile=None):
+    tile = _lg.TILE if tile is None else int(tile)
+    h_tile = _lg.H_TILE if h_tile is None else int(h_tile)
     if not obs.enabled():
         return _lg.lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=tile,
                                   h_tile=h_tile, interpret=INTERPRET)
@@ -74,7 +89,8 @@ def lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=_lg.TILE, h_tile=_lg.H_
         n=x.shape[0], G=h_grid.shape[0], tile=tile, h_tile=h_tile)
 
 
-def kde_eval(points, x, h, tile=_kde.TILE):
+def kde_eval(points, x, h, tile=None):
+    tile = _kde.TILE if tile is None else int(tile)
     if not obs.enabled():
         return _kde.kde_eval(points, x, h, tile=tile, interpret=INTERPRET)
     return profiled_call(
@@ -83,7 +99,12 @@ def kde_eval(points, x, h, tile=_kde.TILE):
         n=x.shape[0], G=points.shape[0], tile=tile)
 
 
-def aqp_batch_sums(x, h, a, b, tile=_ab.TILE, q_tile=_ab.Q_TILE):
+def aqp_batch_sums(x, h, a, b, tile=None, q_tile=None):
+    shape = {"n": x.shape[0], "G": a.shape[0]}
+    tile, q_tile = _tune.resolve(
+        "aqp_batch_sums", shape,
+        tile=(tile, "REPRO_AQP_TILE", _ab.TILE),
+        q_tile=(q_tile, "REPRO_AQP_Q_TILE", _ab.Q_TILE))
     if not obs.enabled():
         return _ab.aqp_batch_sums(x, h, a, b, tile=tile, q_tile=q_tile,
                                   interpret=INTERPRET)
@@ -94,7 +115,12 @@ def aqp_batch_sums(x, h, a, b, tile=_ab.TILE, q_tile=_ab.Q_TILE):
         n=x.shape[0], G=a.shape[0], tile=tile, q_tile=q_tile)
 
 
-def rff_density(points, w, b, z, tile=_rff.TILE, p_tile=_rff.P_TILE):
+def rff_density(points, w, b, z, tile=None, p_tile=None):
+    shape = {"n": w.shape[0], "d": points.shape[1], "G": points.shape[0]}
+    tile, p_tile = _tune.resolve(
+        "rff_density", shape,
+        tile=(tile, "REPRO_RFF_TILE", _rff.TILE),
+        p_tile=(p_tile, "REPRO_RFF_P_TILE", _rff.P_TILE))
     if not obs.enabled():
         return _rff.rff_density(points, w, b, z, tile=tile, p_tile=p_tile,
                                 interpret=INTERPRET)
@@ -105,7 +131,13 @@ def rff_density(points, w, b, z, tile=_rff.TILE, p_tile=_rff.P_TILE):
         n=points.shape[0], D=w.shape[0], tile=tile, p_tile=p_tile)
 
 
-def aqp_box_sums(x, h_diag, lo, hi, tgt, tile=_abx.TILE, q_tile=_abx.Q_TILE):
+def aqp_box_sums(x, h_diag, lo, hi, tgt, tile=None, q_tile=None):
+    d = x.shape[1] if x.ndim > 1 else 1
+    shape = {"n": x.shape[0], "d": d, "G": lo.shape[0]}
+    tile, q_tile = _tune.resolve(
+        "aqp_box_sums", shape,
+        tile=(tile, "REPRO_AQP_BOXES_TILE", _abx.TILE),
+        q_tile=(q_tile, "REPRO_AQP_BOXES_Q_TILE", _abx.Q_TILE))
     if not obs.enabled():
         return _abx.aqp_box_sums(x, h_diag, lo, hi, tgt, tile=tile,
                                  q_tile=q_tile, interpret=INTERPRET)
@@ -113,5 +145,45 @@ def aqp_box_sums(x, h_diag, lo, hi, tgt, tile=_abx.TILE, q_tile=_abx.Q_TILE):
         "aqp_box_sums",
         lambda: _abx.aqp_box_sums(x, h_diag, lo, hi, tgt, tile=tile,
                                   q_tile=q_tile, interpret=INTERPRET),
-        n=x.shape[0], d=x.shape[1] if x.ndim > 1 else 1, G=lo.shape[0],
-        tile=tile, q_tile=q_tile)
+        n=x.shape[0], d=d, G=lo.shape[0], tile=tile, q_tile=q_tile)
+
+
+def aqp_grouped_sums(x, h_diag, lo, hi, glo, ghi, g_axis, tgt,
+                     tile=None, g_tile=None):
+    shape = {"n": x.shape[0], "d": x.shape[1], "G": glo.shape[0]}
+    tile, g_tile = _tune.resolve(
+        "aqp_grouped_sums", shape,
+        tile=(tile, "REPRO_AQP_GROUPED_TILE", _agr.TILE),
+        g_tile=(g_tile, "REPRO_AQP_GROUPED_G_TILE", _agr.G_TILE))
+    if not obs.enabled():
+        return _agr.aqp_grouped_sums(x, h_diag, lo, hi, glo, ghi, g_axis,
+                                     tgt, tile=tile, g_tile=g_tile,
+                                     interpret=INTERPRET)
+    return profiled_call(
+        "aqp_grouped_sums",
+        lambda: _agr.aqp_grouped_sums(x, h_diag, lo, hi, glo, ghi, g_axis,
+                                      tgt, tile=tile, g_tile=g_tile,
+                                      interpret=INTERPRET),
+        n=x.shape[0], d=x.shape[1], G=glo.shape[0], tile=tile, g_tile=g_tile)
+
+
+def qmc_box_reduce(nodes, x, h_inv, log_norm, lo, hi, tgt,
+                   tile=None, m_tile=None, q_tile=None):
+    shape = {"n": x.shape[0], "d": x.shape[1], "G": lo.shape[0],
+             "m": nodes.shape[0]}
+    tile, m_tile, q_tile = _tune.resolve(
+        "qmc_box_reduce", shape,
+        tile=(tile, "REPRO_QMC_TILE", _qmc.TILE),
+        m_tile=(m_tile, "REPRO_QMC_M_TILE", _qmc.M_TILE),
+        q_tile=(q_tile, "REPRO_QMC_Q_TILE", _qmc.Q_TILE))
+    if not obs.enabled():
+        return _qmc.qmc_box_reduce(nodes, x, h_inv, log_norm, lo, hi, tgt,
+                                   tile=tile, m_tile=m_tile, q_tile=q_tile,
+                                   interpret=INTERPRET)
+    return profiled_call(
+        "qmc_box_reduce",
+        lambda: _qmc.qmc_box_reduce(nodes, x, h_inv, log_norm, lo, hi, tgt,
+                                    tile=tile, m_tile=m_tile, q_tile=q_tile,
+                                    interpret=INTERPRET),
+        n=x.shape[0], d=x.shape[1], G=lo.shape[0], m=nodes.shape[0],
+        tile=tile, m_tile=m_tile, q_tile=q_tile)

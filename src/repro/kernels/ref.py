@@ -85,6 +85,65 @@ def aqp_box_sums(x: jnp.ndarray, h_diag: jnp.ndarray, lo: jnp.ndarray,
     return count_raw, sum_raw
 
 
+def aqp_grouped_sums(x: jnp.ndarray, h_diag: jnp.ndarray, lo: jnp.ndarray,
+                     hi: jnp.ndarray, glo: jnp.ndarray, ghi: jnp.ndarray,
+                     g_axis: int, tgt: int):
+    """Unscaled factored GROUP BY integrals (eq. 11): shared-axes product
+    crossed with G per-category windows on axis `g_axis`.  x: (n,d), lo/hi:
+    (d,) shared box (group axis ignored), glo/ghi: (G,) -> (count_raw,
+    sum_raw), each (G,)."""
+    sqrt1_2 = 1.0 / math.sqrt(2.0)
+    inv_sqrt_2pi = 1.0 / math.sqrt(2.0 * math.pi)
+    za = (lo[None, :] - x) / h_diag[None, :]                        # (n, d)
+    zb = (hi[None, :] - x) / h_diag[None, :]
+    d_Phi = 0.5 * (jax.scipy.special.erf(zb * sqrt1_2)
+                   - jax.scipy.special.erf(za * sqrt1_2))
+    axis = jnp.arange(x.shape[1])
+    keep = axis != g_axis
+    shared_cnt = jnp.prod(jnp.where(keep[None, :], d_Phi, 1.0), axis=1)
+
+    xg = x[:, g_axis]
+    hg = h_diag[g_axis]
+    gza = (glo[None, :] - xg[:, None]) / hg                         # (n, G)
+    gzb = (ghi[None, :] - xg[:, None]) / hg
+    g_Phi = 0.5 * (jax.scipy.special.erf(gzb * sqrt1_2)
+                   - jax.scipy.special.erf(gza * sqrt1_2))
+    count_raw = jnp.sum(shared_cnt[:, None] * g_Phi, axis=0)
+
+    if tgt == g_axis:
+        g_dphi = inv_sqrt_2pi * (jnp.exp(-0.5 * gzb * gzb)
+                                 - jnp.exp(-0.5 * gza * gza))
+        g_moment = xg[:, None] * g_Phi - hg * g_dphi
+        sum_raw = jnp.sum(shared_cnt[:, None] * g_moment, axis=0)
+    else:
+        d_phi = inv_sqrt_2pi * (jnp.exp(-0.5 * zb * zb)
+                                - jnp.exp(-0.5 * za * za))
+        moment = x * d_Phi - h_diag[None, :] * d_phi
+        factors = jnp.where(axis[None, :] == tgt, moment, d_Phi)
+        shared_sm = jnp.prod(jnp.where(keep[None, :], factors, 1.0), axis=1)
+        sum_raw = jnp.sum(shared_sm[:, None] * g_Phi, axis=0)
+    return count_raw, sum_raw
+
+
+def qmc_box_reduce(nodes: jnp.ndarray, x: jnp.ndarray, h_inv: jnp.ndarray,
+                   log_norm, lo: jnp.ndarray, hi: jnp.ndarray,
+                   tgt: jnp.ndarray):
+    """Raw double sums of the fused QMC box reduction: for each box q,
+    sum over nodes inside the box of the summed (not averaged) Gaussian
+    kernel values against the whole sample.  nodes: (m,d), x: (n,d),
+    h_inv: (d,d), lo/hi: (q,d), tgt: (q,) -> (cnt_sums, sum_sums)."""
+    diff = nodes[:, None, :] - x[None, :, :]                        # (m, n, d)
+    quad = 0.5 * jnp.einsum("mnd,de,mne->mn", diff, h_inv, diff)
+    f_sums = jnp.sum(jnp.exp(log_norm - quad), axis=1)              # (m,)
+    inside = jnp.all((nodes[None, :, :] >= lo[:, None, :])
+                     & (nodes[None, :, :] <= hi[:, None, :]), axis=2)
+    w = inside * f_sums[None, :]                                    # (q, m)
+    cnt_sums = jnp.sum(w, axis=1)
+    tvals = nodes.T[tgt]                     # (q, m): node target coordinate
+    sum_sums = jnp.sum(w * tvals, axis=1)
+    return cnt_sums, sum_sums
+
+
 def rff_density(points: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
                 z: jnp.ndarray) -> jnp.ndarray:
     """Un-normalised RFF density dots: cos(points @ W.T + b) @ z.

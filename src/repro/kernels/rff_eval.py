@@ -12,9 +12,9 @@ stream through, the same pattern as aqp_boxes.py.  Padded features
 contribute exactly zero because z is zero-padded, so no feature mask is
 needed; padded points are sliced off by the caller.
 
-Tile sizes are env-tunable (REPRO_RFF_TILE feature tile /
-REPRO_RFF_P_TILE point tile) for `interpret=False` runs on real TPU;
-call-site kwargs still win.
+Tile sizes resolve per call (REPRO_RFF_TILE feature tile /
+REPRO_RFF_P_TILE point tile, see tuning.resolve_tile); call-site
+kwargs win.
 """
 from __future__ import annotations
 
@@ -24,10 +24,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .tuning import env_int
+from .tuning import resolve_tile
 
-TILE = env_int("REPRO_RFF_TILE", 512)
-P_TILE = env_int("REPRO_RFF_P_TILE", 256)
+TILE = 512     # feature-tile default (env: REPRO_RFF_TILE)
+P_TILE = 256   # point-tile default (env: REPRO_RFF_P_TILE)
 
 
 def _kernel(p_ref, w_ref, b_ref, z_ref, out_ref):
@@ -48,15 +48,7 @@ def _kernel(p_ref, w_ref, b_ref, z_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("tile", "p_tile", "interpret"))
-def rff_density(points: jax.Array, w: jax.Array, b: jax.Array, z: jax.Array,
-                tile: int = TILE, p_tile: int = P_TILE,
-                interpret: bool = True):
-    """Un-normalised RFF densities: cos(points @ W.T + b) @ z.
-
-    points: (m, d); w: (D, d); b/z: (D,).  Returns (m,) raw feature dots —
-    the caller (`RFFSynopsis.eval_batch`) applies the kernel normaliser and
-    the max(., 0) clip.
-    """
+def _rff_density(points, w, b, z, tile, p_tile, interpret):
     m, d = points.shape
     D = w.shape[0]
     if m == 0 or D == 0:
@@ -84,3 +76,17 @@ def rff_density(points: jax.Array, w: jax.Array, b: jax.Array, z: jax.Array,
     )(pp, wp.astype(points.dtype), bp.astype(points.dtype),
       zp.astype(points.dtype))
     return out[:m]
+
+
+def rff_density(points: jax.Array, w: jax.Array, b: jax.Array, z: jax.Array,
+                tile: int = None, p_tile: int = None,
+                interpret: bool = True):
+    """Un-normalised RFF densities: cos(points @ W.T + b) @ z.
+
+    points: (m, d); w: (D, d); b/z: (D,).  Returns (m,) raw feature dots —
+    the caller (`RFFSynopsis.eval_batch`) applies the kernel normaliser and
+    the max(., 0) clip.
+    """
+    tile = resolve_tile("REPRO_RFF_TILE", TILE, tile)
+    p_tile = resolve_tile("REPRO_RFF_P_TILE", P_TILE, p_tile)
+    return _rff_density(points, w, b, z, tile, p_tile, interpret)

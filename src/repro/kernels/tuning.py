@@ -1,13 +1,17 @@
 """Tile-size tuning knobs and measured-timing hooks for the Pallas kernels.
 
-Every kernel module resolves its default tile sizes through `env_int` at
-import time, so `interpret=False` runs on real TPU can be tuned without
-editing source:
+Every tunable kernel module resolves its tile sizes through `resolve_tile`
+at CALL time, so `interpret=False` runs on real TPU can be tuned without
+editing source — and without restarting the process:
 
     REPRO_AQP_TILE=512 REPRO_AQP_Q_TILE=256 python -m benchmarks.run ...
 
 Call-site kwargs (`tile=`, `q_tile=` on the ops.py wrappers) still override
-the environment; the env var only moves the *default*.
+the environment; the env var only moves the *default*.  (Tiles used to be
+baked into function defaults at import, which froze them before a sweep or
+late env change could move them — `resolve_tile` is the one shared
+call-time helper.)  On top of env/default resolution, the ops.py wrappers
+consult the measured tile cache (`kernels/autotune.py`) first.
 
 `profiled_call` is the measurement side of tuning: with `repro.obs` enabled,
 every kernel dispatch records fenced wall time, dispatch time, and a call
@@ -37,6 +41,21 @@ def env_int(name: str, default: int) -> int:
     if value <= 0:
         raise ValueError(f"{name} must be a positive integer, got {value}")
     return value
+
+
+def resolve_tile(env_name: str, default: int, override=None) -> int:
+    """One tile size, resolved at CALL time: explicit kwarg > env var >
+    module default.  Kernel modules route every tile through this instead of
+    baking `tile=TILE` into function defaults — an import-time default would
+    freeze the value before an in-process sweep or late env change could
+    move it (regression-tested in tests/test_autotune.py)."""
+    if override is not None:
+        value = int(override)
+        if value <= 0:
+            raise ValueError(f"tile override must be a positive integer, "
+                             f"got {override!r}")
+        return value
+    return env_int(env_name, default)
 
 
 def profiled_call(kernel: str, fn, /, *args, **labels):

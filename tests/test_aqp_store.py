@@ -613,6 +613,80 @@ def test_cm_grid_merge_and_state_roundtrip(rng):
         (1.0, 0.0, False)
 
 
+def test_cm_uint32_saturating_add_drops_coverage(rng):
+    """A cell at the uint32 cap clips instead of wrapping, on both update
+    paths, and any clip voids the coverage gate (the min-estimate may then
+    under-count, so 'exact:cm' must not serve)."""
+    from repro.data.aqp_store import _CM_MAX, CountMinSketch
+
+    vals = rng.integers(0, 50, 300).astype(np.float32)
+    for conservative in (False, True):
+        sk = CountMinSketch(width=64, depth=3, seed=1,
+                            conservative=conservative)
+        sk.add(vals)
+        assert sk.saturated == 0 and sk.exact_for(300)
+        sk.table[:] = _CM_MAX          # 4e9 rows into every cell, simulated
+        sk.add(np.array([7.0], np.float32))
+        assert sk.saturated > 0
+        assert sk.estimate(7.0) == _CM_MAX          # capped, never wrapped
+        assert not sk.exact_for(sk.n_rows)
+        assert sk.stats()["saturated"] == sk.saturated
+
+
+def test_cm_uint32_table_halves_checkpoint_bytes(rng):
+    from repro.data.aqp_store import CountMinSketch
+
+    sk = CountMinSketch(width=256, depth=4, seed=0)
+    sk.add(rng.integers(0, 100, 1000).astype(np.float32))
+    arrays, meta = sk.state()
+    assert arrays["table"].dtype == np.uint32
+    assert arrays["table"].nbytes == 4 * 256 * 4    # half the int64 original
+    assert meta["saturated"] == 0
+
+
+def test_cm_legacy_int64_snapshot_clips_and_counts(rng):
+    """Legacy int64 tables load unchanged below the cap; cells past it clip
+    on load and register as saturations (coverage gate sees them)."""
+    from repro.data.aqp_store import _CM_MAX, CountMinSketch
+
+    sk = CountMinSketch(width=64, depth=2, seed=3)
+    sk.add(rng.integers(0, 20, 500).astype(np.float32))
+    arrays, meta = sk.state()
+    arrays = {**arrays, "table": arrays["table"].astype(np.int64)}
+    meta = dict(meta)
+    meta.pop("saturated")                 # pre-uint32 snapshots lack the key
+    back = CountMinSketch.from_state(arrays, meta)
+    assert back.saturated == 0 and back.exact_for(500)
+    np.testing.assert_array_equal(back.table, sk.table)
+
+    arrays["table"] = arrays["table"].copy()
+    arrays["table"][0, 0] = _CM_MAX + 17
+    hot = CountMinSketch.from_state(arrays, meta)
+    assert hot.saturated == 1 and hot.table[0, 0] == _CM_MAX
+    assert not hot.exact_for(500)
+
+
+def test_cm_merge_saturation_accounting(rng):
+    from repro.data.aqp_store import _CM_MAX, CountMinSketch
+
+    a = CountMinSketch(width=64, depth=2, seed=4)
+    b = CountMinSketch(width=64, depth=2, seed=4)
+    a.add(rng.integers(0, 30, 200).astype(np.float32))
+    b.add(rng.integers(0, 30, 200).astype(np.float32))
+    m = a.merge(b)
+    assert m.saturated == 0 and m.exact_for(400)
+
+    a.table[:] = _CM_MAX                  # both halves near the cap
+    b.table[:] = 1
+    m2 = a.merge(b)
+    assert m2.saturated == 64 * 2         # every cell clipped once
+    assert np.all(m2.table == _CM_MAX)
+    assert not m2.exact_for(400)
+    # input saturations carry through additively
+    a.saturated = 3
+    assert a.merge(b).saturated == 3 + 64 * 2
+
+
 def test_cm_grid_via_store_eq_query(rng):
     """End to end: Eq on a half-step code column answers on the
     bounded-error sketch path when its grid is declared, and falls back to

@@ -145,6 +145,100 @@ def test_aqp_box_sums_empty_sample():
     np.testing.assert_array_equal(np.asarray(s), 0.0)
 
 
+@pytest.mark.parametrize("n,G,d,g_axis", [
+    (17, 3, 2, 0), (64, 16, 3, 1), (65, 17, 2, 1), (127, 1, 4, 2),
+    (128, 64, 2, 0), (500, 33, 3, 2), (200, 7, 1, 0)])
+def test_aqp_grouped_sums(rng, n, G, d, g_axis):
+    """Grouped kernel vs oracle across tile boundaries, G=1, d=1, odd G."""
+    x = jnp.asarray(rng.normal(0, 1.5, (n, d)).astype(np.float32))
+    h = jnp.asarray(rng.uniform(0.2, 0.8, d).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(-3, 0, d).astype(np.float32))
+    hi = lo + jnp.asarray(rng.uniform(1, 4, d).astype(np.float32))
+    glo = jnp.asarray(np.sort(rng.uniform(-2, 2, G)).astype(np.float32))
+    ghi = glo + 0.5
+    for tgt in {0, g_axis, d - 1}:
+        c1, s1 = ops.aqp_grouped_sums(x, h, lo, hi, glo, ghi, g_axis, tgt,
+                                      tile=64, g_tile=16)
+        c2, s2 = ref.aqp_grouped_sums(x, h, lo, hi, glo, ghi, g_axis, tgt)
+        np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_aqp_grouped_sums_matches_box_fanout(rng):
+    """The factored pass answers exactly what per-category box fan-out
+    answers: each category's box is the shared box with the group axis
+    replaced by its window."""
+    n, d, G, g_axis, tgt = 300, 3, 9, 1, 2
+    x = jnp.asarray(rng.normal(0, 1.2, (n, d)).astype(np.float32))
+    h = jnp.asarray(rng.uniform(0.3, 0.7, d).astype(np.float32))
+    lo = jnp.asarray(rng.uniform(-2, 0, d).astype(np.float32))
+    hi = lo + 2.5
+    glo = jnp.asarray(np.arange(G, dtype=np.float32) - 4.0)
+    ghi = glo + 0.8
+    blo = jnp.tile(lo, (G, 1)).at[:, g_axis].set(glo)
+    bhi = jnp.tile(hi, (G, 1)).at[:, g_axis].set(ghi)
+    tgts = jnp.full((G,), tgt, jnp.int32)
+    c1, s1 = ops.aqp_grouped_sums(x, h, lo, hi, glo, ghi, g_axis, tgt,
+                                  tile=64, g_tile=16)
+    c2, s2 = ops.aqp_box_sums(x, h, blo, bhi, tgts, tile=64, q_tile=16)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_aqp_grouped_sums_empty():
+    """Zero grid iterations must not expose uninitialized output memory."""
+    x = jnp.zeros((0, 2), jnp.float32)
+    lo = jnp.zeros((2,), jnp.float32)
+    hi = jnp.ones((2,), jnp.float32)
+    glo = jnp.asarray([0.0, 1.0], jnp.float32)
+    ghi = glo + 0.5
+    c, s = ops.aqp_grouped_sums(x, jnp.ones((2,), jnp.float32), lo, hi,
+                                glo, ghi, 0, 1)
+    np.testing.assert_array_equal(np.asarray(c), 0.0)
+    np.testing.assert_array_equal(np.asarray(s), 0.0)
+
+
+@pytest.mark.parametrize("n,d,q,m", [
+    (17, 2, 3, 33), (64, 3, 16, 64), (65, 2, 17, 129), (100, 1, 1, 200),
+    (128, 4, 15, 256)])
+def test_qmc_box_reduce(rng, n, d, q, m):
+    """Fused QMC kernel vs dense oracle: non-tile-multiple n/m, q=1, d=1."""
+    x = jnp.asarray(rng.normal(0, 1.0, (n, d)).astype(np.float32))
+    nodes = jnp.asarray(rng.uniform(-2, 2, (m, d)).astype(np.float32))
+    A = rng.normal(0, 0.3, (d, d))
+    Hm = (A @ A.T + np.eye(d) * 0.5).astype(np.float32)
+    h_inv = jnp.asarray(np.linalg.inv(Hm))
+    log_norm = jnp.float32(-0.5 * d * np.log(2 * np.pi)
+                           - 0.5 * np.linalg.slogdet(Hm)[1])
+    lo = jnp.asarray(rng.uniform(-2, 0, (q, d)).astype(np.float32))
+    hi = lo + 1.5
+    tgt = jnp.asarray(rng.integers(0, d, q), jnp.int32)
+    c1, s1 = ops.qmc_box_reduce(nodes, x, h_inv, log_norm, lo, hi, tgt,
+                                tile=64, m_tile=32, q_tile=8)
+    c2, s2 = ref.qmc_box_reduce(nodes, x, h_inv, log_norm, lo, hi, tgt)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_qmc_box_reduce_empty():
+    """Zero grid iterations must not expose uninitialized output memory."""
+    x = jnp.zeros((0, 2), jnp.float32)
+    nodes = jnp.zeros((4, 2), jnp.float32)
+    h_inv = jnp.eye(2, dtype=jnp.float32)
+    lo = jnp.zeros((3, 2), jnp.float32)
+    hi = jnp.ones((3, 2), jnp.float32)
+    tgt = jnp.zeros((3,), jnp.int32)
+    c, s = ops.qmc_box_reduce(nodes, x, h_inv, jnp.float32(0.0), lo, hi, tgt)
+    np.testing.assert_array_equal(np.asarray(c), 0.0)
+    np.testing.assert_array_equal(np.asarray(s), 0.0)
+
+
 def test_env_tile_override(monkeypatch):
     """TILE/Q_TILE defaults resolve through env vars (real-TPU tuning)."""
     from repro.kernels.tuning import env_int

@@ -14,11 +14,11 @@ smoke configuration: one small batch, d=2 only.
 """
 from __future__ import annotations
 
-import os
 
 import numpy as np
 
 from .common import emit, time_call
+from .common import quick as common_quick
 
 Q_SIZES = (64, 512)
 SAMPLE = 2048
@@ -26,7 +26,7 @@ DIMS = (2, 3)
 
 
 def _quick() -> bool:
-    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+    return common_quick()
 
 
 def _setup(n_queries: int, d: int, seed: int = 0):

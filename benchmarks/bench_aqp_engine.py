@@ -27,12 +27,12 @@ smoke configuration.
 """
 from __future__ import annotations
 
-import os
 import warnings
 
 import numpy as np
 
 from .common import emit, time_call
+from .common import quick as common_quick
 
 N_MIXED = 768
 N_QMC_QUERIES = 64
@@ -40,7 +40,7 @@ QMC_SAMPLE = 512
 
 
 def _quick() -> bool:
-    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+    return common_quick()
 
 
 def _setup_store(seed: int = 0):

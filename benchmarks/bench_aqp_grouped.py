@@ -19,11 +19,11 @@ smoke configuration: one small shape, no speedup floor.
 """
 from __future__ import annotations
 
-import os
 
 import numpy as np
 
 from .common import emit, time_call
+from .common import quick as common_quick
 
 N_ROWS = 16_384
 DIMS = 6
@@ -32,7 +32,7 @@ MIN_SPEEDUP = 3.0
 
 
 def _quick() -> bool:
-    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+    return common_quick()
 
 
 def _setup(n: int, d: int, g: int, seed: int = 0):

@@ -22,12 +22,12 @@ smoke configuration.
 """
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
 
 from .common import emit
+from .common import quick as common_quick
 
 ROWS = 200_000
 CAPACITY = 16_384
@@ -37,7 +37,7 @@ REPS = 7
 
 
 def _quick() -> bool:
-    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+    return common_quick()
 
 
 def _build(n: int, capacity: int, n_tiers: int):

@@ -26,7 +26,6 @@ smoke configuration.
 """
 from __future__ import annotations
 
-import os
 import shutil
 import tempfile
 import time
@@ -34,6 +33,7 @@ import time
 import numpy as np
 
 from .common import emit
+from .common import quick as common_quick
 
 ROWS = 200_000
 CAPACITY = 2048
@@ -41,7 +41,7 @@ N_QUERIES = 64
 
 
 def _quick() -> bool:
-    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+    return common_quick()
 
 
 def _telemetry(n: int):

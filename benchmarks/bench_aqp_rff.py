@@ -25,12 +25,12 @@ smoke configuration (n = 20k, no speedup assertion).
 """
 from __future__ import annotations
 
-import os
 import time
 
 import numpy as np
 
 from .common import emit, time_call
+from .common import quick as common_quick
 
 N_ROWS = 200_000
 N_QUERIES = 48
@@ -40,7 +40,7 @@ COLS = ("loss", "latency_ms")
 
 
 def _quick() -> bool:
-    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+    return common_quick()
 
 
 def _setup(n: int, seed: int = 0):

@@ -23,13 +23,13 @@ smoke configuration.
 """
 from __future__ import annotations
 
-import os
 import threading
 import time
 
 import numpy as np
 
 from .common import emit
+from .common import quick as common_quick
 
 N_CLIENTS = 16
 PER_CLIENT = 48
@@ -37,7 +37,7 @@ ROWS = 100_000
 
 
 def _quick() -> bool:
-    return os.environ.get("REPRO_BENCH_QUICK", "") not in ("", "0")
+    return common_quick()
 
 
 def _setup(seed: int = 0):

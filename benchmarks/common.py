@@ -9,6 +9,12 @@ from typing import Callable, Dict, List
 import numpy as np
 
 
+def quick() -> bool:
+    """True in CI-smoke mode (`benchmarks.run --quick` sets the knob)."""
+    from repro import knobs
+    return knobs.get_bool("REPRO_BENCH_QUICK")
+
+
 def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1) -> float:
     """Median wall time in microseconds; blocks on jax async dispatch."""
     import jax

@@ -123,7 +123,8 @@ def main() -> int:
         if entry["us"] > entry["default_us"]:
             regressed.append((kernel, shape))
 
-    path = os.environ.get("REPRO_TUNING_CACHE")
+    from repro import knobs
+    path = knobs.get_str("REPRO_TUNING_CACHE")
     if path:
         print(f"persisted {len(targets)} entr"
               f"{'y' if len(targets) == 1 else 'ies'} -> {path}")

@@ -1,0 +1,83 @@
+#!/usr/bin/env python
+"""Run the repro.analysis static-check suite (the CI gate).
+
+    PYTHONPATH=src python scripts/check.py --all
+    PYTHONPATH=src python scripts/check.py --select lock-discipline,host-sync
+    PYTHONPATH=src python scripts/check.py --all --json
+
+Exit status: 0 when every checker is clean (pragma'd exceptions are
+reported but do not fail); 1 when any unallowed violation remains;
+2 on usage errors.  `--json` prints a machine-readable report instead of
+the per-checker summary (still sets the exit status).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from dataclasses import asdict
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+
+def main() -> int:
+    from repro.analysis import runner
+
+    ap = argparse.ArgumentParser(
+        description="project-specific static checks")
+    ap.add_argument("--all", action="store_true",
+                    help="run every checker (default when --select absent)")
+    ap.add_argument("--select", metavar="ID[,ID...]",
+                    help="comma-separated checker ids: "
+                         + ", ".join(sorted(runner.CHECKERS)))
+    ap.add_argument("--json", action="store_true",
+                    help="machine-readable report on stdout")
+    ap.add_argument("--root", default=str(REPO),
+                    help="repo root to analyse (default: this repo)")
+    args = ap.parse_args()
+
+    select = None
+    if args.select:
+        select = [s.strip() for s in args.select.split(",") if s.strip()]
+    try:
+        results = runner.run_all(Path(args.root), select=select)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+
+    failed = 0
+    if args.json:
+        doc = {
+            check_id: {
+                "violations": [asdict(v) for v in res["violations"]],
+                "allowed": [asdict(v) for v in res["allowed"]],
+            }
+            for check_id, res in results.items()
+        }
+        print(json.dumps(doc, indent=2, sort_keys=True))
+        failed = sum(len(r["violations"]) for r in results.values())
+    else:
+        for check_id, res in results.items():
+            bad, ok = res["violations"], res["allowed"]
+            status = "FAIL" if bad else "ok"
+            line = (f"{check_id:<18} {status:>4}  "
+                    f"{len(bad)} violation{'s' if len(bad) != 1 else ''}")
+            if ok:
+                line += f", {len(ok)} allowed"
+            print(line)
+            for v in bad:
+                print(f"  {v.format()}")
+            for v in ok:
+                print(f"  {v.format()}")
+            failed += len(bad)
+        total_allowed = sum(len(r["allowed"]) for r in results.values())
+        print(f"\n{failed} unallowed violation"
+              f"{'s' if failed != 1 else ''}, {total_allowed} allowed")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

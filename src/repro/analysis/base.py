@@ -1,0 +1,198 @@
+"""Shared infrastructure for the static checkers.
+
+A checker is a callable `(Project) -> List[Violation]`.  `Project` loads
+and caches parsed source files; `SourceFile` carries the AST plus the
+line-indexed `# repro: allow[...]` pragmas, and pragma application happens
+once in `apply_pragmas` so individual checkers never re-implement
+suppression.
+
+Pragma grammar (one per line, trailing comment or own line directly above
+the flagged statement):
+
+    # repro: allow[check-id] <reason — mandatory, it is the audit trail>
+
+A pragma with no reason does not suppress anything; the runner reports it
+as a `pragma` violation instead, so un-justified exceptions cannot slip
+through review.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Tuple
+
+PRAGMA_RE = re.compile(r"#\s*repro:\s*allow\[([a-z0-9-]+)\]\s*(.*)")
+
+
+@dataclass
+class Violation:
+    """One finding: where, which checker, and what is wrong."""
+
+    check: str
+    path: str                 # repo-relative, posix separators
+    line: int
+    message: str
+    allowed: bool = False     # True once a pragma with a reason covers it
+    reason: str = ""          # the pragma's justification, when allowed
+
+    def format(self) -> str:
+        mark = " (allowed: %s)" % self.reason if self.allowed else ""
+        return f"{self.path}:{self.line}: [{self.check}] {self.message}{mark}"
+
+
+@dataclass
+class Pragma:
+    line: int
+    check: str
+    reason: str
+
+
+@dataclass
+class SourceFile:
+    """One parsed python file: text, AST, and its allow-pragmas by line."""
+
+    path: Path
+    rel: str
+    text: str
+    tree: ast.Module
+    lines: List[str] = field(default_factory=list)
+    pragmas: List[Pragma] = field(default_factory=list)
+    comments: Dict[int, str] = field(default_factory=dict)  # line -> text
+
+    @classmethod
+    def parse(cls, path: Path, rel: str) -> "SourceFile":
+        text = path.read_text(encoding="utf-8")
+        tree = ast.parse(text, filename=str(path))
+        lines = text.splitlines()
+        # real COMMENT tokens only — a docstring showing pragma syntax must
+        # not register as a pragma
+        comments: Dict[int, str] = {}
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                comments[tok.start[0]] = tok.string
+        pragmas = []
+        for line_no, comment in sorted(comments.items()):
+            m = PRAGMA_RE.search(comment)
+            if m:
+                pragmas.append(Pragma(line_no, m.group(1),
+                                      m.group(2).strip()))
+        return cls(path, rel, text, tree, lines, pragmas, comments)
+
+    def pragma_for(self, check: str, line: int) -> Optional[Pragma]:
+        """The pragma covering `line` for `check`: same line or the line
+        directly above (an own-line pragma annotating the next statement)."""
+        for p in self.pragmas:
+            if p.check == check and p.line in (line, line - 1):
+                return p
+        return None
+
+
+class Project:
+    """The file universe one run sees.  `roots` are directories (searched
+    recursively for *.py) or single files; paths are cached so the five
+    checkers parse each file once."""
+
+    def __init__(self, root: Path, roots: Iterable[str] = ("src",)):
+        self.root = Path(root)
+        self.roots = tuple(roots)
+        self._cache: Dict[str, SourceFile] = {}
+
+    def files(self, under: str = "") -> List[SourceFile]:
+        out = []
+        for top in self.roots:
+            base = self.root / top
+            if base.is_file():
+                paths = [base]
+            else:
+                paths = sorted(base.rglob("*.py"))
+            for path in paths:
+                rel = path.relative_to(self.root).as_posix()
+                if under and not rel.startswith(under):
+                    continue
+                if rel not in self._cache:
+                    self._cache[rel] = SourceFile.parse(path, rel)
+                out.append(self._cache[rel])
+        return out
+
+    def get(self, rel: str) -> Optional[SourceFile]:
+        """One file by repo-relative path, or None if absent."""
+        if rel in self._cache:
+            return self._cache[rel]
+        path = self.root / rel
+        if not rel.endswith(".py") or not path.is_file():
+            return None
+        self._cache[rel] = SourceFile.parse(path, rel)
+        return self._cache[rel]
+
+
+def apply_pragmas(project: Project,
+                  violations: List[Violation]) -> Tuple[List[Violation],
+                                                        List[Violation]]:
+    """Split raw findings into (unallowed, allowed) by consulting each
+    file's pragmas.  Pragmas with an empty reason never suppress; the
+    runner surfaces them separately (`check="pragma"`)."""
+    unallowed, allowed = [], []
+    for v in violations:
+        sf = project.get(v.path)
+        p = sf.pragma_for(v.check, v.line) if sf else None
+        if p is not None and p.reason:
+            v.allowed, v.reason = True, p.reason
+            allowed.append(v)
+        else:
+            unallowed.append(v)
+    return unallowed, allowed
+
+
+def bare_pragma_violations(project: Project,
+                           check_ids: Iterable[str]) -> List[Violation]:
+    """Reason-less or unknown-id pragmas are findings themselves: the
+    pragma IS the audit record, so an empty one defeats the point."""
+    known = set(check_ids)
+    out = []
+    for sf in project.files():
+        for p in sf.pragmas:
+            if p.check not in known:
+                out.append(Violation(
+                    "pragma", sf.rel, p.line,
+                    f"allow[{p.check}] names no known checker "
+                    f"(have: {', '.join(sorted(known))})"))
+            elif not p.reason:
+                out.append(Violation(
+                    "pragma", sf.rel, p.line,
+                    f"allow[{p.check}] pragma has no reason — the reason is "
+                    f"the audit trail, add one"))
+    return out
+
+
+def attr_chain(node: ast.AST) -> str:
+    """Dotted name for Attribute/Name chains: `os.environ.get` ->
+    'os.environ.get'; '' when the chain bottoms out in a non-Name."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def call_leaf(node: ast.Call) -> str:
+    """The called method/function name regardless of what it hangs off:
+    `obs.get_registry().histogram(...)` -> 'histogram'."""
+    func = node.func
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def str_const(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None

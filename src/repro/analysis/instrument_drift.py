@@ -1,0 +1,140 @@
+"""instrument-drift: emitted metric/span names == documented names.
+
+The observability surface is an API: dashboards, the validate_metrics.py
+schema checker, and the autotuner all key on literal instrument names.  A
+renamed counter that ships without a docs update silently breaks all
+three, so this checker diffs — bidirectionally —
+
+  * every literal name passed to ``.counter("…")`` / ``.gauge("…")`` /
+    ``.histogram("…")`` in src/ and benchmarks/ against the metric
+    catalogue tables in ``docs/observability.md``,
+  * every literal ``span("…")`` name against the span catalogue, and
+  * every instrument literal inside ``scripts/validate_metrics.py``
+    against the documented set (the validator must not check phantom
+    names).
+
+Dynamic (non-literal) instrument names defeat the diff entirely and are
+flagged unless pragma'd.  The ``repro.obs`` package itself is plumbing,
+not an emission site, and is excluded.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Set, Tuple
+
+from .base import Project, Violation, call_leaf, str_const
+
+CHECK = "instrument-drift"
+
+DOCS_REL = "docs/observability.md"
+VALIDATOR_REL = "scripts/validate_metrics.py"
+OBS_DIR = "src/repro/obs/"
+
+EMITTERS = {"counter", "gauge", "histogram"}
+BACKTICKED = re.compile(r"`([a-z_]+(?:\.[a-z_]+)+)`")
+DOTTED = re.compile(r"^[a-z_]+(?:\.[a-z_]+)+$")
+
+
+def _doc_catalogue(project: Project,
+                   docs_rel: str) -> Tuple[Set[str], Set[str], bool]:
+    """(metric names, span names, found) from the docs tables: backticked
+    dotted names in table rows, classified by the enclosing ## heading."""
+    path = project.root / docs_rel
+    if not path.is_file():
+        return set(), set(), False
+    metrics: Set[str] = set()
+    spans: Set[str] = set()
+    section = ""
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if line.startswith("#"):
+            section = line.lower()
+            continue
+        if not line.lstrip().startswith("|"):
+            continue
+        names = BACKTICKED.findall(line)
+        if not names:
+            continue
+        if "span" in section:
+            spans.update(names)
+        elif "metric" in section:
+            metrics.update(names)
+    return metrics, spans, True
+
+
+def _emissions(project: Project) -> Tuple[Dict[str, Tuple[str, int]],
+                                          Dict[str, Tuple[str, int]],
+                                          List[Violation]]:
+    metrics: Dict[str, Tuple[str, int]] = {}
+    spans: Dict[str, Tuple[str, int]] = {}
+    out: List[Violation] = []
+    for sf in project.files():
+        if sf.rel.startswith(OBS_DIR) or sf.rel.startswith("scripts/"):
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            leaf = call_leaf(node)
+            if leaf in EMITTERS and node.args:
+                name = str_const(node.args[0])
+                if name is None:
+                    out.append(Violation(
+                        CHECK, sf.rel, node.lineno,
+                        f".{leaf}(<dynamic name>) — non-literal instrument "
+                        f"names cannot be checked against the catalogue"))
+                else:
+                    metrics.setdefault(name, (sf.rel, node.lineno))
+            elif leaf == "span" and node.args:
+                name = str_const(node.args[0])
+                if name is None:
+                    out.append(Violation(
+                        CHECK, sf.rel, node.lineno,
+                        "span(<dynamic name>) — non-literal span names "
+                        "cannot be checked against the catalogue"))
+                else:
+                    spans.setdefault(name, (sf.rel, node.lineno))
+    return metrics, spans, out
+
+
+def check(project: Project, docs_rel: str = DOCS_REL) -> List[Violation]:
+    metrics, spans, out = _emissions(project)
+    doc_metrics, doc_spans, found = _doc_catalogue(project, docs_rel)
+    if not found:
+        out.append(Violation(CHECK, docs_rel, 1,
+                             f"{docs_rel} is missing — the instrument "
+                             f"catalogue is the drift baseline"))
+        return out
+
+    for name, (rel, line) in sorted(metrics.items()):
+        if name not in doc_metrics:
+            out.append(Violation(
+                CHECK, rel, line,
+                f"metric `{name}` is emitted but missing from the "
+                f"{docs_rel} catalogue"))
+    for name in sorted(doc_metrics - set(metrics)):
+        out.append(Violation(
+            CHECK, docs_rel, 1,
+            f"metric `{name}` is documented but nothing emits it"))
+    for name, (rel, line) in sorted(spans.items()):
+        if name not in doc_spans:
+            out.append(Violation(
+                CHECK, rel, line,
+                f"span `{name}` is emitted but missing from the {docs_rel} "
+                f"span catalogue"))
+    for name in sorted(doc_spans - set(spans)):
+        out.append(Violation(
+            CHECK, docs_rel, 1,
+            f"span `{name}` is documented but nothing opens it"))
+
+    validator = project.get(VALIDATOR_REL)
+    if validator is not None:
+        documented = doc_metrics | doc_spans
+        for node in ast.walk(validator.tree):
+            if isinstance(node, ast.Constant) and \
+                    isinstance(node.value, str) and DOTTED.match(node.value):
+                if node.value not in documented:
+                    out.append(Violation(
+                        CHECK, VALIDATOR_REL, node.lineno,
+                        f"validator references `{node.value}` which is not "
+                        f"in the {docs_rel} catalogue"))
+    return out

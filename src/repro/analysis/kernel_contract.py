@@ -1,0 +1,155 @@
+"""kernel-contract: every Pallas kernel module honours the repo's kernel
+packaging rules.
+
+A *kernel module* is any file under ``src/repro/kernels/`` whose source
+calls ``pl.pallas_call`` (the plumbing modules — ops, ref, tuning,
+autotune, triangle — are exempt by construction: they don't).  For each
+kernel module:
+
+  1. every public function has a same-named pure-JAX oracle in
+     ``kernels/ref.py`` (the numerics contract tests diff against), and
+  2. a same-named public wrapper in ``kernels/ops.py`` (the only entry
+     point the engine may import), and
+  3. no function parameter defaults to a ``*TILE`` constant — tiles are
+     resolved via ``tuning.resolve_tile`` at CALL time; an import-time
+     default freezes the value before a sweep or env change can move it
+     (the PR-9 regression class), so the module must also actually call
+     ``resolve_tile`` inside a function body, and
+  4. kernel bodies (functions taking ``*_ref`` params — the code that runs
+     on device) contain no float64 literals/dtypes and no nondeterminism
+     (time/datetime/random calls): TPUs demote f64 silently and a
+     nondeterministic kernel can never be diffed against its oracle.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from .base import Project, SourceFile, Violation, attr_chain
+
+CHECK = "kernel-contract"
+
+KERNELS_DIR = "src/repro/kernels/"
+OPS_REL = "src/repro/kernels/ops.py"
+REF_REL = "src/repro/kernels/ref.py"
+
+NONDET_PREFIXES = ("time.", "datetime.", "random.", "np.random.",
+                   "numpy.random.", "secrets.")
+
+
+def _top_level_defs(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [n for n in tree.body if isinstance(n, ast.FunctionDef)]
+
+
+def _is_kernel_module(sf: SourceFile) -> bool:
+    return (sf.rel.startswith(KERNELS_DIR)
+            and "pallas_call" in sf.text
+            and sf.rel not in (OPS_REL, REF_REL))
+
+
+def _tile_default(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Name) and node.id.endswith("TILE"):
+        return node.id
+    if isinstance(node, ast.Attribute) and node.attr.endswith("TILE"):
+        return attr_chain(node)
+    return None
+
+
+def _kernel_bodies(tree: ast.Module) -> List[ast.FunctionDef]:
+    out = []
+    for fn in ast.walk(tree):
+        if isinstance(fn, ast.FunctionDef):
+            params = fn.args.posonlyargs + fn.args.args + fn.args.kwonlyargs
+            if any(a.arg.endswith("_ref") for a in params):
+                out.append(fn)
+    return out
+
+
+def _check_kernel_body(sf: SourceFile, fn: ast.FunctionDef,
+                       out: List[Violation]) -> None:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Attribute) and node.attr == "float64":
+            out.append(Violation(
+                CHECK, sf.rel, node.lineno,
+                f"float64 in kernel body {fn.name}(): TPUs silently demote "
+                f"f64 — keep kernel numerics f32"))
+        elif (isinstance(node, ast.Constant) and node.value == "float64"):
+            out.append(Violation(
+                CHECK, sf.rel, node.lineno,
+                f'"float64" dtype string in kernel body {fn.name}()'))
+        elif isinstance(node, ast.Call):
+            chain = attr_chain(node.func)
+            if chain and any(chain.startswith(p) for p in NONDET_PREFIXES):
+                out.append(Violation(
+                    CHECK, sf.rel, node.lineno,
+                    f"nondeterministic call {chain}() in kernel body "
+                    f"{fn.name}(): kernels must be diffable against their "
+                    f"ref.py oracle"))
+
+
+def check(project: Project) -> List[Violation]:
+    out: List[Violation] = []
+    ops = project.get(OPS_REL)
+    ref = project.get(REF_REL)
+    ops_names: Set[str] = (
+        {f.name for f in _top_level_defs(ops.tree)} if ops else set())
+    ref_names: Set[str] = (
+        {f.name for f in _top_level_defs(ref.tree)} if ref else set())
+
+    for sf in project.files(KERNELS_DIR):
+        if not _is_kernel_module(sf):
+            continue
+
+        publics = [f for f in _top_level_defs(sf.tree)
+                   if not f.name.startswith("_")]
+        for fn in publics:
+            if fn.name not in ref_names:
+                out.append(Violation(
+                    CHECK, sf.rel, fn.lineno,
+                    f"public kernel {fn.name}() has no pure-JAX oracle in "
+                    f"kernels/ref.py"))
+            if fn.name not in ops_names:
+                out.append(Violation(
+                    CHECK, sf.rel, fn.lineno,
+                    f"public kernel {fn.name}() has no wrapper in "
+                    f"kernels/ops.py (the engine-facing entry point)"))
+
+        resolves_in_fn = False
+        for fn in ast.walk(sf.tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            args = fn.args
+            for arg, default in zip(
+                    (args.posonlyargs + args.args)[-len(args.defaults):]
+                    if args.defaults else [],
+                    args.defaults):
+                name = _tile_default(default)
+                if name:
+                    out.append(Violation(
+                        CHECK, sf.rel, fn.lineno,
+                        f"{fn.name}() defaults {arg.arg}={name} at import "
+                        f"time — resolve tiles via tuning.resolve_tile at "
+                        f"call time instead"))
+            for kwarg, default in zip(args.kwonlyargs, args.kw_defaults):
+                name = _tile_default(default) if default is not None else None
+                if name:
+                    out.append(Violation(
+                        CHECK, sf.rel, fn.lineno,
+                        f"{fn.name}() defaults {kwarg.arg}={name} at import "
+                        f"time — resolve tiles via tuning.resolve_tile at "
+                        f"call time instead"))
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    chain = attr_chain(node.func)
+                    if chain.endswith("resolve_tile"):
+                        resolves_in_fn = True
+
+        if publics and not resolves_in_fn:
+            out.append(Violation(
+                CHECK, sf.rel, publics[0].lineno,
+                f"kernel module never calls tuning.resolve_tile inside a "
+                f"function — tile sizes cannot be call-time tuned"))
+
+        for fn in _kernel_bodies(sf.tree):
+            _check_kernel_body(sf, fn, out)
+    return out

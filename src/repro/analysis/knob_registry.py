@@ -1,0 +1,120 @@
+"""knob-registry: every ``REPRO_*`` env knob is registered, read through
+``repro.knobs``, and documented.
+
+Three failure modes this kills:
+
+  * a raw ``os.environ.get("REPRO_X")`` at a call site — two sites can
+    silently fork on defaults, and nothing documents the knob.  All reads
+    go through the typed accessors in ``repro.knobs`` (the one audited raw
+    read lives there); *writes* (``os.environ["REPRO_X"] = ...``) stay
+    legal — CLIs set knobs for child code on purpose.
+  * a ``REPRO_*`` name referenced in src/scripts/benchmarks that the
+    registry does not know — a typo'd knob reads as "unset" forever.
+  * registry/docs drift — every registered knob must appear in the
+    ``docs/analysis.md`` knob table and vice versa, and a knob nothing
+    references is dead weight.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from .base import Project, Violation, attr_chain, str_const
+
+CHECK = "knob-registry"
+
+KNOBS_REL = "src/repro/knobs.py"
+DOCS_REL = "docs/analysis.md"
+NAME_RE = re.compile(r"\bREPRO_[A-Z0-9_]+\b")
+
+
+def _env_read(node: ast.AST) -> Optional[Tuple[str, int]]:
+    """(knob_name, line) when `node` reads a REPRO_* env var directly."""
+    if isinstance(node, ast.Call):
+        chain = attr_chain(node.func)
+        if chain.endswith("environ.get") or chain.endswith("os.getenv") \
+                or chain == "getenv":
+            name = str_const(node.args[0]) if node.args else None
+            if name and name.startswith("REPRO_"):
+                return name, node.lineno
+    if isinstance(node, ast.Subscript) and isinstance(node.ctx, ast.Load):
+        if attr_chain(node.value).endswith("environ"):
+            name = str_const(node.slice)
+            if name and name.startswith("REPRO_"):
+                return name, node.lineno
+    return None
+
+
+def _registered(project: Project) -> Dict[str, int]:
+    """KNOB name -> registration line, parsed from knobs.py (static — the
+    checker must not depend on importing the code under analysis)."""
+    sf = project.get(KNOBS_REL)
+    if sf is None:
+        return {}
+    out: Dict[str, int] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Call) and \
+                attr_chain(node.func).endswith("register"):
+            name = str_const(node.args[0]) if node.args else None
+            if name:
+                out[name] = node.lineno
+    return out
+
+
+def _doc_names(project: Project, docs_rel: str) -> Set[str]:
+    path = project.root / docs_rel
+    if not path.is_file():
+        return set()
+    return set(NAME_RE.findall(path.read_text(encoding="utf-8")))
+
+
+def check(project: Project, registry: Optional[Dict[str, int]] = None,
+          docs_rel: str = DOCS_REL) -> List[Violation]:
+    out: List[Violation] = []
+    registered = _registered(project) if registry is None else registry
+
+    referenced: Dict[str, Tuple[str, int]] = {}
+    for sf in project.files():
+        is_registry = sf.rel == KNOBS_REL
+        # the analysis package's own docstrings name placeholder knobs
+        is_meta = sf.rel.startswith("src/repro/analysis/")
+        for node in ast.walk(sf.tree):
+            read = _env_read(node)
+            if read and not is_registry:
+                name, line = read
+                out.append(Violation(
+                    CHECK, sf.rel, line,
+                    f"raw environ read of {name} — go through repro.knobs "
+                    f"(get_int/get_bool/get_str) so defaults cannot fork"))
+            if is_registry or is_meta:
+                continue
+            if isinstance(node, ast.Constant) and \
+                    isinstance(node.value, str):
+                for name in NAME_RE.findall(node.value):
+                    referenced.setdefault(name, (sf.rel, node.lineno))
+                    if name not in registered:
+                        out.append(Violation(
+                            CHECK, sf.rel, node.lineno,
+                            f"{name} is not registered in repro/knobs.py — "
+                            f"a typo'd knob reads as unset forever"))
+
+    docs = _doc_names(project, docs_rel)
+    for name, line in sorted(registered.items()):
+        if docs and name not in docs:
+            out.append(Violation(
+                CHECK, KNOBS_REL, line,
+                f"{name} is registered but missing from the {docs_rel} "
+                f"knob table"))
+        if name not in referenced:
+            out.append(Violation(
+                CHECK, KNOBS_REL, line,
+                f"{name} is registered but nothing reads it — dead knob"))
+    if docs:
+        for name in sorted(docs - set(registered)):
+            out.append(Violation(
+                CHECK, docs_rel, 1,
+                f"{name} appears in {docs_rel} but is not registered in "
+                f"repro/knobs.py"))
+    return out

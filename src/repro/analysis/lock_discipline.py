@@ -1,0 +1,200 @@
+"""lock-discipline: guarded-by annotations are enforced, not aspirational.
+
+Annotate the attribute's assignment site (normally in ``__init__``)::
+
+    self._entries = {}          # guarded-by: _lock
+    self.columns = {}           # guarded-by: _write_lock (writes)
+
+and from then on every ``self._entries`` access anywhere in the class must
+sit inside a ``with self._lock:`` block.  ``(writes)`` restricts the rule
+to mutations (Store/Del/AugStore and ``self.attr[...] = ...`` /
+``self.attr.append(...)``-style mutation through a subscript store) for
+attrs whose unlocked reads are by design (e.g. snapshot paths that
+tolerate torn reads).
+
+Extras that match how this codebase actually locks:
+
+  * ``self._wakeup = threading.Condition(self._lock)`` is auto-detected as
+    an alias — holding ``_wakeup`` counts as holding ``_lock``.
+  * A comma list (``# guarded-by: _lock, _write_lock``) means any one of
+    the named locks satisfies the guard.
+  * A ``# guarded-by: _lock`` comment on a ``def`` line marks a private
+    method whose callers hold the lock; its whole body is treated as
+    lock-held.  ``__init__`` is exempt (construction happens-before
+    publication).
+  * Nested functions (closures, thread targets) do NOT inherit the
+    enclosing lock state: they may run after the block exits.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Optional, Set
+
+from .base import Project, SourceFile, Violation
+
+CHECK = "lock-discipline"
+
+GUARDED_RE = re.compile(
+    r"#\s*guarded-by:\s*([A-Za-z_][A-Za-z0-9_]*(?:\s*,\s*"
+    r"[A-Za-z_][A-Za-z0-9_]*)*)\s*(\(writes\))?")
+
+
+@dataclass
+class Guard:
+    locks: FrozenSet[str]
+    writes_only: bool
+    decl_line: int
+
+
+@dataclass
+class ClassSpec:
+    guards: Dict[str, Guard] = field(default_factory=dict)
+    aliases: Dict[str, str] = field(default_factory=dict)  # wrapper -> lock
+
+    @property
+    def lock_names(self) -> Set[str]:
+        names = set(self.aliases)
+        for g in self.guards.values():
+            names |= g.locks
+        return names
+
+
+def _line_guard(sf: SourceFile, line: int) -> Optional[re.Match]:
+    comment = sf.comments.get(line)
+    return GUARDED_RE.search(comment) if comment else None
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name) and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _collect_spec(sf: SourceFile, cls: ast.ClassDef) -> ClassSpec:
+    spec = ClassSpec()
+    for node in ast.walk(cls):
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            attrs = [a for a in map(_self_attr, targets) if a]
+            if not attrs:
+                continue
+            m = _line_guard(sf, node.lineno)
+            if m:
+                locks = frozenset(s.strip() for s in m.group(1).split(","))
+                for attr in attrs:
+                    spec.guards[attr] = Guard(locks, bool(m.group(2)),
+                                              node.lineno)
+            # self._wakeup = threading.Condition(self._lock): alias detect
+            value = getattr(node, "value", None)
+            if (isinstance(value, ast.Call)
+                    and isinstance(value.func, ast.Attribute)
+                    and value.func.attr == "Condition" and value.args):
+                inner = _self_attr(value.args[0])
+                if inner:
+                    for attr in attrs:
+                        spec.aliases[attr] = inner
+    return spec
+
+
+class _MethodVisitor(ast.NodeVisitor):
+    """Walk one method body tracking the set of held locks."""
+
+    def __init__(self, sf: SourceFile, spec: ClassSpec, method: str,
+                 held: Set[str], out: List[Violation]):
+        self.sf = sf
+        self.spec = spec
+        self.method = method
+        self.held = set(held)
+        self.out = out
+
+    def _expanded_held(self) -> Set[str]:
+        held = set(self.held)
+        held |= {self.spec.aliases[h] for h in self.held
+                 if h in self.spec.aliases}
+        return held
+
+    def visit_With(self, node: ast.With) -> None:
+        acquired = []
+        for item in node.items:
+            attr = _self_attr(item.context_expr)
+            if attr and attr in self.spec.lock_names:
+                acquired.append(attr)
+        self.held |= set(acquired)
+        for stmt in node.body:
+            self.visit(stmt)
+        self.held -= set(acquired)
+        # re-visit the context expressions themselves (lock attrs are not
+        # guarded, but a guarded attr could appear in an `as` clause)
+        for item in node.items:
+            if item.optional_vars is not None:
+                self.visit(item.optional_vars)
+
+    def _visit_nested_def(self, node) -> None:
+        # closures / thread targets may outlive the lock scope: reset held
+        m = _line_guard(self.sf, node.lineno)
+        held = (set(s.strip() for s in m.group(1).split(",")) if m else set())
+        sub = _MethodVisitor(self.sf, self.spec, f"{self.method}.{node.name}",
+                             held, self.out)
+        for stmt in node.body:
+            sub.visit(stmt)
+
+    visit_FunctionDef = _visit_nested_def
+    visit_AsyncFunctionDef = _visit_nested_def
+
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        attr = _self_attr(node)
+        guard = self.spec.guards.get(attr) if attr else None
+        if guard is not None and node.lineno != guard.decl_line:
+            is_write = isinstance(node.ctx, (ast.Store, ast.Del))
+            if not (guard.writes_only and not is_write and not self._mutates(node)):
+                if not (guard.locks & self._expanded_held()):
+                    want = " or ".join(f"self.{l}" for l in sorted(guard.locks))
+                    self.out.append(Violation(
+                        CHECK, self.sf.rel, node.lineno,
+                        f"self.{attr} accessed in {self.method}() outside "
+                        f"`with {want}` (guarded-by annotation at line "
+                        f"{guard.decl_line})"))
+        self.generic_visit(node)
+
+    def _mutates(self, node: ast.Attribute) -> bool:
+        """True for `self.attr[...] = v` / `del self.attr[...]` — the attr
+        itself is ctx=Load but the container is being mutated."""
+        parent = getattr(node, "_parent", None)
+        return (isinstance(parent, ast.Subscript)
+                and isinstance(parent.ctx, (ast.Store, ast.Del)))
+
+
+def _link_parents(tree: ast.AST) -> None:
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._parent = node
+
+
+def check(project: Project) -> List[Violation]:
+    out: List[Violation] = []
+    for sf in project.files("src/"):
+        if "# guarded-by:" not in sf.text:
+            continue
+        _link_parents(sf.tree)
+        for cls in [n for n in ast.walk(sf.tree)
+                    if isinstance(n, ast.ClassDef)]:
+            spec = _collect_spec(sf, cls)
+            if not spec.guards:
+                continue
+            for item in cls.body:
+                if not isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if item.name == "__init__":
+                    continue
+                m = _line_guard(sf, item.lineno)
+                held = (set(s.strip() for s in m.group(1).split(","))
+                        if m else set())
+                visitor = _MethodVisitor(sf, spec, item.name, held, out)
+                for stmt in item.body:
+                    visitor.visit(stmt)
+    return out

@@ -1,0 +1,59 @@
+"""Checker orchestration: run, apply pragmas, summarise.
+
+`run_all` / `run` return a result dict per checker::
+
+    {"lock-discipline": {"violations": [...], "allowed": [...]}, ...}
+
+plus a synthetic ``pragma`` entry for malformed/unknown allow-pragmas —
+a reason-less pragma is itself a finding, never a suppression.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional
+
+from . import (host_sync, instrument_drift, kernel_contract, knob_registry,
+               lock_discipline)
+from .base import (Project, Violation, apply_pragmas, bare_pragma_violations)
+
+CHECKERS = {
+    lock_discipline.CHECK: lock_discipline.check,
+    kernel_contract.CHECK: kernel_contract.check,
+    host_sync.CHECK: host_sync.check,
+    knob_registry.CHECK: knob_registry.check,
+    instrument_drift.CHECK: instrument_drift.check,
+}
+
+DEFAULT_ROOTS = ("src", "scripts", "benchmarks")
+
+
+def run(project: Project,
+        select: Optional[Iterable[str]] = None) -> Dict[str, dict]:
+    ids = list(select) if select else list(CHECKERS)
+    unknown = [i for i in ids if i not in CHECKERS]
+    if unknown:
+        raise KeyError(f"unknown checker(s) {unknown}; "
+                       f"have {sorted(CHECKERS)}")
+    results: Dict[str, dict] = {}
+    for check_id in ids:
+        raw = CHECKERS[check_id](project)
+        unallowed, allowed = apply_pragmas(project, raw)
+        results[check_id] = {"violations": unallowed, "allowed": allowed}
+    results["pragma"] = {
+        "violations": bare_pragma_violations(project, CHECKERS),
+        "allowed": [],
+    }
+    return results
+
+
+def run_all(root: Path,
+            roots: Iterable[str] = DEFAULT_ROOTS,
+            select: Optional[Iterable[str]] = None) -> Dict[str, dict]:
+    return run(Project(Path(root), roots), select)
+
+
+def total_unallowed(results: Dict[str, dict]) -> List[Violation]:
+    out: List[Violation] = []
+    for res in results.values():
+        out.extend(res["violations"])
+    return out

@@ -262,10 +262,11 @@ class AqpSession:
         self._auto_flush = auto_flush
         self._lock = threading.RLock()
         self._wakeup = threading.Condition(self._lock)
-        self._queue = AdmissionQueue()
-        self._fitting: set = set()          # BucketKeys with a fit in flight
-        self._closed = False
-        self._thread: Optional[threading.Thread] = None
+        self._queue = AdmissionQueue()      # guarded-by: _lock
+        # BucketKeys with a fit in flight
+        self._fitting: set = set()          # guarded-by: _lock
+        self._closed = False                # guarded-by: _lock
+        self._thread: Optional[threading.Thread] = None  # guarded-by: _lock
         store = engine.store
         # Counters live in the store's metrics registry, labelled with this
         # session's id — NOT on the session object.  The registry outlives
@@ -541,7 +542,7 @@ class AqpSession:
     # unblocks them promptly.
     _BLOCK_TICK = 0.05
 
-    def _admit(self, n_parts: int) -> None:
+    def _admit(self, n_parts: int) -> None:  # guarded-by: _lock
         """Enforce the max_pending bound (lock held).  A ticket whose parts
         alone exceed the bound is admitted once the queue is empty — refusing
         it forever (shed) or parking it forever (block) would deadlock wide
@@ -549,7 +550,7 @@ class AqpSession:
         if self.max_pending is None:
             return
 
-        def over() -> bool:
+        def over() -> bool:  # guarded-by: _lock
             return (self._queue.depth > 0
                     and self._queue.depth + n_parts > self.max_pending)
 
@@ -568,7 +569,7 @@ class AqpSession:
                     "AqpSession closed while submit was blocked on "
                     "max_pending")
 
-    def _start_flusher(self) -> None:
+    def _start_flusher(self) -> None:  # guarded-by: _lock
         self._thread = threading.Thread(
             target=AqpSession._flusher_main, args=(weakref.ref(self),),
             name="aqp-admission-flusher", daemon=True)

@@ -66,8 +66,12 @@ WIDE = 1e30          # "unconstrained axis": Phi saturates to {0,1}, phi to 0
 # below the crossover the exact pass is already cheap and the RFF fit would
 # never amortize.
 KDE_BACKENDS = ("auto", "exact", "rff")
-KDE_CROSSOVER = env_int("REPRO_KDE_CROSSOVER", 16384)
-DEFAULT_RFF_FEATURES = env_int("REPRO_RFF_FEATURES", 2048)
+# Module constants are the *defaults*; the env knobs are re-read per call
+# (an import-time env_int froze them before a late env change could move
+# them — the same bug PR 9 fixed for kernel tiles).  Tests monkeypatch the
+# constants; the env vars still win when set.
+KDE_CROSSOVER = 16384
+DEFAULT_RFF_FEATURES = 2048
 # one-shot empirical accuracy gate at fit time: mean relative density error
 # on probe points from the fitted sample; above tolerance the synopsis is
 # marked degraded and the group falls back to the exact pass (counted)
@@ -75,11 +79,19 @@ RFF_GATE_PROBES = 32
 RFF_GATE_TOL = 0.15
 
 
+def _kde_crossover() -> int:
+    return env_int("REPRO_KDE_CROSSOVER", KDE_CROSSOVER)
+
+
+def _rff_features() -> int:
+    return env_int("REPRO_RFF_FEATURES", DEFAULT_RFF_FEATURES)
+
+
 def _resolve_kde_backend(requested: Optional[str], default: str,
                          n: int) -> str:
     name = requested or default or "auto"
     if name == "auto":
-        return "rff" if n >= KDE_CROSSOVER else "exact"
+        return "rff" if n >= _kde_crossover() else "exact"
     return name
 
 
@@ -592,7 +604,8 @@ class _StoreResolver:
         syn = plan.syn
         if syn.H is None:
             return None
-        ckey = _rff_cache_key(_tier_key(col, tier), DEFAULT_RFF_FEATURES)
+        n_features = _rff_features()
+        ckey = _rff_cache_key(_tier_key(col, tier), n_features)
         cache = getattr(self.store, "cache", None)
         metrics = getattr(self.store, "metrics", None)
         if cache is not None:
@@ -609,9 +622,9 @@ class _StoreResolver:
         seed = zlib.crc32(repr((ckey, sel)).encode()) & 0x7FFFFFFF
         t_fit = time.perf_counter()
         with obs.span("synopsis.fit", backend="rff", n=int(x.shape[0]),
-                      n_features=DEFAULT_RFF_FEATURES):
+                      n_features=n_features):
             rff = RFFSynopsis.fit(x, syn.H,
-                                  n_features=DEFAULT_RFF_FEATURES, seed=seed)
+                                  n_features=n_features, seed=seed)
             # one-shot gate: mean relative density error on probe points
             # drawn from the fitted sample itself (where the mass is)
             from .kde import kde_eval_H

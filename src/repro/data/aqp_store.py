@@ -866,13 +866,13 @@ class SynopsisCache:
                  metrics: Optional[obs.MetricsRegistry] = None):
         self.max_entries = max_entries
         self.max_bytes = max_bytes
-        self._entries: "OrderedDict[Tuple[Hashable, str], Tuple[int, KDESynopsis, int]]" = \
-            OrderedDict()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.oversize = 0      # entries refused because nbytes > max_bytes
-        self._bytes = 0
+        # (column-or-tuple, selector) -> (version, synopsis, nbytes)
+        self._entries: OrderedDict = OrderedDict()  # guarded-by: _lock
+        self.hits = 0          # guarded-by: _lock
+        self.misses = 0        # guarded-by: _lock
+        self.evictions = 0     # guarded-by: _lock
+        self.oversize = 0      # guarded-by: _lock
+        self._bytes = 0        # guarded-by: _lock
         self._lock = threading.Lock()
         # registry mirror (always-on when a registry is supplied — one lock +
         # add per event): instruments resolved once here, not per lookup
@@ -979,9 +979,13 @@ class TelemetryStore:
     def __init__(self, capacity: int = 4096, seed: int = 0,
                  cache_entries: int = 128, cache_bytes: Optional[int] = None,
                  metrics: Optional[obs.MetricsRegistry] = None):
-        self.columns: Dict[str, Reservoir] = {}
-        self.joints: Dict[Tuple[str, ...], MultiReservoir] = {}
-        self.categoricals: Dict[str, CategoricalSketch] = {}
+        # the three registries allow unlocked reads by design (query paths
+        # tolerate a stale view; reservoirs are internally consistent), but
+        # every *mutation* must hold _write_lock so snapshots (to_state) and
+        # concurrent track_*/add_batch calls cannot interleave
+        self.columns: Dict[str, Reservoir] = {}         # guarded-by: _write_lock (writes)
+        self.joints: Dict[Tuple[str, ...], MultiReservoir] = {}  # guarded-by: _write_lock (writes)
+        self.categoricals: Dict[str, CategoricalSketch] = {}  # guarded-by: _write_lock (writes)
         self.capacity = capacity
         self.seed = seed
         # every store owns a MetricsRegistry (or shares an injected one):
@@ -992,12 +996,12 @@ class TelemetryStore:
         self.cache = SynopsisCache(max_entries=cache_entries,
                                    max_bytes=cache_bytes,
                                    metrics=self.metrics)
-        self._listeners: List[Callable[[Dict[ColumnKey, int]], None]] = []
-        self._sessions: List["weakref.ref"] = []
+        self._listeners: List[Callable[[Dict[ColumnKey, int]], None]] = []  # guarded-by: _write_lock
+        self._sessions: List["weakref.ref"] = []        # guarded-by: _write_lock
         # shared engines keyed (selector, backend): query()/session() route
         # through these so PlanCache entries persist across calls and can be
         # checkpointed/restored (warm starts skip replanning)
-        self._engines: Dict[Tuple[str, str], object] = {}
+        self._engines: Dict[Tuple[str, str], object] = {}  # guarded-by: _write_lock (writes)
         # serializes mutation (add_batch/restore_state) against snapshots
         # (to_state): a snapshot taken mid-add_batch could otherwise persist
         # a sketch whose n_rows exceeds its reservoir's n_seen — a restored
@@ -1021,22 +1025,29 @@ class TelemetryStore:
         `backfill=False` to start empty instead.
         """
         key = tuple(columns)
-        if key in self.joints:
-            return
-        res = MultiReservoir(key, self.capacity,
-                             seed=self._col_seed("|".join(key)))
-        if backfill and all(c in self.columns and self.columns[c].n_filled > 0
-                            for c in key):
-            samples = [self.columns[c].sample() for c in key]
-            k = min(s.shape[0] for s in samples)     # zip-aligned window
-            res.add(np.stack([s[:k] for s in samples], axis=1))
-            # The window stands in for the paired stream the per-column
-            # reservoirs summarize, so the joint's stream size is theirs —
-            # not k.  Without this, sample->relation scaling (and weighted
-            # merges) would treat the backfill as a k-row relation.
-            res.n_seen = min(self.columns[c].n_seen for c in key)
-            res.backfilled = True
-        self.joints[key] = res
+        # registration is a write: hold _write_lock for the whole
+        # check-backfill-insert sequence so a concurrent add_batch cannot
+        # advance the per-column reservoirs between the backfill read and
+        # the joint's n_seen stamp (a torn backfill would under-count)
+        with self._write_lock:
+            if key in self.joints:
+                return
+            res = MultiReservoir(key, self.capacity,
+                                 seed=self._col_seed("|".join(key)))
+            if backfill and all(c in self.columns
+                                and self.columns[c].n_filled > 0
+                                for c in key):
+                samples = [self.columns[c].sample() for c in key]
+                k = min(s.shape[0] for s in samples)  # zip-aligned window
+                res.add(np.stack([s[:k] for s in samples], axis=1))
+                # The window stands in for the paired stream the per-column
+                # reservoirs summarize, so the joint's stream size is theirs
+                # — not k.  Without this, sample->relation scaling (and
+                # weighted merges) would treat the backfill as a k-row
+                # relation.
+                res.n_seen = min(self.columns[c].n_seen for c in key)
+                res.backfilled = True
+            self.joints[key] = res
 
     def track_tiered(self, columns: ColumnKey, n_tiers: int = 4,
                      strat_column: Optional[str] = None,
@@ -1065,17 +1076,21 @@ class TelemetryStore:
             seed = self._col_seed("|".join(name))
             member_cols = name
             strat = strat_column
-        existing = registry.get(name)
-        if isinstance(existing, TieredReservoir):
-            return
-        if existing is not None and existing.n_seen > 0:
-            raise ValueError(f"cannot convert reservoir {name!r} with "
-                             f"{existing.n_seen} rows seen to tiered; "
-                             f"call track_tiered before add_batch")
-        registry[name] = TieredReservoir(
-            self.capacity, n_tiers=n_tiers, seed=seed, columns=member_cols,
-            strat_column=strat, strata_capacity=strata_capacity,
-            max_strata=max_strata)
+        # `registry` aliases self.columns / self.joints: the insert below is
+        # a store mutation and must not interleave with add_batch's
+        # create-if-missing for the same name
+        with self._write_lock:
+            existing = registry.get(name)
+            if isinstance(existing, TieredReservoir):
+                return
+            if existing is not None and existing.n_seen > 0:
+                raise ValueError(f"cannot convert reservoir {name!r} with "
+                                 f"{existing.n_seen} rows seen to tiered; "
+                                 f"call track_tiered before add_batch")
+            registry[name] = TieredReservoir(
+                self.capacity, n_tiers=n_tiers, seed=seed,
+                columns=member_cols, strat_column=strat,
+                strata_capacity=strata_capacity, max_strata=max_strata)
 
     def track_categorical(self, column: str, max_codes: int = 4096,
                           kind: str = "exact", width: int = 2048,
@@ -1100,29 +1115,33 @@ class TelemetryStore:
         disable range answers rather than mis-weighting them (see
         `CountMinSketch`); the exact sketch keys codes directly and needs no
         grid."""
-        if column in self.categoricals:
-            return
-        if kind == "exact":
-            if conservative:
-                raise ValueError("conservative update is a count-min mode; "
-                                 "kind='exact' counts are already exact")
-            if (grid_step, grid_origin) != (1.0, 0.0):
-                raise ValueError("grid_step/grid_origin are count-min "
-                                 "parameters; kind='exact' enumerates its "
-                                 "actual codes and needs no grid")
-            self.categoricals[column] = CategoricalSketch(max_codes=max_codes)
-        elif kind == "cm":
-            # seed from the column name alone (NOT the per-host store seed):
-            # cross-host merge adds the counter tables cell-wise, which is
-            # only meaningful when every host hashes codes identically
-            self.categoricals[column] = CountMinSketch(
-                width=width, depth=depth,
-                seed=zlib.crc32(column.encode()) % 1000,
-                conservative=conservative,
-                grid_step=grid_step, grid_origin=grid_origin)
-        else:
-            raise ValueError(f"unknown sketch kind {kind!r}; "
-                             f"expected one of {sorted(_SKETCH_KINDS)}")
+        with self._write_lock:
+            if column in self.categoricals:
+                return
+            if kind == "exact":
+                if conservative:
+                    raise ValueError("conservative update is a count-min "
+                                     "mode; kind='exact' counts are already "
+                                     "exact")
+                if (grid_step, grid_origin) != (1.0, 0.0):
+                    raise ValueError("grid_step/grid_origin are count-min "
+                                     "parameters; kind='exact' enumerates "
+                                     "its actual codes and needs no grid")
+                self.categoricals[column] = CategoricalSketch(
+                    max_codes=max_codes)
+            elif kind == "cm":
+                # seed from the column name alone (NOT the per-host store
+                # seed): cross-host merge adds the counter tables cell-wise,
+                # which is only meaningful when every host hashes codes
+                # identically
+                self.categoricals[column] = CountMinSketch(
+                    width=width, depth=depth,
+                    seed=zlib.crc32(column.encode()) % 1000,
+                    conservative=conservative,
+                    grid_step=grid_step, grid_origin=grid_origin)
+            else:
+                raise ValueError(f"unknown sketch kind {kind!r}; "
+                                 f"expected one of {sorted(_SKETCH_KINDS)}")
 
     def subscribe(self, fn: Callable[[Dict[ColumnKey, int]], None]
                   ) -> Callable[[], None]:
@@ -1130,20 +1149,24 @@ class TelemetryStore:
         `add_batch` with {column-or-joint-tuple: new version} for each bumped
         reservoir.  Returns an unsubscribe callable.  Admission sessions use
         this to re-key in-flight micro-batches to the fresh synopsis."""
-        self._listeners.append(fn)
+        with self._write_lock:
+            self._listeners.append(fn)
 
         def unsubscribe() -> None:
-            try:
-                self._listeners.remove(fn)
-            except ValueError:
-                pass
+            with self._write_lock:
+                try:
+                    self._listeners.remove(fn)
+                except ValueError:
+                    pass
         return unsubscribe
 
     def _register_session(self, session) -> None:
         """Track an admission session (weakly) so `stats()` can aggregate its
         counters; called by AqpSession.__init__."""
-        self._sessions = [r for r in self._sessions if r() is not None]
-        self._sessions.append(weakref.ref(session))
+        with self._write_lock:
+            self._sessions = [r for r in self._sessions
+                              if r() is not None]
+            self._sessions.append(weakref.ref(session))
 
     def add_batch(self, stats: Dict[str, np.ndarray]) -> None:
         # Build joint rows BEFORE mutating any reservoir: a ragged batch must
@@ -1255,11 +1278,14 @@ class TelemetryStore:
         `to_state`/`restore_state`, so a warm-started store replays cached
         plans instead of replanning on its first flush."""
         key = (canonical_selector(selector), backend)
-        eng = self._engines.get(key)
-        if eng is None:
-            eng = self.engine(selector=key[0], backend=backend)
-            self._engines[key] = eng
-        return eng
+        # get-or-create under _write_lock: two racing callers must share one
+        # engine (and one PlanCache), not last-writer-wins two
+        with self._write_lock:
+            eng = self._engines.get(key)
+            if eng is None:
+                eng = self.engine(selector=key[0], backend=backend)
+                self._engines[key] = eng
+            return eng
 
     def session(self, selector: str = "plugin", backend: str = "jnp",
                 **kwargs) -> "AqpSession":
@@ -1347,7 +1373,8 @@ class TelemetryStore:
         monotone regardless of session lifetime; only `sessions` (currently
         registered) and `pending` (live depth gauges) reflect the present.
         """
-        live = [r for r in self._sessions if r() is not None]
+        with self._write_lock:
+            live = [r for r in self._sessions if r() is not None]
         reg = self.metrics
         agg: Dict[str, object] = {"sessions": len(live)}
         for k in ("submitted", "executed", "flushes", "coalesced",

@@ -42,7 +42,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro import obs
+from repro import knobs, obs
 
 from .tuning import env_int, profiled_call, resolve_tile
 
@@ -81,7 +81,7 @@ def reset() -> None:
 
 def _ensure_loaded() -> None:
     global _loaded_from
-    path = os.environ.get("REPRO_TUNING_CACHE", "")
+    path = knobs.get_str("REPRO_TUNING_CACHE")
     with _lock:
         if _loaded_from == path:
             return
@@ -429,7 +429,7 @@ def sweep(kernel: str, shape: Dict[str, int], repeats: int = 3,
     reg.counter("autotune.sweeps", kernel=kernel).inc()
     reg.histogram("autotune.sweep_us", kernel=kernel).observe(
         (time.perf_counter() - t_sweep) * 1e6)
-    path = os.environ.get("REPRO_TUNING_CACHE", "")
+    path = knobs.get_str("REPRO_TUNING_CACHE")
     if persist and path:
         save_cache(path)
     return entry

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from .triangle import bx_to_ql, n_tri_tiles
+from .tuning import resolve_tile
 
 TILE = 256
 
@@ -49,10 +50,18 @@ def _kernel(e_ref, f_ref, m_ref, c_ref, out_ref, *, n: int, k: int):
     out_ref[0] = jnp.sum(jnp.where(mask, t, 0.0))
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def gh_fused_sum(x: jax.Array, h_inv: jax.Array, c_k, c_kk,
-                 tile: int = TILE, interpret: bool = True) -> jax.Array:
-    """sum_{i<j} T_H(x_i - x_j).  x: (n, d), h_inv: (d, d)."""
+                 tile=None, interpret: bool = True) -> jax.Array:
+    """sum_{i<j} T_H(x_i - x_j).  x: (n, d), h_inv: (d, d).
+
+    `tile` resolves at call time: kwarg > REPRO_GH_TILE > module default."""
+    tile = resolve_tile("REPRO_GH_TILE", TILE, tile)
+    return _gh_fused_sum(x, h_inv, c_k, c_kk, tile, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _gh_fused_sum(x: jax.Array, h_inv: jax.Array, c_k, c_kk,
+                  tile: int, interpret: bool) -> jax.Array:
     n, d = x.shape
     k = min(tile, max(8, 1 << (n - 1).bit_length())) if n < tile else tile
     pad = (-n) % k

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tuning import resolve_tile
+
 TILE = 256
 
 
@@ -42,10 +44,19 @@ def _kernel(p_ref, x_ref, h_ref, out_ref, *, n: int, k: int, d: int):
     out_ref[...] += jnp.sum(vals, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def kde_eval(points: jax.Array, x: jax.Array, h: jax.Array,
-             tile: int = TILE, interpret: bool = True) -> jax.Array:
-    """f^(points; x, h).  points: (m, d), x: (n, d) -> (m,)."""
+             tile=None, interpret: bool = True) -> jax.Array:
+    """f^(points; x, h).  points: (m, d), x: (n, d) -> (m,).
+
+    `tile` resolves at call time: kwarg > REPRO_KDE_EVAL_TILE > module
+    default."""
+    tile = resolve_tile("REPRO_KDE_EVAL_TILE", TILE, tile)
+    return _kde_eval(points, x, h, tile, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _kde_eval(points: jax.Array, x: jax.Array, h: jax.Array,
+              tile: int, interpret: bool) -> jax.Array:
     if points.ndim == 1:
         points = points[:, None]
     if x.ndim == 1:

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tuning import resolve_tile
+
 TILE = 256
 H_TILE = 8
 
@@ -44,19 +46,29 @@ def _kernel(s_ref, w_ref, hinv_ref, c_ref, out_ref, *, hk: int):
     out_ref[...] = acc
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "h_tile", "interpret"))
 def lscv_grid_sums(x: jax.Array, sigma_inv: jax.Array, h_grid: jax.Array,
-                   c_k, c_kk, tile: int = TILE, h_tile: int = H_TILE,
+                   c_k, c_kk, tile=None, h_tile=None,
                    interpret: bool = True) -> jax.Array:
     """For each h on the grid: sum_{i<j} T~(x_i - x_j).  Returns (n_h,).
 
     Phase 1 (S precompute) uses the sv_precompute kernel; phase 2 is this one.
-    """
-    from .sv_precompute import sv_matrix
+    Tiles resolve at call time: kwarg > REPRO_LSCV_TILE / REPRO_LSCV_H_TILE >
+    module defaults."""
+    tile = resolve_tile("REPRO_LSCV_TILE", TILE, tile)
+    h_tile = resolve_tile("REPRO_LSCV_H_TILE", H_TILE, h_tile)
+    return _lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile, h_tile,
+                           interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "h_tile", "interpret"))
+def _lscv_grid_sums(x: jax.Array, sigma_inv: jax.Array, h_grid: jax.Array,
+                    c_k, c_kk, tile: int, h_tile: int,
+                    interpret: bool) -> jax.Array:
+    from .sv_precompute import _sv_matrix
 
     n, d = x.shape
     n_h = h_grid.shape[0]
-    s = sv_matrix(x, sigma_inv, tile=tile, interpret=interpret)
+    s = _sv_matrix(x, sigma_inv, tile, "mxu", interpret)
 
     k = min(tile, s.shape[0])
     pad = (-n) % k

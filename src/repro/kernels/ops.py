@@ -40,7 +40,9 @@ INTERPRET = jax.default_backend() != "tpu"
 
 
 def pairwise_scaled_ksum(x, g, kind="k4", tile=None):
-    tile = _pr.TILE if tile is None else int(tile)
+    (tile,) = _tune.resolve(
+        "pairwise_scaled_ksum", {"n": x.shape[0]},
+        tile=(tile, "REPRO_PAIRWISE_TILE", _pr.TILE))
     if not obs.enabled():
         return _pr.pairwise_scaled_ksum(x, g, kind=kind, tile=tile,
                                         interpret=INTERPRET)
@@ -52,7 +54,9 @@ def pairwise_scaled_ksum(x, g, kind="k4", tile=None):
 
 
 def sv_matrix(x, m, tile=None, algorithm="mxu"):
-    tile = _sv.TILE if tile is None else int(tile)
+    (tile,) = _tune.resolve(
+        "sv_matrix", {"n": x.shape[0], "d": x.shape[1] if x.ndim > 1 else 1},
+        tile=(tile, "REPRO_SV_TILE", _sv.TILE))
     if not obs.enabled():
         return _sv.sv_matrix(x, m, tile=tile, algorithm=algorithm,
                              interpret=INTERPRET)
@@ -65,7 +69,9 @@ def sv_matrix(x, m, tile=None, algorithm="mxu"):
 
 
 def gh_fused_sum(x, h_inv, c_k, c_kk, tile=None):
-    tile = _gh.TILE if tile is None else int(tile)
+    (tile,) = _tune.resolve(
+        "gh_fused_sum", {"n": x.shape[0], "d": x.shape[1] if x.ndim > 1 else 1},
+        tile=(tile, "REPRO_GH_TILE", _gh.TILE))
     if not obs.enabled():
         return _gh.gh_fused_sum(x, h_inv, c_k, c_kk, tile=tile,
                                 interpret=INTERPRET)
@@ -77,8 +83,10 @@ def gh_fused_sum(x, h_inv, c_k, c_kk, tile=None):
 
 
 def lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=None, h_tile=None):
-    tile = _lg.TILE if tile is None else int(tile)
-    h_tile = _lg.H_TILE if h_tile is None else int(h_tile)
+    tile, h_tile = _tune.resolve(
+        "lscv_grid_sums", {"n": x.shape[0], "G": h_grid.shape[0]},
+        tile=(tile, "REPRO_LSCV_TILE", _lg.TILE),
+        h_tile=(h_tile, "REPRO_LSCV_H_TILE", _lg.H_TILE))
     if not obs.enabled():
         return _lg.lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=tile,
                                   h_tile=h_tile, interpret=INTERPRET)
@@ -90,7 +98,9 @@ def lscv_grid_sums(x, sigma_inv, h_grid, c_k, c_kk, tile=None, h_tile=None):
 
 
 def kde_eval(points, x, h, tile=None):
-    tile = _kde.TILE if tile is None else int(tile)
+    (tile,) = _tune.resolve(
+        "kde_eval", {"n": x.shape[0], "G": points.shape[0]},
+        tile=(tile, "REPRO_KDE_EVAL_TILE", _kde.TILE))
     if not obs.enabled():
         return _kde.kde_eval(points, x, h, tile=tile, interpret=INTERPRET)
     return profiled_call(

@@ -29,6 +29,7 @@ from jax.experimental import pallas as pl
 
 from repro.core import gaussian as G
 from .triangle import bx_to_ql, n_tri_tiles
+from .tuning import resolve_tile
 
 TILE = 256
 
@@ -49,10 +50,19 @@ def _kernel(e_ref, f_ref, g_ref, out_ref, *, kind: str, n: int, k: int):
     out_ref[0] = jnp.sum(jnp.where(mask, vals, 0.0))
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "tile", "interpret"))
 def pairwise_scaled_ksum(x: jax.Array, g: jax.Array, kind: str = "k4",
-                         tile: int = TILE, interpret: bool = True) -> jax.Array:
-    """sum_{i<j} fun((x_i - x_j)/g) for 1-D x via the triangular tile kernel."""
+                         tile=None, interpret: bool = True) -> jax.Array:
+    """sum_{i<j} fun((x_i - x_j)/g) for 1-D x via the triangular tile kernel.
+
+    `tile` resolves at call time: kwarg > REPRO_PAIRWISE_TILE > module
+    default — never frozen into a function default at import."""
+    tile = resolve_tile("REPRO_PAIRWISE_TILE", TILE, tile)
+    return _pairwise_scaled_ksum(x, g, kind, tile, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "tile", "interpret"))
+def _pairwise_scaled_ksum(x: jax.Array, g: jax.Array, kind: str,
+                          tile: int, interpret: bool) -> jax.Array:
     n = x.shape[0]
     k = min(tile, max(8, 1 << (n - 1).bit_length())) if n < tile else tile
     pad = (-n) % k

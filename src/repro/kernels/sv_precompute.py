@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tuning import resolve_tile
+
 TILE = 256
 
 
@@ -65,10 +67,18 @@ def _kernel(e_ref, f_ref, m_ref, out_ref, *, n: int, k: int, d: int, algorithm: 
     out_ref[...] = jnp.where(mask, y, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "algorithm", "interpret"))
-def sv_matrix(x: jax.Array, m: jax.Array, tile: int = TILE,
+def sv_matrix(x: jax.Array, m: jax.Array, tile=None,
               algorithm: str = "mxu", interpret: bool = True) -> jax.Array:
-    """Dense masked (n, n) matrix of S(v) values. x: (n, d), m: (d, d)."""
+    """Dense masked (n, n) matrix of S(v) values. x: (n, d), m: (d, d).
+
+    `tile` resolves at call time: kwarg > REPRO_SV_TILE > module default."""
+    tile = resolve_tile("REPRO_SV_TILE", TILE, tile)
+    return _sv_matrix(x, m, tile, algorithm, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "algorithm", "interpret"))
+def _sv_matrix(x: jax.Array, m: jax.Array, tile: int,
+               algorithm: str, interpret: bool) -> jax.Array:
     n, d = x.shape
     k = min(tile, max(8, 1 << (n - 1).bit_length())) if n < tile else tile
     pad = (-n) % k

@@ -21,26 +21,18 @@ for exactly the shapes the workload runs instead of sweeping blind.
 """
 from __future__ import annotations
 
-import os
 import time
 from typing import Dict, List, Tuple
 
-from repro import obs
+from repro import knobs, obs
 
 
 def env_int(name: str, default: int) -> int:
     """Positive-int env override with a loud failure on malformed values —
-    a silently ignored typo in a tuning sweep wastes a TPU reservation."""
-    raw = os.environ.get(name)
-    if raw is None or not raw.strip():
-        return default
-    try:
-        value = int(raw)
-    except ValueError:
-        raise ValueError(f"{name} must be a positive integer, got {raw!r}")
-    if value <= 0:
-        raise ValueError(f"{name} must be a positive integer, got {value}")
-    return value
+    a silently ignored typo in a tuning sweep wastes a TPU reservation.
+    Delegates to the central knob registry (`repro.knobs`), so an
+    unregistered name fails loudly too."""
+    return knobs.get_int(name, default)
 
 
 def resolve_tile(env_name: str, default: int, override=None) -> int:

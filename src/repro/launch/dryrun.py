@@ -1,10 +1,11 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the first two lines: jax locks the device count on first init.
-# Tests may shrink the placeholder device count (before jax initialises):
-if os.environ.get("REPRO_DRYRUN_DEVICES"):
-    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
-                               + os.environ["REPRO_DRYRUN_DEVICES"])
+
+from repro import knobs   # stdlib-only import: safe before jax initialises
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + str(knobs.get_int("REPRO_DRYRUN_DEVICES")))
+# ^ MUST run before anything imports jax: it locks the device count on
+# first init.  Tests shrink the placeholder count via REPRO_DRYRUN_DEVICES.
 
 """Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
 on the production meshes and extract memory / cost / roofline artifacts.

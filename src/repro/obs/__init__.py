@@ -31,6 +31,8 @@ import tempfile
 import time
 from typing import Optional, Tuple
 
+from repro import knobs
+
 from .registry import (Counter, Gauge, Histogram, LATENCY_BUCKETS_US,
                        MetricsRegistry)
 from .trace import NOOP_SPAN, Span, Tracer
@@ -41,7 +43,7 @@ __all__ = [
     "export_json", "get_registry", "get_tracer", "set_tracer", "span",
 ]
 
-_enabled = os.environ.get("REPRO_OBS", "") not in ("", "0")
+_enabled = knobs.get_bool("REPRO_OBS")
 _registry = MetricsRegistry()
 _tracer = Tracer()
 

@@ -50,7 +50,7 @@ class Counter:
 
     def __init__(self, value: float = 0.0):
         self._lock = threading.Lock()
-        self._value = value
+        self._value = value    # guarded-by: _lock
 
     def inc(self, n: float = 1) -> None:
         with self._lock:
@@ -70,7 +70,7 @@ class Gauge:
 
     def __init__(self, value: float = 0.0):
         self._lock = threading.Lock()
-        self._value = value
+        self._value = value    # guarded-by: _lock
 
     def set(self, v: float) -> None:
         with self._lock:
@@ -104,24 +104,29 @@ class Histogram:
     __slots__ = ("_lock", "_le", "_counts", "count", "sum", "_min", "_max")
 
     def __init__(self, buckets: Optional[Iterable[float]] = None):
+        # RLock: summary() holds it across its percentile() calls
+        self._lock = threading.RLock()
         self._le = tuple(sorted(buckets)) if buckets is not None \
-            else LATENCY_BUCKETS_US
-        self._lock = threading.Lock()
-        self._counts = [0] * (len(self._le) + 1)   # +1: overflow bucket
-        self.count = 0
-        self.sum = 0.0
-        self._min = float("inf")
-        self._max = float("-inf")
+            else LATENCY_BUCKETS_US                # guarded-by: _lock
+        self._counts = [0] * (len(self._le) + 1)   # guarded-by: _lock
+        self.count = 0                             # guarded-by: _lock
+        self.sum = 0.0                             # guarded-by: _lock
+        self._min = float("inf")                   # guarded-by: _lock
+        self._max = float("-inf")                  # guarded-by: _lock
 
     def observe(self, v: float) -> None:
         v = float(v)
-        # bisect without the import: bucket lists are short (22 entries)
-        i = 0
-        for le in self._le:
-            if v <= le:
-                break
-            i += 1
         with self._lock:
+            # the bucket search must read _le under the lock: _load() can
+            # swap _le/_counts for a restored bucket layout, and an index
+            # computed against the old _le can land out of range (or in the
+            # wrong bucket) of the new _counts
+            # (bisect without the import: bucket lists are short, 22 entries)
+            i = 0
+            for le in self._le:
+                if v <= le:
+                    break
+                i += 1
             self._counts[i] += 1
             self.count += 1
             self.sum += v
@@ -132,7 +137,8 @@ class Histogram:
 
     @property
     def mean(self) -> float:
-        return self.sum / self.count if self.count else 0.0
+        with self._lock:
+            return self.sum / self.count if self.count else 0.0
 
     def percentile(self, p: float) -> float:
         """Interpolated p-quantile (p in [0, 1]) from the bucket counts."""
@@ -154,13 +160,17 @@ class Histogram:
             return self._max
 
     def summary(self) -> Dict[str, float]:
-        return {
-            "count": self.count, "sum": self.sum, "mean": self.mean,
-            "min": self._min if self.count else 0.0,
-            "max": self._max if self.count else 0.0,
-            "p50": self.percentile(0.50), "p95": self.percentile(0.95),
-            "p99": self.percentile(0.99),
-        }
+        # one lock scope for the whole row (the lock is re-entrant, so the
+        # nested percentile() calls are fine): a concurrent observe cannot
+        # produce a summary whose count and percentiles disagree
+        with self._lock:
+            return {
+                "count": self.count, "sum": self.sum, "mean": self.mean,
+                "min": self._min if self.count else 0.0,
+                "max": self._max if self.count else 0.0,
+                "p50": self.percentile(0.50), "p95": self.percentile(0.95),
+                "p99": self.percentile(0.99),
+            }
 
     def _dump(self) -> Dict[str, object]:
         with self._lock:
@@ -190,10 +200,12 @@ class MetricsRegistry:
 
     def __init__(self):
         self._lock = threading.Lock()
-        # name -> {label key -> instrument}; kinds tracked to catch clashes
-        self._counters: Dict[str, Dict[LabelKey, Counter]] = {}
-        self._gauges: Dict[str, Dict[LabelKey, Gauge]] = {}
-        self._histograms: Dict[str, Dict[LabelKey, Histogram]] = {}
+        # name -> {label key -> instrument}.  (writes): the table attributes
+        # are never rebound after __init__; readers only pass the reference
+        # into _get/_collect, which do all dict mutation under the lock.
+        self._counters: Dict[str, Dict[LabelKey, Counter]] = {}      # guarded-by: _lock (writes)
+        self._gauges: Dict[str, Dict[LabelKey, Gauge]] = {}          # guarded-by: _lock (writes)
+        self._histograms: Dict[str, Dict[LabelKey, Histogram]] = {}  # guarded-by: _lock (writes)
 
     def _get(self, table, name: str, labels: Dict[str, object], factory):
         key = _label_key(labels)

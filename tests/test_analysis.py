@@ -1,0 +1,677 @@
+"""The static-check suite checks itself: per-checker fixture corpora (bad
+code flagged, good code silent, pragma'd code counted as allowed), pragma
+hygiene, the knob registry's typed accessors, the check.py CLI contract,
+the repo-wide zero-violation gate, and an 8-thread stress test asserting
+the guarded-by annotations on TelemetryStore match its actual runtime
+behaviour under concurrent ingest + snapshot + query traffic."""
+import json
+import subprocess
+import sys
+import textwrap
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro import knobs
+from repro.analysis import (CHECKERS, Project, host_sync, instrument_drift,
+                            kernel_contract, knob_registry, lock_discipline,
+                            run, run_all, runner)
+from repro.core import AqpQuery, Range
+from repro.data import TelemetryStore
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def make_project(tmp_path, files, roots=("src",)):
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text), encoding="utf-8")
+    return Project(tmp_path, roots)
+
+
+def messages(violations):
+    return [v.message for v in violations]
+
+
+# --- lock-discipline ---------------------------------------------------------
+
+BAD_LOCKS = """\
+    import threading
+
+    class C:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.items = []            # guarded-by: _lock
+            self.totals = {}           # guarded-by: _lock (writes)
+
+        def bad_read(self):
+            return len(self.items)
+
+        def bad_write(self):
+            self.totals["x"] = 1
+
+        def bad_closure(self):
+            with self._lock:
+                def peek():
+                    return self.items[0]
+                return peek
+"""
+
+
+def test_lock_discipline_flags_unlocked_access(tmp_path):
+    project = make_project(tmp_path, {"src/repro/c.py": BAD_LOCKS})
+    out = lock_discipline.check(project)
+    msgs = "\n".join(messages(out))
+    assert len(out) == 3
+    assert "self.items accessed in bad_read()" in msgs
+    assert "self.totals accessed in bad_write()" in msgs
+    # the closure may outlive the with-block: held locks do not leak in
+    assert "self.items accessed in bad_closure.peek()" in msgs
+
+
+def test_lock_discipline_good_patterns_are_silent(tmp_path):
+    project = make_project(tmp_path, {"src/repro/c.py": """\
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self._cv = threading.Condition(self._lock)
+                self.items = []            # guarded-by: _lock
+                self.totals = {}           # guarded-by: _lock (writes)
+
+            def locked(self):
+                with self._lock:
+                    self.items.append(1)
+
+            def via_condition_alias(self):
+                with self._cv:
+                    self.items.append(2)
+
+            def unlocked_read_of_writes_only(self):
+                return dict(self.totals)
+
+            def _drain(self):  # guarded-by: _lock
+                self.items.clear()
+                self.totals["n"] = 0
+    """})
+    assert lock_discipline.check(project) == []
+
+
+def test_lock_discipline_pragma_moves_to_allowed(tmp_path):
+    project = make_project(tmp_path, {"src/repro/c.py": """\
+        import threading
+
+        class C:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.items = []            # guarded-by: _lock
+
+            def startup_peek(self):
+                return len(self.items)  # repro: allow[lock-discipline] pre-thread startup read
+    """})
+    res = run(project, select=["lock-discipline"])["lock-discipline"]
+    assert res["violations"] == []
+    assert len(res["allowed"]) == 1
+    assert res["allowed"][0].reason == "pre-thread startup read"
+
+
+# --- kernel-contract ---------------------------------------------------------
+
+BAD_KERNEL = """\
+    import numpy as np
+    from jax.experimental import pallas as pl
+
+    TILE = 256
+
+    def _kern(x_ref, o_ref):
+        t = x_ref[...].astype("float64")
+        o_ref[...] = t + np.random.rand()
+
+    def my_op(x, tile=TILE):
+        return pl.pallas_call(_kern)(x)
+"""
+
+
+def test_kernel_contract_flags_bad_module(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/kernels/mymod.py": BAD_KERNEL,
+        "src/repro/kernels/ops.py": "",
+        "src/repro/kernels/ref.py": "",
+    })
+    msgs = "\n".join(messages(kernel_contract.check(project)))
+    assert "no pure-JAX oracle in kernels/ref.py" in msgs
+    assert "no wrapper in kernels/ops.py" in msgs
+    assert "defaults tile=TILE at import time" in msgs
+    assert "never calls tuning.resolve_tile" in msgs
+    assert '"float64" dtype string in kernel body _kern()' in msgs
+    assert "nondeterministic call np.random.rand()" in msgs
+
+
+def test_kernel_contract_good_module_is_silent(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/kernels/mymod.py": """\
+            from jax.experimental import pallas as pl
+            from .tuning import resolve_tile
+
+            TILE = 256
+
+            def _kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...] * 2.0
+
+            def my_op(x, tile=None):
+                tile = resolve_tile("REPRO_X_TILE", TILE, tile)
+                return pl.pallas_call(_kern)(x)
+        """,
+        "src/repro/kernels/ops.py": """\
+            def my_op(x, tile=None):
+                return None
+        """,
+        "src/repro/kernels/ref.py": """\
+            def my_op(x):
+                return x * 2.0
+        """,
+    })
+    assert kernel_contract.check(project) == []
+
+
+def test_kernel_contract_pragma_suppresses(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/kernels/mymod.py": """\
+            from jax.experimental import pallas as pl
+            from .tuning import resolve_tile
+
+            def _kern(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            # repro: allow[kernel-contract] internal probe op, engine never imports it
+            def probe_op(x, tile=None):
+                tile = resolve_tile("REPRO_X_TILE", 256, tile)
+                return pl.pallas_call(_kern)(x)
+        """,
+        "src/repro/kernels/ops.py": "",
+        "src/repro/kernels/ref.py": "",
+    })
+    res = run(project, select=["kernel-contract"])["kernel-contract"]
+    assert res["violations"] == []
+    assert len(res["allowed"]) == 2  # missing oracle + missing wrapper
+
+
+# --- host-sync ---------------------------------------------------------------
+
+BAD_SYNC = """\
+    import jax
+    import numpy as np
+
+    def scalar(x):
+        return x.item()
+
+    def wait(x):
+        return jax.block_until_ready(x)
+
+    def make_fn(f):
+        return jax.jit(f)
+
+    @jax.jit
+    def traced(x):
+        return float(x)
+
+    def drain(batches):
+        out = []
+        for b in batches:
+            y = kde_eval(b, b, 0.5)
+            out.append(float(y))
+        return out
+"""
+
+
+def test_host_sync_flags_hot_file(tmp_path):
+    project = make_project(tmp_path,
+                           {"src/repro/kernels/hot.py": BAD_SYNC})
+    msgs = "\n".join(messages(host_sync.check(project)))
+    assert ".item() synchronises the device" in msgs
+    assert "block_until_ready outside obs.fence()" in msgs
+    assert "jax.jit() inside make_fn()" in msgs
+    assert "float() inside traced function traced()" in msgs
+    assert "converts to host every iteration" in msgs
+
+
+def test_host_sync_cold_files_and_clean_hot_files_silent(tmp_path):
+    project = make_project(tmp_path, {
+        # cold module: .item() is fine on a summary/CLI path
+        "src/repro/launch/report.py": """\
+            def summarise(x):
+                return x.item()
+        """,
+        # hot module doing it right: convert at the boundary, un-jitted
+        "src/repro/kernels/hot.py": """\
+            import numpy as np
+
+            def boundary(xs):
+                ys = [kde_eval(b, b, 0.5) for b in xs]
+                return np.asarray(ys)
+        """,
+    })
+    assert host_sync.check(project) == []
+
+
+def test_host_sync_pragma_suppresses(tmp_path):
+    project = make_project(tmp_path, {"src/repro/kernels/hot.py": """\
+        def scalar(x):
+            return x.item()  # repro: allow[host-sync] error path, already cold
+    """})
+    res = run(project, select=["host-sync"])["host-sync"]
+    assert res["violations"] == []
+    assert len(res["allowed"]) == 1
+
+
+# --- knob-registry -----------------------------------------------------------
+
+def test_knob_registry_flags_drift(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/knobs.py": """\
+            KNOBS = {}
+
+            def register(name, type, default, doc):
+                KNOBS[name] = (type, default, doc)
+
+            register("REPRO_ALPHA", "int", 1, "alpha")
+            register("REPRO_DEAD", "int", 1, "nothing reads this")
+        """,
+        "src/repro/foo.py": """\
+            import os
+
+            def f():
+                a = os.environ.get("REPRO_ALPHA")
+                b = os.environ["REPRO_BETA"]
+                return a, b, "REPRO_TYPO"
+        """,
+        "docs/analysis.md": "| REPRO_ALPHA | REPRO_DEAD | REPRO_GHOST |\n",
+    })
+    out = knob_registry.check(project)
+    msgs = "\n".join(messages(out))
+    assert len(out) == 6
+    assert "raw environ read of REPRO_ALPHA" in msgs
+    assert "raw environ read of REPRO_BETA" in msgs
+    assert "REPRO_BETA is not registered" in msgs
+    assert "REPRO_TYPO is not registered" in msgs
+    assert "REPRO_DEAD is registered but nothing reads it" in msgs
+    assert "REPRO_GHOST appears in docs/analysis.md" in msgs
+
+
+def test_knob_registry_good_tree_is_silent(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/knobs.py": """\
+            KNOBS = {}
+
+            def register(name, type, default, doc):
+                KNOBS[name] = (type, default, doc)
+
+            register("REPRO_ALPHA", "int", 1, "alpha")
+        """,
+        "src/repro/foo.py": """\
+            from repro import knobs
+
+            def f():
+                return knobs.get_int("REPRO_ALPHA")
+        """,
+        "docs/analysis.md": "| `REPRO_ALPHA` | int | 1 | alpha |\n",
+    })
+    assert knob_registry.check(project) == []
+
+
+def test_knob_registry_pragma_suppresses_raw_read(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/knobs.py": """\
+            def register(name, type, default, doc):
+                pass
+
+            register("REPRO_ALPHA", "int", 1, "alpha")
+        """,
+        "src/repro/foo.py": """\
+            import os
+
+            def f():
+                return os.environ.get("REPRO_ALPHA")  # repro: allow[knob-registry] pre-import bootstrap read
+        """,
+        "docs/analysis.md": "REPRO_ALPHA\n",
+    })
+    res = run(project, select=["knob-registry"])["knob-registry"]
+    assert res["violations"] == []
+    assert len(res["allowed"]) == 1
+
+
+# --- instrument-drift --------------------------------------------------------
+
+DRIFT_DOCS = """\
+    ## Metric catalogue
+
+    | name | kind |
+    |---|---|
+    | `aqp.test.hits` | counter |
+    | `aqp.test.ghost` | counter |
+
+    ## Spans
+
+    | span | labels |
+    |---|---|
+    | `engine.real` | |
+"""
+
+
+def test_instrument_drift_flags_both_directions(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/core/emit.py": """\
+            def record(metrics, obs, name):
+                metrics.counter("aqp.test.hits").inc()
+                metrics.gauge(name).set(1)
+                with obs.span("engine.mystery"):
+                    pass
+        """,
+        "docs/observability.md": DRIFT_DOCS,
+        "scripts/validate_metrics.py": """\
+            REQUIRED = ["aqp.phantom.total"]
+        """,
+    }, roots=("src",))
+    out = instrument_drift.check(project)
+    msgs = "\n".join(messages(out))
+    assert len(out) == 5
+    assert ".gauge(<dynamic name>)" in msgs
+    assert "span `engine.mystery` is emitted but missing" in msgs
+    assert "metric `aqp.test.ghost` is documented but nothing emits it" in msgs
+    assert "span `engine.real` is documented but nothing opens it" in msgs
+    assert "validator references `aqp.phantom.total`" in msgs
+
+
+def test_instrument_drift_matching_catalogue_is_silent(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/core/emit.py": """\
+            def record(metrics, obs):
+                metrics.counter("aqp.test.hits").inc()
+                with obs.span("engine.real"):
+                    pass
+        """,
+        "docs/observability.md": """\
+            ## Metric catalogue
+
+            | `aqp.test.hits` | counter |
+
+            ## Spans
+
+            | `engine.real` | |
+        """,
+        "scripts/validate_metrics.py": """\
+            REQUIRED = ["aqp.test.hits"]
+        """,
+    })
+    assert instrument_drift.check(project) == []
+
+
+def test_instrument_drift_pragma_allows_dynamic_name(tmp_path):
+    project = make_project(tmp_path, {
+        "src/repro/core/emit.py": """\
+            def record(metrics, name):
+                metrics.counter(name).inc()  # repro: allow[instrument-drift] per-plugin counter family
+        """,
+        "docs/observability.md": "## Metric catalogue\n",
+    })
+    res = run(project, select=["instrument-drift"])["instrument-drift"]
+    assert res["violations"] == []
+    assert len(res["allowed"]) == 1
+
+
+# --- pragma hygiene ----------------------------------------------------------
+
+def test_reasonless_and_unknown_pragmas_are_findings(tmp_path):
+    project = make_project(tmp_path, {"src/repro/c.py": """\
+        X = 1  # repro: allow[host-sync]
+        Y = 2  # repro: allow[bogus-check] some reason
+    """})
+    out = run(project)["pragma"]["violations"]
+    msgs = "\n".join(messages(out))
+    assert len(out) == 2
+    assert "has no reason" in msgs
+    assert "allow[bogus-check] names no known checker" in msgs
+
+
+def test_docstring_pragma_examples_are_not_pragmas(tmp_path):
+    project = make_project(tmp_path, {"src/repro/c.py": '''\
+        """Docs showing the syntax: # repro: allow[host-sync] why"""
+        X = 1
+    '''})
+    assert run(project)["pragma"]["violations"] == []
+    assert project.get("src/repro/c.py").pragmas == []
+
+
+def test_runner_rejects_unknown_checker(tmp_path):
+    project = make_project(tmp_path, {"src/repro/c.py": "X = 1\n"})
+    with pytest.raises(KeyError, match="unknown checker"):
+        run(project, select=["no-such-check"])
+
+
+# --- the repo-wide gate ------------------------------------------------------
+
+def test_repo_is_clean():
+    """The actual tree carries zero unallowed violations — the same gate CI
+    applies via scripts/check.py --all."""
+    results = run_all(REPO)
+    bad = [v for res in results.values() for v in res["violations"]]
+    assert not bad, "unallowed violations:\n" + "\n".join(
+        v.format() for v in bad)
+
+
+def test_every_checker_is_registered():
+    assert set(CHECKERS) == {"lock-discipline", "kernel-contract",
+                             "host-sync", "knob-registry",
+                             "instrument-drift"}
+    assert runner.DEFAULT_ROOTS == ("src", "scripts", "benchmarks")
+
+
+# --- check.py CLI contract ---------------------------------------------------
+
+def _run_cli(*argv):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check.py"), *argv],
+        capture_output=True, text=True, cwd=str(REPO))
+
+
+def test_cli_all_json_exits_zero_on_clean_tree():
+    proc = _run_cli("--all", "--json")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    doc = json.loads(proc.stdout)
+    assert set(doc) == set(CHECKERS) | {"pragma"}
+    assert all(res["violations"] == [] for res in doc.values())
+
+
+def test_cli_select_and_summary_lines():
+    proc = _run_cli("--select", "host-sync,knob-registry")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "host-sync" in proc.stdout
+    assert "knob-registry" in proc.stdout
+    assert "lock-discipline" not in proc.stdout
+    assert "0 unallowed violations" in proc.stdout
+
+
+def test_cli_unknown_checker_is_usage_error():
+    proc = _run_cli("--select", "no-such-check")
+    assert proc.returncode == 2
+    assert "unknown checker" in proc.stderr
+
+
+def test_cli_nonzero_on_violation(tmp_path):
+    (tmp_path / "src" / "repro" / "kernels").mkdir(parents=True)
+    (tmp_path / "src" / "repro" / "kernels" / "hot.py").write_text(
+        "def f(x):\n    return x.item()\n")
+    proc = _run_cli("--select", "host-sync", "--root", str(tmp_path))
+    assert proc.returncode == 1
+    assert ".item() synchronises the device" in proc.stdout
+
+
+# --- repro.knobs typed accessors ---------------------------------------------
+
+def test_get_int_default_env_and_override(monkeypatch):
+    monkeypatch.delenv("REPRO_KDE_CHUNK", raising=False)
+    assert knobs.get_int("REPRO_KDE_CHUNK") == 256
+    assert knobs.get_int("REPRO_KDE_CHUNK", default=77) == 77
+    monkeypatch.setenv("REPRO_KDE_CHUNK", "64")
+    assert knobs.get_int("REPRO_KDE_CHUNK") == 64
+    assert knobs.get_int("REPRO_KDE_CHUNK", default=77) == 64
+
+
+@pytest.mark.parametrize("raw", ["abc", "0", "-3", "1.5"])
+def test_get_int_is_loud_on_malformed_values(monkeypatch, raw):
+    monkeypatch.setenv("REPRO_KDE_CHUNK", raw)
+    with pytest.raises(ValueError, match="REPRO_KDE_CHUNK"):
+        knobs.get_int("REPRO_KDE_CHUNK")
+
+
+def test_get_bool_semantics(monkeypatch):
+    monkeypatch.delenv("REPRO_OBS", raising=False)
+    assert knobs.get_bool("REPRO_OBS") is False
+    monkeypatch.setenv("REPRO_OBS", "")
+    assert knobs.get_bool("REPRO_OBS") is False
+    monkeypatch.setenv("REPRO_OBS", "0")
+    assert knobs.get_bool("REPRO_OBS") is False
+    monkeypatch.setenv("REPRO_OBS", "1")
+    assert knobs.get_bool("REPRO_OBS") is True
+
+
+def test_get_str_and_path(monkeypatch):
+    monkeypatch.delenv("REPRO_TUNING_CACHE", raising=False)
+    assert knobs.get_str("REPRO_TUNING_CACHE") == ""
+    assert knobs.get_str("REPRO_TUNING_CACHE", default="/x") == "/x"
+    monkeypatch.setenv("REPRO_TUNING_CACHE", "/tmp/tiles.json")
+    assert knobs.get_str("REPRO_TUNING_CACHE") == "/tmp/tiles.json"
+
+
+def test_unregistered_knob_raises():
+    with pytest.raises(KeyError, match="unregistered"):
+        knobs.get_int("REPRO_NOT_A_KNOB")
+
+
+def test_type_mismatch_raises():
+    with pytest.raises(TypeError, match="bool, not int"):
+        knobs.get_int("REPRO_OBS")
+
+
+def test_register_collision_and_idempotence():
+    k = knobs.KNOBS["REPRO_OBS"]
+    # identical re-registration is a no-op
+    assert knobs.register(k.name, k.type, k.default, k.doc) == k
+    # different metadata for the same name is the silent fork the registry
+    # exists to prevent
+    with pytest.raises(ValueError, match="already registered"):
+        knobs.register("REPRO_OBS", "bool", True, "different default")
+    assert knobs.KNOBS["REPRO_OBS"] == k
+
+
+def test_knob_validation():
+    with pytest.raises(ValueError, match="must start with REPRO_"):
+        knobs.Knob("OTHER_NAME", "int", 1, "doc")
+    with pytest.raises(ValueError, match="unknown type"):
+        knobs.Knob("REPRO_X", "float", 1, "doc")
+    with pytest.raises(ValueError, match="needs a docstring"):
+        knobs.Knob("REPRO_X", "int", 1, "  ")
+
+
+# --- guarded-by annotations vs runtime: 8-thread stress ----------------------
+
+def test_store_locking_survives_8_threads(rng):
+    """The lock-discipline annotations on TelemetryStore claim that ingest,
+    tracking, snapshotting, and admission traffic can race safely.  Hold
+    them to it: 8 threads (3 ingest, 1 tracker, 2 snapshot, 2 query
+    clients) hammer one store; afterwards the counters must balance
+    exactly — a torn track_joint backfill or unlocked listener append
+    would show up as lost rows, lost notifications, or an exception."""
+    store = TelemetryStore(capacity=256, seed=0)
+    store.track_joint(("a", "b"))
+    seed_rows = 2_000
+    a0 = rng.normal(0, 1, seed_rows).astype(np.float32)
+    store.add_batch({"a": a0,
+                     "b": (0.5 * a0 + rng.normal(0, 1, seed_rows)
+                           ).astype(np.float32)})
+
+    notifications = []
+    store.subscribe(lambda versions: notifications.append(dict(versions)))
+
+    n_ingest, n_batches, rows = 3, 12, 200
+    barrier = threading.Barrier(8)
+    errors = []
+    answers = {}
+
+    def ingest(tid):
+        g = np.random.default_rng(1000 + tid)
+        barrier.wait()
+        for _ in range(n_batches):
+            a = g.normal(0, 1, rows).astype(np.float32)
+            b = (0.5 * a + g.normal(0, 1, rows)).astype(np.float32)
+            store.add_batch({"a": a, "b": b})
+
+    def tracker():
+        barrier.wait()
+        for _ in range(n_batches):
+            store.track_joint(("a", "b"))     # idempotent re-track
+            store.track_categorical("code")   # registered once, raced often
+            store.shared_engine()             # get-or-create under the lock
+
+    def snapshot():
+        barrier.wait()
+        for _ in range(n_batches):
+            st = store.stats()
+            assert "admission" in st
+            store.metrics.snapshot()
+
+    def client(tid, sess):
+        barrier.wait()
+        # bounds unique per (client, i) so no two tickets can coalesce
+        tickets = [sess.submit(AqpQuery(
+            "count", (Range("a", -1.0, 0.2 * (3 * tid + i)),)))
+            for i in range(3)]
+        answers[tid] = [t.result(timeout=60).estimate for t in tickets]
+
+    def guard(fn, *args):
+        def run_guarded():
+            try:
+                fn(*args)
+            except BaseException as e:   # noqa: BLE001 — surfaced below
+                errors.append(e)
+                try:
+                    barrier.abort()
+                except Exception:
+                    pass
+        return run_guarded
+
+    with store.session(watermark=2, max_delay=0.005) as sess:
+        threads = ([threading.Thread(target=guard(ingest, t))
+                    for t in range(n_ingest)]
+                   + [threading.Thread(target=guard(tracker))]
+                   + [threading.Thread(target=guard(snapshot))
+                      for _ in range(2)]
+                   + [threading.Thread(target=guard(client, t, sess))
+                      for t in range(2)])
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        sess_stats = sess.stats()
+
+    assert not errors, errors
+    # every ingested row is accounted for: no torn batches, no lost updates
+    want_rows = seed_rows + n_ingest * n_batches * rows
+    assert store.metrics.sum_counter("aqp.ingest.rows", column="a") == want_rows
+    assert store.metrics.sum_counter("aqp.ingest.batches") == \
+        1 + n_ingest * n_batches
+    assert store.columns["a"].n_seen == want_rows
+    # the locked listener path lost no notifications (subscribed after the
+    # seed batch, so exactly one per threaded add_batch)
+    assert len(notifications) == n_ingest * n_batches
+    # both clients resolved every future with a finite estimate
+    assert sorted(answers) == [0, 1]
+    assert all(np.isfinite(est) for ests in answers.values() for est in ests)
+    assert sess_stats["submitted"] == 6
+    assert sess_stats["executed"] >= 6   # >=: invalidation may re-execute
+    # raced get-or-create converged on exactly one shared engine
+    assert len(store._engines) == 1

@@ -26,6 +26,12 @@ def _fresh_tuner(monkeypatch):
 
 def test_resolve_tile_call_time_env(monkeypatch):
     """Env changes after import move the resolved tile (no import freeze)."""
+    from repro import knobs
+
+    monkeypatch.setitem(
+        knobs.KNOBS, "REPRO_AT_TEST_TILE",
+        knobs.Knob("REPRO_AT_TEST_TILE", "int", 128,
+                   "scratch knob for this test"))
     monkeypatch.delenv("REPRO_AT_TEST_TILE", raising=False)
     assert resolve_tile("REPRO_AT_TEST_TILE", 128) == 128
     monkeypatch.setenv("REPRO_AT_TEST_TILE", "32")

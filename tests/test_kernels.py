@@ -241,8 +241,12 @@ def test_qmc_box_reduce_empty():
 
 def test_env_tile_override(monkeypatch):
     """TILE/Q_TILE defaults resolve through env vars (real-TPU tuning)."""
+    from repro import knobs
     from repro.kernels.tuning import env_int
 
+    monkeypatch.setitem(
+        knobs.KNOBS, "REPRO_TEST_TILE",
+        knobs.Knob("REPRO_TEST_TILE", "int", 128, "scratch knob for this test"))
     monkeypatch.setenv("REPRO_TEST_TILE", "512")
     assert env_int("REPRO_TEST_TILE", 128) == 512
     monkeypatch.delenv("REPRO_TEST_TILE")
@@ -253,6 +257,8 @@ def test_env_tile_override(monkeypatch):
     monkeypatch.setenv("REPRO_TEST_TILE", "-4")
     with pytest.raises(ValueError, match="positive integer"):
         env_int("REPRO_TEST_TILE", 128)
+    with pytest.raises(KeyError, match="unregistered"):
+        env_int("REPRO_NOT_REGISTERED_TILE", 128)
 
 
 def test_aqp_batch_sums_empty_sample():
